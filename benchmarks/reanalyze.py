@@ -1,0 +1,36 @@
+"""Re-derive hlo_analysis for every artifact from its saved .hlo.gz.
+
+Lets the analyzer evolve (e.g. new HBM-traffic model) without recompiling
+66 dry-run cells:
+
+    PYTHONPATH=src python -m benchmarks.reanalyze
+"""
+from __future__ import annotations
+
+import gzip
+import json
+from pathlib import Path
+
+from repro.launch import hlo_analysis
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def main():
+    n = 0
+    for hp in sorted(ARTIFACTS.glob("*.hlo.gz")):
+        jp = hp.with_name(hp.name.replace(".hlo.gz", ".json"))
+        if not jp.exists():
+            continue
+        rec = json.loads(jp.read_text())
+        with gzip.open(hp, "rt") as f:
+            hlo = f.read()
+        rec["hlo_analysis"] = hlo_analysis.analyze(hlo)
+        jp.write_text(json.dumps(rec, indent=1))
+        n += 1
+        print(f"reanalyzed {jp.name}")
+    print(f"{n} artifacts updated")
+
+
+if __name__ == "__main__":
+    main()

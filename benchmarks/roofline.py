@@ -1,0 +1,163 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Per (arch × shape × mesh) cell, derive the three roofline terms from the
+compiled artifact recorded by launch/dryrun.py:
+
+    compute    = HLO_FLOPs_per_dev / peak_FLOPs      (197e12 bf16/chip)
+    memory     = HLO_bytes_per_dev / HBM_bw          (819e9 B/s/chip)
+    collective = collective_bytes_per_dev / link_bw  (50e9 B/s/link)
+
+All three in seconds; the max is the bottleneck.  MODEL_FLOPS = 6·N·D for
+training (2·N·D forward-only for prefill/decode), N = active params —
+the ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/redundancy waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e-class target)
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def model_flops(rec: Dict) -> float:
+    """Useful FLOPs for the whole cell (all chips)."""
+    n = rec["active_param_count"]
+    kind = rec["kind"]
+    # tokens processed by one step
+    import re
+    m = re.match(r".*", rec["shape"])
+    shape_tokens = {
+        "train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+        "decode_32k": 128, "long_500k": 1,
+    }[rec["shape"]]
+    per_tok = 6 * n if kind == "train" else 2 * n
+    return per_tok * shape_tokens
+
+
+def analyze_record(rec: Dict) -> Dict:
+    ha = rec["hlo_analysis"]
+    chips = rec["n_devices"]
+    flops_dev = ha["flops"]
+    # hbm_bytes: traffic at materialization boundaries (dot/conv/fusion/
+    # collective), i.e. assuming TPU-grade elementwise fusion.  The raw
+    # bytes_accessed of the barely-fused CPU HLO overestimates wildly.
+    bytes_dev = ha.get("hbm_bytes", ha["bytes_accessed"])
+    coll_dev = ha["total_collective_bytes"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+
+    mf = model_flops(rec)
+    useful_ratio = mf / max(flops_dev * chips, 1.0)
+    # roofline fraction: useful model FLOPs per chip over what the chip could
+    # do in the bound time (how close the *useful* work runs to peak)
+    frac = (mf / chips / PEAK_FLOPS) / t_bound if t_bound > 0 else 0.0
+
+    return {
+        "cell": rec["cell"], "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": rec["mesh"], "kind": rec["kind"], "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "t_bound_s": t_bound,
+        "model_flops": mf, "hlo_flops_dev": flops_dev,
+        "useful_ratio": useful_ratio, "roofline_fraction": frac,
+        "coll_counts": ha["collective_counts"],
+    }
+
+
+def what_would_help(r: Dict) -> str:
+    b = r["bottleneck"]
+    if b == "compute":
+        if r["useful_ratio"] < 0.25:
+            return ("compute-bound but mostly non-useful FLOPs — relax remat "
+                    "policy / remove redundant recompute")
+        return "compute-bound near useful peak — int8 (2× MXU) or more chips"
+    if b == "memory":
+        return ("memory-bound — fuse epilogues, cast params/activations to "
+                "bf16, larger per-op tiles (fewer HBM round-trips)")
+    return ("collective-bound — reshard to cut all-gather volume, overlap "
+            "collectives with compute, bf16/int8 gradient compression")
+
+
+def load_all(mesh: Optional[str] = None) -> List[Dict]:
+    out = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if "hlo_analysis" not in rec:
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        out.append(analyze_record(rec))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.2f}us"
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    lines = [
+        "| cell | chips | compute | memory | collective | bound | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']}×{r['shape']}@{r['mesh']} | {r['chips']} "
+            f"| {fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} "
+            f"| {fmt_s(r['t_collective_s'])} | **{r['bottleneck']}** "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+
+    rows = load_all(args.mesh)
+    if not rows:
+        print("no artifacts found — run: python -m repro.launch.dryrun --all")
+        return
+
+    if args.csv:
+        print("cell,chips,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+              "useful_ratio,roofline_fraction")
+        for r in rows:
+            print(f"{r['cell']},{r['chips']},{r['t_compute_s']:.6g},"
+                  f"{r['t_memory_s']:.6g},{r['t_collective_s']:.6g},"
+                  f"{r['bottleneck']},{r['useful_ratio']:.4f},"
+                  f"{r['roofline_fraction']:.4f}")
+    else:
+        for r in rows:
+            print(f"{r['cell']:<55} {r['bottleneck']:<10} "
+                  f"c={fmt_s(r['t_compute_s'])} m={fmt_s(r['t_memory_s'])} "
+                  f"x={fmt_s(r['t_collective_s'])} useful={r['useful_ratio']:.3f} "
+                  f"frac={r['roofline_fraction']:.3f}")
+            print(f"{'':<55} ↳ {what_would_help(r)}")
+
+    if args.md:
+        Path(args.md).write_text(to_markdown(rows))
+        print(f"\nwrote {args.md}")
+
+
+if __name__ == "__main__":
+    main()

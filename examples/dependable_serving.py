@@ -1,0 +1,95 @@
+"""Dependable serving: the paper's execution flow, with live fault drills.
+
+Payload computer → RTG4 → HPDP becomes: client → Engine → jitted decode
+step.  Three drills prove the dependability story end to end:
+
+  1. serve a batch of requests (continuous batching),
+  2. SEU strikes the decode state mid-flight → snapshot rollback; final
+     tokens are IDENTICAL to a fault-free run,
+  3. SEU strikes the *weights* → TMR voting masks it (2-of-3 majority).
+
+    PYTHONPATH=src python examples/dependable_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import fault_injection as fi
+from repro.core import redundancy
+from repro.models import api as model_api
+from repro.models.config import reduced
+from repro.runtime.serving import Engine, Request
+
+cfg = reduced(registry.get("qwen3-0.6b"))
+params = model_api.init_params(cfg, jax.random.key(0))
+rng = np.random.default_rng(1)
+prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(3, 9))).tolist()
+           for _ in range(6)]
+
+print("=" * 70)
+print(f"1. Continuous batching: 6 requests through capacity-3 engine "
+      f"({cfg.name})")
+print("=" * 70)
+
+
+def serve(fault=False):
+    eng = Engine(cfg, params, capacity=3, max_len=96, prefill_pad=8,
+                 snapshot_every=2)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    if fault:
+        for _ in range(3):
+            eng.step()
+        print("   [drill] SEU flips the sampled-token buffer …")
+        eng.tokens = eng.tokens.at[0].set(int(eng.tokens[0]) ^ 0x40)
+        lost = eng.restore_snapshot()
+        print(f"   [drill] rolled back {lost} decode steps (bound = "
+              f"snapshot_every = 2)")
+    stats = eng.run()
+    return reqs, stats
+
+
+t0 = time.time()
+clean_reqs, stats = serve(fault=False)
+print(f"   {stats.tokens_out} tokens, {stats.steps} steps, "
+      f"{stats.tokens_out/(time.time()-t0):.1f} tok/s")
+for r in clean_reqs[:3]:
+    print(f"   req{r.uid}: {r.output}")
+
+print()
+print("=" * 70)
+print("2. SEU in decode state → snapshot rollback → identical output")
+print("=" * 70)
+faulty_reqs, stats = serve(fault=True)
+same = all(a.output == b.output for a, b in zip(clean_reqs, faulty_reqs))
+print(f"   replays={stats.replays}; outputs identical to fault-free run: {same}")
+assert same
+
+print()
+print("=" * 70)
+print("3. SEU in weights → TMR majority vote masks it")
+print("=" * 70)
+tok = jnp.asarray([1, 2, 3], jnp.int32)
+
+
+def logits_fn(p):
+    out = model_api.forward(cfg, p, tok[None, :])
+    return out.logits
+
+
+clean = logits_fn(params)
+corrupt = fi.inject_into_pytree(params, jax.random.key(7), n_flips=1)
+# three replicas, one with SEU-corrupted weights; majority vote masks it
+r1 = logits_fn(params)
+r2 = logits_fn(corrupt)
+r3 = logits_fn(params)
+masked = redundancy.vote([r1, r2, r3])
+ok = bool(jnp.array_equal(masked, clean))
+print(f"   single corrupted replica out-voted, output bit-exact: {ok}")
+assert ok
+print("\ndependable_serving OK")

@@ -1,0 +1,20 @@
+"""LLaVA-NeXT 34B backbone — anyres patch frontend is a STUB (input_specs
+provides precomputed patch embeddings). [hf:llava-hf family; unverified]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="transformer",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    head_dim=128,
+    input_mode="embeddings",
+    fsdp_params=True,
+    param_dtype="bfloat16",
+    optimizer="adamw",
+    remat="full",
+)

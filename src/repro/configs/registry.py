@@ -1,0 +1,45 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.config import ArchConfig, SHAPES, ShapeConfig, reduced, valid_cells
+
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.smollm_135m import CONFIG as _smollm
+from repro.configs.qwen3_0_6b import CONFIG as _qwen3
+from repro.configs.command_r_plus_104b import CONFIG as _cmdr
+from repro.configs.llama3_405b import CONFIG as _llama3
+from repro.configs.rwkv6_1_6b import CONFIG as _rwkv6
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.llava_next_34b import CONFIG as _llava
+from repro.configs.recurrentgemma_2b import CONFIG as _rgemma
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c for c in [
+        _kimi, _mixtral, _smollm, _qwen3, _cmdr, _llama3, _rwkv6,
+        _musicgen, _llava, _rgemma,
+    ]
+}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def all_cells():
+    """Every runnable (arch, shape) pair — 33 cells (7 long_500k skips are
+    documented in DESIGN.md §Arch-applicability)."""
+    out = []
+    for name, cfg in ARCHS.items():
+        for shape in valid_cells(cfg):
+            out.append((cfg, shape))
+    return out
+
+
+def names():
+    return sorted(ARCHS)

@@ -1,0 +1,126 @@
+"""Algorithm-Based Fault Tolerance for integer matmul/conv (exact checksums).
+
+The paper achieves dependability *physically* (radiation-hardened silicon).
+On a commodity TPU fleet the equivalent threat — SEU bit-flips causing silent
+data corruption — is answered *algorithmically*: Huang–Abraham checksums.
+
+The key observation this module exploits: because the paper's technique makes
+the hot path **integer** (int8 × int8 → int32), checksums are **exact in
+modular arithmetic**.  XLA integer ops wrap (two's complement), so every sum
+below is computed mod 2^32, and the identity
+
+    rowsum_N( X·W )  ==  X · (W · 1_N)        (mod 2^32)
+
+holds bit-for-bit.  A flipped bit b < 32 in any accumulator or operand changes
+the checksum by ±2^b ≠ 0 (mod 2^32), so single-fault detection has **zero
+false positives and zero false negatives** — impossible with float ABFT,
+where roundoff forces tolerance windows.  This is a genuine dependability
+*improvement* unlocked by the paper's integer-only design.
+
+Detection granularity is per output row; recovery recomputes the affected
+block (faults are rare, so `lax.cond` makes the recompute cost ~0 amortized).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AbftResult(NamedTuple):
+    acc: jax.Array        # (M, N) int32 accumulator (possibly corrected)
+    ok: jax.Array         # () bool — no fault detected (after correction)
+    faults_detected: jax.Array  # () int32 — rows flagged in the first pass
+
+
+def _dot_i32(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def checksum_vector(w_q: jax.Array) -> jax.Array:
+    """W · 1_N — the column-sum check vector, precomputable per layer. (K,) i32."""
+    return jnp.sum(w_q.astype(jnp.int32), axis=1)
+
+
+def verify_rows(x_q: jax.Array, acc_dot: jax.Array, w_check: jax.Array) -> jax.Array:
+    """Per-row fault mask for acc_dot = X·W. True == row is clean (mod 2^32)."""
+    got = jnp.sum(acc_dot, axis=1)                       # rowsum, wraps mod 2^32
+    want = _dot_i32(x_q, w_check[:, None])[:, 0]         # X · (W·1)
+    return got == want
+
+
+def abft_qmatmul(
+    x_q: jax.Array,          # (M, K) int8
+    x_zp: jax.Array,         # scalar i32
+    w_q: jax.Array,          # (K, N) int8
+    bias: jax.Array,         # (N,)  i32
+    *,
+    inject=None,             # optional fn(acc)->acc used by tests to corrupt
+) -> AbftResult:
+    """Checksummed quantized matmul accumulator with detect + recompute-recover.
+
+    Overhead: one (M,K)×(K,1) matvec + one row reduction ≈ 1/N of the matmul
+    FLOPs (0.8 % for N=128).
+    """
+    w_check = checksum_vector(w_q)
+    acc_dot = _dot_i32(x_q, w_q)
+    if inject is not None:
+        acc_dot = inject(acc_dot)
+
+    row_ok = verify_rows(x_q, acc_dot, w_check)
+    faults = jnp.sum(~row_ok).astype(jnp.int32)
+
+    def recover(acc):
+        # Recompute the full product (fault rate is tiny; the recompute branch
+        # is taken ~never, so its cost does not affect steady-state throughput).
+        fresh = _dot_i32(x_q, w_q)
+        return jnp.where(row_ok[:, None], acc, fresh)
+
+    acc_dot = jax.lax.cond(faults > 0, recover, lambda a: a, acc_dot)
+    ok = jnp.all(verify_rows(x_q, acc_dot, w_check))
+
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    acc = acc_dot - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
+    return AbftResult(acc, ok, faults)
+
+
+# ---------------------------------------------------------------------------
+# Conv variant: checksum over output channels
+# ---------------------------------------------------------------------------
+
+
+def conv_checksum_weight(w_q: jax.Array) -> jax.Array:
+    """(KH, KW, Cin, Cout) → (KH, KW, Cin, 1): the Cout-summed check filter."""
+    return jnp.sum(w_q.astype(jnp.int32), axis=3, keepdims=True)
+
+
+def abft_qconv2d(
+    x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
+    stride=(1, 1), padding="SAME", *, inject=None,
+) -> AbftResult:
+    """Checksummed quantized conv accumulator (detection per output pixel)."""
+    x = x_q.astype(jnp.int32) - x_zp.astype(jnp.int32)
+
+    def conv(w):
+        return jax.lax.conv_general_dilated(
+            x, w, stride, padding, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32)
+
+    acc_dot = conv(w_q.astype(jnp.int32))
+    if inject is not None:
+        acc_dot = inject(acc_dot)
+
+    want = conv(conv_checksum_weight(w_q))[..., 0]       # (N, OH, OW)
+    got = jnp.sum(acc_dot, axis=3)
+    pix_ok = got == want
+    faults = jnp.sum(~pix_ok).astype(jnp.int32)
+
+    def recover(acc):
+        fresh = conv(w_q.astype(jnp.int32))
+        return jnp.where(pix_ok[..., None], acc, fresh)
+
+    acc_dot = jax.lax.cond(faults > 0, recover, lambda a: a, acc_dot)
+    ok = jnp.all(jnp.sum(acc_dot, axis=3) == want)
+    return AbftResult(acc_dot + bias[None, None, None, :], ok, faults)

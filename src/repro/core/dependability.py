@@ -1,0 +1,91 @@
+"""Dependability policy layer — composes ABFT / NMR / retry around the
+quantized compute primitives.
+
+This is the framework-level rendition of the paper's thesis: *dependable AI
+execution is a property of the execution system, not of the model*.  Models
+ask for a ``qlinear``; the policy decides how it is executed:
+
+  NONE  — plain fused kernel (maximum throughput; rad-hard hardware assumed,
+          as on the HPDP itself).
+  ABFT  — exact integer checksum verify + recompute-recover (default for
+          fleet deployment; ~1/N FLOP overhead).
+  TMR   — triple execution + bitwise majority vote (3× cost; for the few
+          layers whose corruption is mission-fatal, e.g. the final
+          classification head of the ship detector).
+
+Policies are data (config enums), so a deployment can mix them per layer —
+matching how the paper reserves the rad-hard HPDP for the convolution hot
+path while the RTG4 handles orchestration.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abft as abft_mod
+from repro.core import redundancy
+from repro.core.quant import requantize
+
+
+class Policy(str, enum.Enum):
+    NONE = "none"
+    ABFT = "abft"
+    TMR = "tmr"
+
+
+class DependabilityStats:
+    """Host-side counters exported by dependable ops (pytree of scalars)."""
+
+    @staticmethod
+    def zero():
+        return {"faults_detected": jnp.zeros((), jnp.int32),
+                "checks_run": jnp.zeros((), jnp.int32)}
+
+
+def dependable_qmatmul(
+    policy: Policy,
+    x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
+    scale: jax.Array, out_zp: jax.Array,
+    *, inject=None, stats: Optional[dict] = None,
+):
+    """Quantized matmul + requant executed under a dependability policy.
+
+    Returns (y_q int8, stats dict).
+    """
+    if stats is None:
+        stats = DependabilityStats.zero()
+
+    if policy == Policy.ABFT:
+        res = abft_mod.abft_qmatmul(x_q, x_zp, w_q, bias, inject=inject)
+        y = requantize(res.acc, scale, out_zp)
+        stats = {
+            "faults_detected": stats["faults_detected"] + res.faults_detected,
+            "checks_run": stats["checks_run"] + 1,
+        }
+        return y, stats
+
+    if policy == Policy.TMR:
+        def run():
+            acc = jax.lax.dot_general(
+                x_q, w_q, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+            acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
+            return requantize(acc, scale, out_zp)
+
+        injectors = (inject, None, None) if inject is not None else (None, None, None)
+        y = redundancy.tmr_apply(lambda: run(), injectors=injectors)
+        stats = {**stats, "checks_run": stats["checks_run"] + 1}
+        return y, stats
+
+    # Policy.NONE — plain path
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
+    if inject is not None:
+        acc = inject(acc)
+    return requantize(acc, scale, out_zp), stats

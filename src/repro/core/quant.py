@@ -1,0 +1,280 @@
+"""Integer-arithmetic-only quantization (Jacob et al., arXiv:1712.05877).
+
+This module is the numerical core of the paper's technique: the HPDP executes
+convolution with int8 weights/activations, accumulates in int32, and
+*re-quantizes* the accumulator back to int8 so the next layer can consume it —
+all driven purely by runtime parameters (scales, zero-points, bias).
+
+Two requantization semantics are provided:
+
+1. ``requantize`` (JAX, fp32 scaling) — the TPU-native path used by every
+   kernel and model in this framework.  TPU Pallas has no int64, so the
+   gemmlowp fixed-point pipeline (SRDHM + rounding shift) cannot run on the
+   MXU; instead the int32 accumulator is scaled in fp32 and rounded
+   half-to-even.  This is the XNNPACK/TFLite-GPU convention and is
+   bit-identical to gemmlowp except on exact 0.5-ULP ties.
+
+2. ``requantize_gemmlowp_np`` (NumPy, integer-exact) — the HPDP-faithful
+   oracle implementing gemmlowp's SaturatingRoundingDoublingHighMul +
+   RoundingDivideByPOT in int64.  Tests measure agreement between the two
+   (`tests/test_quant.py`).
+
+Conventions (TFLite-compatible):
+  * activations: asymmetric int8 in [-128, 127], per-tensor (scale, zero_point)
+  * weights:     symmetric  int8 in [-127, 127], per-channel scale, zp == 0
+  * bias:        int32 with scale = s_in * s_w, zp == 0
+  * accumulator: int32
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN, INT8_MAX = -128, 127
+WEIGHT_QMIN, WEIGHT_QMAX = -127, 127  # symmetric, avoids -128 asymmetry
+
+
+# ---------------------------------------------------------------------------
+# Quantized tensor container
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QTensor:
+    """An int8 tensor with its affine quantization parameters.
+
+    ``scale`` is a scalar (per-tensor) or a 1-D vector along ``axis``
+    (per-channel).  ``zero_point`` is int32, always per-tensor (0 for
+    weights).
+    """
+
+    q: jax.Array                       # int8 payload
+    scale: jax.Array                   # f32 scalar or per-channel vector
+    zero_point: jax.Array              # i32 scalar
+    axis: Optional[int] = dataclasses.field(default=None, metadata=dict(static=True))
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequantize(self) -> jax.Array:
+        scale = self.scale
+        if self.axis is not None:
+            bshape = [1] * self.q.ndim
+            bshape[self.axis] = -1
+            scale = scale.reshape(bshape)
+        return (self.q.astype(jnp.float32) - self.zero_point.astype(jnp.float32)) * scale
+
+
+# ---------------------------------------------------------------------------
+# Quantization parameter selection (calibration)
+# ---------------------------------------------------------------------------
+
+
+def affine_qparams(
+    min_val: jax.Array, max_val: jax.Array, qmin: int = INT8_MIN, qmax: int = INT8_MAX
+) -> Tuple[jax.Array, jax.Array]:
+    """Asymmetric (scale, zero_point) covering [min_val, max_val].
+
+    The range is nudged to always include 0.0 (required so that zero padding
+    is exactly representable — Jacob et al. §2.1).
+    """
+    min_val = jnp.minimum(min_val, 0.0)
+    max_val = jnp.maximum(max_val, 0.0)
+    scale = (max_val - min_val) / (qmax - qmin)
+    scale = jnp.maximum(scale, 1e-9)
+    zp = qmin - min_val / scale
+    zero_point = jnp.clip(jnp.round(zp), qmin, qmax).astype(jnp.int32)
+    return scale.astype(jnp.float32), zero_point
+
+
+def symmetric_qparams(
+    abs_max: jax.Array, qmax: int = WEIGHT_QMAX
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric (scale, zero_point=0) for weights."""
+    scale = jnp.maximum(abs_max, 1e-9) / qmax
+    return scale.astype(jnp.float32), jnp.zeros((), jnp.int32)
+
+
+def quantize(x: jax.Array, scale: jax.Array, zero_point: jax.Array,
+             qmin: int = INT8_MIN, qmax: int = INT8_MAX) -> jax.Array:
+    """Float → int8 with round-half-to-even (matches XLA/TPU rounding)."""
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, qmin, qmax).astype(jnp.int8)
+
+
+def quantize_activation(x: jax.Array) -> QTensor:
+    """Per-tensor asymmetric activation quantization from observed min/max."""
+    scale, zp = affine_qparams(jnp.min(x), jnp.max(x))
+    return QTensor(quantize(x, scale, zp), scale, zp)
+
+
+def quantize_weight(w: jax.Array, axis: int = -1) -> QTensor:
+    """Per-channel symmetric weight quantization along ``axis``."""
+    axis = axis % w.ndim
+    reduce_dims = tuple(d for d in range(w.ndim) if d != axis)
+    abs_max = jnp.max(jnp.abs(w), axis=reduce_dims)
+    scale, zp = symmetric_qparams(abs_max)
+    bshape = [1] * w.ndim
+    bshape[axis] = -1
+    q = jnp.clip(jnp.round(w / scale.reshape(bshape)), WEIGHT_QMIN, WEIGHT_QMAX)
+    return QTensor(q.astype(jnp.int8), scale, zp, axis=axis)
+
+
+def quantize_bias(b: jax.Array, input_scale: jax.Array, weight_scale: jax.Array) -> jax.Array:
+    """Bias is int32 at scale s_in * s_w (per-channel if the weight is)."""
+    scale = input_scale * weight_scale
+    return jnp.round(b / scale).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Requantization — fp32 path (TPU-native, used in kernels and jnp refs)
+# ---------------------------------------------------------------------------
+
+
+def requant_scale(input_scale, weight_scale, output_scale) -> jax.Array:
+    """The real multiplier M = s_in * s_w / s_out  (per-channel if s_w is)."""
+    return (input_scale * weight_scale / output_scale).astype(jnp.float32)
+
+
+def requantize(acc: jax.Array, scale: jax.Array, out_zero_point: jax.Array,
+               qmin: int = INT8_MIN, qmax: int = INT8_MAX) -> jax.Array:
+    """int32 accumulator → int8 output, fp32 scaling, round-half-to-even.
+
+    ``scale`` broadcasts against the trailing (channel) dimension when
+    per-channel.
+    """
+    y = acc.astype(jnp.float32) * scale
+    y = jnp.round(y) + out_zero_point.astype(jnp.float32)
+    return jnp.clip(y, qmin, qmax).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Requantization — gemmlowp integer-exact path (HPDP-faithful NumPy oracle)
+# ---------------------------------------------------------------------------
+
+
+def quantize_multiplier_np(real_multiplier: float) -> Tuple[int, int]:
+    """real ≈ qm * 2**(shift-31) with qm an int32 in [2^30, 2^31).
+
+    TFLite's ``QuantizeMultiplier``.  Returns (quantized_multiplier, shift).
+    """
+    if real_multiplier == 0.0:
+        return 0, 0
+    m, exponent = math.frexp(real_multiplier)  # real = m * 2**exponent, m in [0.5, 1)
+    qm = int(round(m * (1 << 31)))
+    if qm == (1 << 31):
+        qm //= 2
+        exponent += 1
+    assert qm <= (1 << 31)
+    return qm, exponent
+
+
+def srdhm_np(a: np.ndarray, b: int) -> np.ndarray:
+    """gemmlowp SaturatingRoundingDoublingHighMul (vectorized int64)."""
+    a = a.astype(np.int64)
+    ab = a * np.int64(b)
+    nudge = np.where(ab >= 0, np.int64(1 << 30), np.int64(1 - (1 << 30)))
+    result = (ab + nudge) >> np.int64(31)
+    # saturate the single overflow case a == b == INT32_MIN
+    overflow = (a == np.int64(-(1 << 31))) & (np.int64(b) == np.int64(-(1 << 31)))
+    return np.where(overflow, np.int64((1 << 31) - 1), result).astype(np.int64)
+
+
+def rounding_divide_by_pot_np(x: np.ndarray, exponent: int) -> np.ndarray:
+    """gemmlowp RoundingDivideByPOT: round-half-away division by 2**exponent."""
+    if exponent == 0:
+        return x
+    mask = np.int64((1 << exponent) - 1)
+    remainder = x & mask
+    threshold = (mask >> 1) + np.where(x < 0, np.int64(1), np.int64(0))
+    return (x >> np.int64(exponent)) + np.where(remainder > threshold, np.int64(1), np.int64(0))
+
+
+def requantize_gemmlowp_np(
+    acc: np.ndarray, real_multiplier: np.ndarray, out_zero_point: int,
+    qmin: int = INT8_MIN, qmax: int = INT8_MAX,
+) -> np.ndarray:
+    """Integer-exact requantization — the HPDP/gemmlowp reference.
+
+    ``real_multiplier`` may be a scalar or a per-channel vector broadcast
+    against acc's last dim.
+    """
+    acc = np.asarray(acc, dtype=np.int64)
+    multipliers = np.broadcast_to(np.atleast_1d(real_multiplier), (acc.shape[-1],))
+    out = np.empty_like(acc)
+    for c in range(acc.shape[-1]):
+        qm, shift = quantize_multiplier_np(float(multipliers[c]))
+        left_shift = max(shift, 0)
+        right_shift = max(-shift, 0)
+        x = acc[..., c] << np.int64(left_shift)
+        x = srdhm_np(x, qm)
+        x = rounding_divide_by_pot_np(x, right_shift)
+        out[..., c] = x
+    out = out + np.int64(out_zero_point)
+    return np.clip(out, qmin, qmax).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization (QAT) with straight-through estimator
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fake_quant(x, scale, zero_point, qmin: int = INT8_MIN, qmax: int = INT8_MAX):
+    q = jnp.clip(jnp.round(x / scale) + zero_point, qmin, qmax)
+    return (q - zero_point) * scale
+
+
+def _fake_quant_fwd(x, scale, zero_point, qmin, qmax):
+    q = jnp.round(x / scale) + zero_point
+    mask = (q >= qmin) & (q <= qmax)
+    y = (jnp.clip(q, qmin, qmax) - zero_point) * scale
+    return y, mask
+
+
+def _fake_quant_bwd(qmin, qmax, mask, g):
+    # straight-through inside the clip range, zero outside
+    return (jnp.where(mask, g, 0.0), None, None)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Calibration observer (min/max running stats)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MinMaxObserver:
+    """EMA min/max observer for post-training calibration."""
+
+    min_val: jax.Array
+    max_val: jax.Array
+    momentum: float = dataclasses.field(default=0.99, metadata=dict(static=True))
+
+    @staticmethod
+    def init() -> "MinMaxObserver":
+        return MinMaxObserver(jnp.zeros(()), jnp.zeros(()))
+
+    def update(self, x: jax.Array) -> "MinMaxObserver":
+        m = self.momentum
+        new_min = m * self.min_val + (1 - m) * jnp.min(x)
+        new_max = m * self.max_val + (1 - m) * jnp.max(x)
+        return MinMaxObserver(new_min, new_max, self.momentum)
+
+    def qparams(self):
+        return affine_qparams(self.min_val, self.max_val)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the quantized conv2d + fused requantization kernel.
+
+This plays the role of the paper's PyTorch reference implementation (Fig. 4):
+a functionally equivalent convolution whose output feature maps the
+kernel-under-simulation is compared against, inside a unit-test framework.
+
+Layout: NHWC activations, HWIO weights (TPU-native).  Semantics per Jacob et
+al.: int8 activations with zero-point, symmetric per-output-channel int8
+weights, int32 bias at scale s_in·s_w, int8 output after requantization.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import requantize
+
+
+def qconv2d_acc_ref(
+    x_q: jax.Array,          # (N, H, W, Cin) int8
+    x_zp: jax.Array,         # scalar int32
+    w_q: jax.Array,          # (KH, KW, Cin, Cout) int8
+    bias: jax.Array,         # (Cout,) int32
+    stride: Tuple[int, int] = (1, 1),
+    padding: str | Sequence[Tuple[int, int]] = "SAME",
+) -> jax.Array:
+    """int32 accumulator. Zero-point-corrected conv in integer arithmetic."""
+    x = x_q.astype(jnp.int32) - x_zp.astype(jnp.int32)
+    w = w_q.astype(jnp.int32)
+    acc = jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    return acc + bias[None, None, None, :].astype(jnp.int32)
+
+
+def qconv2d_ref(
+    x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
+    scale: jax.Array, out_zp: jax.Array,
+    stride: Tuple[int, int] = (1, 1),
+    padding: str | Sequence[Tuple[int, int]] = "SAME",
+) -> jax.Array:
+    """Full quantized conv + requant. Returns int8 NHWC."""
+    acc = qconv2d_acc_ref(x_q, x_zp, w_q, bias, stride, padding)
+    return requantize(acc, scale, out_zp)

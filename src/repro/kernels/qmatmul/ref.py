@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the quantized matmul + fused requantization kernel.
+
+Semantics (TFLite-compatible, per Jacob et al.):
+
+    acc[m, n] = sum_k (x_q[m, k] - x_zp) * w_q[k, n]  + bias[n]      (int32)
+    y[m, n]   = requantize(acc[m, n], scale[n], out_zp)              (int8)
+
+The zero-point correction is algebraically hoisted out of the inner product:
+
+    acc = x_q @ w_q - x_zp * colsum(w_q) + bias
+
+which is exactly what the Pallas kernel computes (one int8 MXU matmul plus an
+epilogue), and exactly what the HPDP dataflow graph computes (the XPP array
+streams x through the multiply-accumulate PAEs; the correction terms are
+folded into the bias path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import requantize
+
+
+def qmatmul_acc_ref(x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array,
+                    bias: jax.Array) -> jax.Array:
+    """int32 accumulator (pre-requantization). x_q: (M, K) int8, w_q: (K, N) int8."""
+    acc = jax.lax.dot_general(
+        x_q, w_q,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    return acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :].astype(jnp.int32)
+
+
+def qmatmul_ref(x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
+                scale: jax.Array, out_zp: jax.Array) -> jax.Array:
+    """Full quantized matmul + requant. Returns int8 (M, N)."""
+    acc = qmatmul_acc_ref(x_q, x_zp, w_q, bias)
+    return requantize(acc, scale, out_zp)

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with zero device allocation (ShapeDtypeStruct
+inputs):
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline
+  * the collective schedule     — parsed from the compiled HLO, summed per
+                                  collective kind for the roofline's
+                                  collective term
+Artifacts are written to benchmarks/artifacts/<cell>.json; EXPERIMENTS.md
+§Dry-run / §Roofline and benchmarks/roofline.py read them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+  REPRO_XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.dryrun --arch ... --mesh 2,4
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.launch import hlo_analysis
+from repro.launch import mesh as mesh_mod
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig, valid_cells
+from repro.models.transformer import ShardCtx
+from repro.parallel import sharding as shd
+from repro.train import steps as steps_mod
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|s32|s8|u32|u8|pred|s64|u64|f64)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str):
+    """Sum operand bytes of every collective op in the compiled HLO."""
+    per_kind = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        opname = m.group(2)
+        kind = next((k for k in COLLECTIVE_OPS
+                     if opname == k or opname.startswith(k + ".")), None)
+        if kind is None:
+            continue
+        # operand types appear inside the call parens
+        args = s[s.index("(") + 1:]
+        operand_bytes = sum(_shape_bytes(d, dims)
+                            for d, dims in _SHAPE_RE.findall(args))
+        if operand_bytes == 0:
+            # fall back to the result type (start of line)
+            res = _SHAPE_RE.findall(m.group(1))
+            operand_bytes = sum(_shape_bytes(d, dims) for d, dims in res)
+        per_kind[kind] += operand_bytes
+        counts[kind] += 1
+    return per_kind, counts
+
+
+def _memory_analysis_dict(compiled):
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        if hasattr(ma, f):
+            out[f] = int(getattr(ma, f))
+    return out
+
+
+def _cost_analysis_dict(compiled):
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (jitted_fn, example_args) with shardings applied — not yet lowered."""
+    dp = mesh_mod.dp_axes(mesh)
+    mdl = "model"
+    if cfg.layout == "dp":
+        # pure data parallelism: the model axis carries extra batch shards
+        # instead of TP (small archs whose heads don't divide the axis would
+        # otherwise replicate the whole attention computation 16×)
+        assert cfg.moe is None, "layout=dp is for non-MoE archs"
+        dp = dp + ("model",)
+    dp_size = int(jnp.prod(jnp.array([mesh.shape[a] for a in dp])))
+    # activation batch shards over dp only when it divides (long_500k has B=1)
+    bax = dp if shape.global_batch % dp_size == 0 else ()
+    ctx = ShardCtx(mesh=mesh, dp=dp, model=mdl, batch=bax)
+    bspec_ax = bax or None
+    opt = None
+    ins = steps_mod.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        from repro.train import optim as optim_mod
+        opt = optim_mod.make_optimizer(cfg.optimizer)
+        state = steps_mod.abstract_train_state(cfg, opt)
+        sspecs = steps_mod.train_state_specs(cfg, state.params, dp, "model",
+                                             cfg.optimizer, mesh=mesh)
+        state_sh = shd.shardings_for(mesh, sspecs)
+        bspec = {k: NamedSharding(mesh, P(bspec_ax, None, None)) if ins[k].ndim == 3
+                 else NamedSharding(mesh, P(bspec_ax, None)) for k in ins}
+        step = steps_mod.make_train_step(cfg, ctx, opt)
+        fn = jax.jit(step, in_shardings=(state_sh, bspec), donate_argnums=(0,))
+        return fn, (state, ins)
+
+    if shape.kind == "prefill":
+        params = steps_mod.abstract_train_state(cfg).params
+        pspecs = shd.param_specs(cfg, params, dp, "model", mesh=mesh)
+        params_sh = shd.shardings_for(mesh, pspecs)
+        bspec = {k: NamedSharding(mesh, P(bspec_ax, None, None)) if ins[k].ndim == 3
+                 else NamedSharding(mesh, P(bspec_ax, None)) for k in ins}
+        step = steps_mod.make_prefill_step(cfg, max_len=shape.seq_len, ctx=ctx)
+        fn = jax.jit(step, in_shardings=(params_sh, bspec))
+        return fn, (params, ins)
+
+    # decode
+    params = steps_mod.abstract_train_state(cfg).params
+    pspecs = shd.param_specs(cfg, params, dp, "model", mesh=mesh)
+    params_sh = shd.shardings_for(mesh, pspecs)
+    cspecs = shd.cache_specs(cfg, bax, "model")
+    cache_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    tok_sh = NamedSharding(mesh, P(bspec_ax))
+    step = steps_mod.make_decode_step(cfg, ctx)
+    fn = jax.jit(step, in_shardings=(params_sh, tok_sh, cache_sh),
+                 donate_argnums=(2,))
+    return fn, (params, ins["token"], ins["cache"])
+
+
+def run_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, mesh_label: str,
+             out_dir: Path, verbose: bool = True, tag: str = "",
+             save_hlo: bool = True):
+    cell = f"{cfg.name}__{shape.name}__{mesh_label}" + (f"__{tag}" if tag else "")
+    t0 = time.time()
+    with mesh:
+        fn, args = build_cell(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    if save_hlo:
+        import gzip
+        out_dir.mkdir(parents=True, exist_ok=True)
+        with gzip.open(out_dir / f"{cell}.hlo.gz", "wt") as f:
+            f.write(hlo)
+    coll_bytes, coll_counts = parse_collectives(hlo)
+    # loop-aware accounting (XLA's cost_analysis visits while bodies once;
+    # hlo_analysis multiplies by trip counts) — this is what §Roofline uses
+    loop_aware = hlo_analysis.analyze(hlo)
+    record = {
+        "cell": cell,
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": mesh_label,
+        "tag": tag,
+        "n_devices": int(mesh.size),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": _memory_analysis_dict(compiled),
+        "cost_analysis": _cost_analysis_dict(compiled),
+        "hlo_analysis": loop_aware,
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell}.json").write_text(json.dumps(record, indent=1))
+    if verbose:
+        ma = record["memory_analysis"]
+        ca = record["cost_analysis"]
+        print(f"[OK] {cell}: lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args {ma.get('argument_size_in_bytes', 0)/2**30:.2f} GiB/dev "
+              f"temp {ma.get('temp_size_in_bytes', 0)/2**30:.2f} GiB/dev | "
+              f"flops/dev {loop_aware['flops']:.3e} | "
+              f"coll {loop_aware['total_collective_bytes']/2**30:.3f} GiB/dev")
+        sys.stdout.flush()
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="override mesh shape, e.g. '2,4' or '2,2,2' (testing)")
+    ap.add_argument("--out", type=str, default=str(ARTIFACT_DIR))
+    ap.add_argument("--set", action="append", default=[], metavar="FIELD=VAL",
+                    help="ArchConfig override, e.g. --set remat=none "
+                         "--set param_dtype=bfloat16 (hillclimb variants)")
+    ap.add_argument("--tag", type=str, default="",
+                    help="artifact suffix for variant runs")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip writing the gzipped HLO artifact")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = []
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        meshes.append((mesh_mod.make_mesh(shape), "x".join(map(str, shape))))
+    else:
+        if args.multi_pod in ("single", "both"):
+            meshes.append((mesh_mod.make_production_mesh(multi_pod=False), "pod16x16"))
+        if args.multi_pod in ("multi", "both"):
+            meshes.append((mesh_mod.make_production_mesh(multi_pod=True), "2pod2x16x16"))
+
+    if args.all:
+        cells = registry.all_cells()
+    else:
+        cfg = registry.get(args.arch)
+        shapes = [SHAPES[args.shape]] if args.shape else valid_cells(cfg)
+        cells = [(cfg, s) for s in shapes]
+
+    if args.set:
+        import dataclasses as _dc
+        overrides = {}
+        for kv in args.set:
+            k, v = kv.split("=", 1)
+            fld = {f.name: f for f in _dc.fields(ArchConfig)}[k]
+            if fld.type in ("bool", bool):
+                v = v.lower() in ("1", "true", "yes")
+            elif fld.type in ("int", int):
+                v = int(v)
+            elif fld.type in ("float", float):
+                v = float(v)
+            overrides[k] = v
+        cells = [(_dc.replace(c, **overrides), s) for c, s in cells]
+
+    failures = []
+    for mesh, label in meshes:
+        for cfg, shape in cells:
+            try:
+                run_cell(cfg, shape, mesh, label, out_dir, tag=args.tag,
+                         save_hlo=not args.no_hlo)
+            except Exception as e:  # noqa: BLE001 — report every cell
+                failures.append((cfg.name, shape.name, label, repr(e)))
+                print(f"[FAIL] {cfg.name}__{shape.name}__{label}: {e}")
+                traceback.print_exc()
+                sys.stdout.flush()
+
+    print(f"\n{len(cells) * len(meshes) - len(failures)} passed, "
+          f"{len(failures)} failed")
+    if failures:
+        for f in failures:
+            print("  FAIL:", *f)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

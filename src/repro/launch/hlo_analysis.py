@@ -1,0 +1,466 @@
+"""Loop-aware cost analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every while-loop body exactly ONCE
+(verified empirically), so for scan-over-layers models it undercounts FLOPs,
+bytes and collective traffic by the trip count (≈ n_layers, and ≈ n_chunks²
+inside the chunked attention).  This module re-derives the roofline inputs by
+walking the HLO call graph and multiplying while bodies by their trip counts.
+
+What is counted:
+  * FLOPs — dot: 2·|result|·k_contract; convolution: 2·|result|·(spatial·Cin);
+    tallied per result dtype so the int8 (s32-accumulate) MXU path can use the
+    2× int8 peak in the roofline.
+  * bytes — per-op operand+result bytes at fusion granularity (a fusion's
+    internals stay in registers/VMEM, so only the fusion op's own operands and
+    result count — this mirrors XLA's bytes-accessed model).
+  * collective bytes — operand bytes per collective kind (async *-start
+    counted once, *-done skipped).
+
+Trip counts come from the largest integer constant in a while op's condition
+computation — exact for every `lax.scan`/`fori_loop` (static trip), which is
+the only loop source in this codebase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_TYPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+_SKIP_OPS = {"get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+             "copy", "after-all", "partition-id", "replica-id", "iota"}
+
+# Ops whose operands/results are necessarily materialized in HBM on TPU.
+# Elementwise chains, broadcasts, reshapes, converts etc. are fused into
+# their consumers by XLA:TPU, so for the *memory roofline term* only these
+# count; the CPU backend we lower on barely fuses, which would otherwise
+# wildly overestimate HBM traffic (bytes_accessed keeps the raw count).
+_MATERIALIZE_OPS = {"dot", "convolution", "fusion", "concatenate", "pad",
+                    "gather", "scatter", "dynamic-slice",
+                    "dynamic-update-slice", "sort", "reduce", "reduce-window",
+                    "select-and-scatter", "custom-call", "cholesky",
+                    "triangular-solve", "rng", "rng-bit-generator"}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(m: Tuple[str, str]) -> int:
+    return _shape_elems(m[1]) * _BYTES[m[0]]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_types: List[Tuple[str, str]]       # [(dtype, dims), ...]
+    opname: str
+    args: List[str]                            # operand %names
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, List[Tuple[str, str]]]
+    ops: List[Op]
+
+
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*?)\)\s*->")
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        # strip /*index=N*/ comments — they contain '=' and break op parsing
+        line = re.sub(r"/\*.*?\*/", "", raw).strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("(" in line) and ("=" not in line.split("(")[0]):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                name, params_str = m.group(1), m.group(2)
+                params = {}
+                # a param type is either a tuple (...) or one dtype[shape]{layout}
+                for pm in re.finditer(
+                        r"([\w.\-]+):\s*(\([^)]*\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)",
+                        params_str):
+                    params[pm.group(1)] = _TYPE_RE.findall(pm.group(2))
+                cur = Computation(name, params, [])
+                comps[name] = cur
+                if line.startswith("ENTRY"):
+                    entry = name
+                continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        opn = m.group(3)
+        rest = m.group(4)
+        # operands: %names before the closing paren of the call
+        depth = 1
+        i = 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        call_args = rest[:i - 1] if depth == 0 else rest
+        attrs = rest[i:] if depth == 0 else ""
+        args = re.findall(r"%([\w.\-]+)", call_args)
+        cur.ops.append(Op(m.group(1), _TYPE_RE.findall(m.group(2)), opn,
+                          args, attrs, line))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops_by_dtype: Dict[str, float]
+    bytes_accessed: float
+    collective_bytes: Dict[str, float]
+    collective_counts: Dict[str, float]
+    hbm_bytes: float = 0.0
+
+    @staticmethod
+    def zero() -> "Cost":
+        return Cost({}, 0.0, {k: 0.0 for k in COLLECTIVE_KINDS},
+                    {k: 0.0 for k in COLLECTIVE_KINDS}, 0.0)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        for k, v in other.flops_by_dtype.items():
+            self.flops_by_dtype[k] = self.flops_by_dtype.get(k, 0.0) + v * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in COLLECTIVE_KINDS:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+    @property
+    def flops(self) -> float:
+        return sum(self.flops_by_dtype.values())
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+class HloAnalyzer:
+    def __init__(self, hlo: str):
+        self.comps, self.entry = parse_computations(hlo)
+        self._memo: Dict[str, Cost] = {}
+
+    # ---------------- symbol table ----------------
+
+    def _types_of(self, comp: Computation, name: str) -> List[Tuple[str, str]]:
+        for op in comp.ops:
+            if op.name == name:
+                return op.result_types
+        if name in comp.params and comp.params[name]:
+            return comp.params[name]
+        return []
+
+    # ---------------- per-op costs ----------------
+
+    def _dot_flops(self, comp: Computation, op: Op) -> Tuple[str, float]:
+        res = op.result_types
+        if not res:
+            return "f32", 0.0
+        dtype, dims = res[0]
+        out_elems = _shape_elems(dims)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        contract = 1
+        if m and op.args:
+            lhs_types = self._types_of(comp, op.args[0])
+            if lhs_types:
+                lhs_dims = [int(x) for x in lhs_types[0][1].split(",") if x]
+                for ci in m.group(1).split(","):
+                    if ci:
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            contract *= lhs_dims[ci]
+        return dtype, 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: Computation, op: Op) -> Tuple[str, float]:
+        res = op.result_types
+        if not res or len(op.args) < 2:
+            return "f32", 0.0
+        dtype, dims = res[0]
+        out_elems = _shape_elems(dims)
+        k_types = self._types_of(comp, op.args[1])
+        if not k_types:
+            return dtype, 0.0
+        k_dims = [int(x) for x in k_types[0][1].split(",") if x]
+        # dim_labels=...io->...: 'o' position in kernel labels
+        m = re.search(r"dim_labels=[^_]*_([0-9a-z]+)->", op.attrs)
+        out_feat = 1
+        if m:
+            labels = m.group(1)
+            if "o" in labels and len(labels) == len(k_dims):
+                out_feat = k_dims[labels.index("o")]
+        per_out = 1
+        for d in k_dims:
+            per_out *= d
+        per_out //= max(out_feat, 1)
+        fgc = re.search(r"feature_group_count=(\d+)", op.attrs)
+        if fgc:
+            per_out //= max(int(fgc.group(1)), 1)
+        return dtype, 2.0 * out_elems * per_out
+
+    # ---------------- aggregation ----------------
+
+    def _trip_count(self, cond_name: str) -> float:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1.0
+        best = 1
+        for op in comp.ops:
+            for m in re.finditer(r"constant\((\d+)\)", op.line):
+                best = max(best, int(m.group(1)))
+        return float(best)
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        total = Cost.zero()
+        if comp is None:
+            self._memo[comp_name] = total
+            return total
+        self._memo[comp_name] = total    # break cycles defensively
+        for op in comp.ops:
+            opn = op.opname
+            if opn in _SKIP_OPS:
+                continue
+            # --- control flow / calls ---
+            if opn == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                # exact trip count from XLA's backend_config when present
+                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+                if mt:
+                    trip = float(mt.group(1))
+                else:
+                    trip = self._trip_count(mc.group(1)) if mc else 1.0
+                if mb:
+                    total.add(self.cost_of(mb.group(1)), mult=trip)
+                continue
+            if opn == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"true_computation=%?([\w.\-]+)|"
+                                     r"false_computation=%?([\w.\-]+))", op.attrs):
+                    for g in m.groups():
+                        if g:
+                            for nm in re.findall(r"%?([\w.\-]+)", g):
+                                total.add(self.cost_of(nm), mult=1.0)
+                continue
+            if opn == "fusion":
+                mcalls = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if mcalls:
+                    inner = self.cost_of(mcalls.group(1))
+                    # flops & collectives from inside; bytes at fusion boundary
+                    only_compute = Cost(dict(inner.flops_by_dtype), 0.0,
+                                        dict(inner.collective_bytes),
+                                        dict(inner.collective_counts), 0.0)
+                    total.add(only_compute)
+                total.bytes_accessed += self._io_bytes(comp, op)
+                total.hbm_bytes += self._fusion_hbm_traffic(comp, op)
+                continue
+            if opn in ("call", "async-start"):
+                mcalls = re.search(r"(?:calls|called_computation)=%?([\w.\-]+)",
+                                   op.attrs)
+                if mcalls:
+                    total.add(self.cost_of(mcalls.group(1)))
+                continue
+            # --- collectives ---
+            kind = next((k for k in COLLECTIVE_KINDS if opn.startswith(k)), None)
+            if kind is not None:
+                if opn.endswith("-done"):
+                    continue
+                ob = sum(_type_bytes(t) for a in op.args
+                         for t in self._types_of(comp, a))
+                if ob == 0:
+                    ob = sum(_type_bytes(t) for t in op.result_types)
+                total.collective_bytes[kind] += ob
+                total.collective_counts[kind] += 1
+                io = self._io_bytes(comp, op)
+                total.bytes_accessed += io
+                total.hbm_bytes += io
+                continue
+            # --- compute ---
+            if opn == "dot":
+                dt, fl = self._dot_flops(comp, op)
+                total.flops_by_dtype[dt] = total.flops_by_dtype.get(dt, 0.0) + fl
+            elif opn == "convolution":
+                dt, fl = self._conv_flops(comp, op)
+                total.flops_by_dtype[dt] = total.flops_by_dtype.get(dt, 0.0) + fl
+            io = self._io_bytes(comp, op)
+            total.bytes_accessed += io
+            if opn in _MATERIALIZE_OPS:
+                total.hbm_bytes += self._op_hbm_traffic(comp, op)
+        self._memo[comp_name] = total
+        return total
+
+    def _io_bytes(self, comp: Computation, op: Op) -> float:
+        b = sum(_type_bytes(t) for t in op.result_types)
+        for a in op.args:
+            b += sum(_type_bytes(t) for t in self._types_of(comp, a))
+        return float(b)
+
+    # ---------------- slice-aware HBM traffic ----------------
+    #
+    # XLA performs dynamic-update-slice IN PLACE (the result buffer aliases
+    # the target operand) and dynamic-slice touches only the slice region.
+    # Loop-residual stacking (`lax.scan` saving per-step values) compiles to
+    # exactly these ops over buffers n× larger than the touched slice, so
+    # counting full operand/result sizes overstates scan-body HBM traffic by
+    # the trip count — ~8× on an 8-chunk attention, ~n_layers× on layer
+    # scans.  hbm_bytes uses the slice-aware model; bytes_accessed keeps the
+    # raw (upper-bound) accounting for comparison.
+
+    def _op_hbm_traffic(self, comp: Computation, op: Op) -> float:
+        if op.opname == "dynamic-slice":
+            return 2.0 * sum(_type_bytes(t) for t in op.result_types)
+        if op.opname == "dynamic-update-slice":
+            upd = sum(_type_bytes(t)
+                      for t in self._types_of(comp, op.args[1])) \
+                if len(op.args) > 1 else 0.0
+            return 2.0 * upd
+        if op.opname == "fusion":
+            return self._fusion_hbm_traffic(comp, op)
+        return self._io_bytes(comp, op)
+
+    # Ops that neither move nor transform layout-significant data on TPU
+    # (convert is NOT free in general, but a convert of a buffer that is
+    # immediately DUS'd in place models as a fused element-wise epilogue).
+    _TRANSPARENT = ("convert", "bitcast", "copy", "reshape")
+
+    def _fusion_hbm_traffic(self, comp: Computation, op: Op) -> float:
+        mcalls = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        inner = self.comps.get(mcalls.group(1)) if mcalls else None
+        if inner is None:
+            return self._io_bytes(comp, op)
+
+        # map the fused computation's parameters to operand positions
+        param_idx: Dict[str, int] = {}
+        by_name: Dict[str, Op] = {}
+        for iop in inner.ops:
+            by_name[iop.name] = iop
+            if iop.opname == "parameter":
+                m = re.search(r"parameter\((\d+)\)", iop.line)
+                if m:
+                    param_idx[iop.name] = int(m.group(1))
+
+        def resolve(name: str) -> str:
+            """Follow convert/bitcast/copy/reshape chains back to a source."""
+            seen = set()
+            while name in by_name and name not in seen:
+                seen.add(name)
+                iop = by_name[name]
+                if iop.opname in self._TRANSPARENT and len(iop.args) == 1:
+                    name = iop.args[0]
+                else:
+                    break
+            return name
+
+        root = inner.ops[-1] if inner.ops else None
+        for iop in inner.ops:
+            if iop.line.startswith("ROOT "):
+                root = iop
+        if root is not None and root.opname in self._TRANSPARENT \
+                and len(root.args) == 1 and root.args[0] in by_name:
+            r = by_name[resolve(root.name)]
+            root = r if r is not root else root
+
+        # params consumed ONLY via dynamic-slice (or as a DUS target) are
+        # touched at slice granularity, not buffer granularity
+        sliced_bytes: Dict[int, float] = {}
+        sliced_only: Dict[int, bool] = {}
+        for iop in inner.ops:
+            if iop.opname in ("parameter",) + self._TRANSPARENT:
+                continue
+            for ai, a in enumerate(iop.args):
+                a = resolve(a)
+                if a not in param_idx:
+                    continue
+                pidx = param_idx[a]
+                if iop.opname == "dynamic-slice" and ai == 0:
+                    sliced_bytes[pidx] = sliced_bytes.get(pidx, 0.0) + \
+                        2.0 * sum(_type_bytes(t) for t in iop.result_types)
+                    sliced_only.setdefault(pidx, True)
+                elif iop.opname == "dynamic-update-slice" and ai == 0:
+                    sliced_only.setdefault(pidx, True)    # aliased in place
+                else:
+                    sliced_only[pidx] = False
+
+        total = 0.0
+        for i, a in enumerate(op.args):
+            full = float(sum(_type_bytes(t) for t in self._types_of(comp, a)))
+            if sliced_only.get(i, False):
+                total += min(sliced_bytes.get(i, 0.0), full)
+            else:
+                total += full
+
+        # result side: in-place DUS roots write only the update slice.  A
+        # multi-output fusion (scan body emitting several ys, e.g. the K and
+        # V cache pages) roots at a TUPLE of DUS ops — discount each element.
+        def dus_write(iop) -> Optional[float]:
+            if iop is not None and iop.opname == "dynamic-update-slice" \
+                    and iop.args and resolve(iop.args[0]) in param_idx:
+                return 2.0 * sum(
+                    _type_bytes(t)
+                    for t in (self._types_of(inner, iop.args[1])
+                              if len(iop.args) > 1 else []))
+            return None
+
+        if root is not None and root.opname == "tuple":
+            for j, a in enumerate(root.args):
+                w = dus_write(by_name.get(resolve(a)))
+                if w is not None:
+                    total += w
+                elif j < len(op.result_types):
+                    total += float(_type_bytes(op.result_types[j]))
+        else:
+            w = dus_write(root)
+            if w is not None:
+                total += w
+            else:
+                total += float(sum(_type_bytes(t) for t in op.result_types))
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost.zero()
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo: str) -> Dict:
+    cost = HloAnalyzer(hlo).entry_cost()
+    return {
+        "flops": cost.flops,
+        "flops_by_dtype": cost.flops_by_dtype,
+        "bytes_accessed": cost.bytes_accessed,
+        "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collective_counts": cost.collective_counts,
+        "total_collective_bytes": cost.total_collective_bytes,
+    }

@@ -1,0 +1,45 @@
+"""Family-dispatching model API.
+
+Every launcher / test / benchmark talks to models through these five
+functions; the family field of the ArchConfig picks the implementation.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.models.config import ArchConfig
+from repro.models import transformer, rwkv6, griffin
+
+
+def _mod(cfg: ArchConfig):
+    if cfg.family == "transformer":
+        return transformer
+    if cfg.family == "rwkv":
+        return rwkv6
+    if cfg.family == "hybrid":
+        return griffin
+    raise ValueError(f"unknown family {cfg.family!r} (cnn goes through models/shipdet.py)")
+
+
+def init_params(cfg, key):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def forward(cfg, params, tokens, ctx=None, embeds=None):
+    return _mod(cfg).forward(cfg, params, tokens, ctx, embeds=embeds)
+
+
+def loss_fn(cfg, params, batch, ctx=None):
+    return _mod(cfg).loss_fn(cfg, params, batch, ctx)
+
+
+def init_cache(cfg, B, max_len, dtype=None):
+    return _mod(cfg).init_cache(cfg, B, max_len, dtype)
+
+
+def decode_step(cfg, params, token, cache, ctx=None, embed=None):
+    return _mod(cfg).decode_step(cfg, params, token, cache, ctx, embed=embed)
+
+
+def prefill(cfg, params, tokens, max_len, ctx=None, embeds=None):
+    return _mod(cfg).prefill(cfg, params, tokens, max_len, ctx, embeds=embeds)

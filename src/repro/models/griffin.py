@@ -1,0 +1,391 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrence + local
+attention, interleaved 2:1 (two recurrent blocks, then one local-MQA block).
+
+RG-LRU:  a_t = exp(-c · softplus(Λ) · σ(W_a x_t)),  c = 8
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+— a linear recurrence with data-dependent per-channel gates, which maps onto
+`jax.lax.associative_scan` (log-depth parallel on TPU) for train/prefill and
+an O(1)-state step for decode.  The recurrent temporal-mix block is
+    y = W_out( GeLU(x W_gate) ⊙ RG-LRU(conv1d_4(x W_x)) )
+and the attention block is MQA (1 KV head) with a 2048-token sliding window,
+so the KV cache is bounded ⇒ the long_500k decode cell is runnable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ArchConfig
+from repro.models.transformer import ForwardOut, ShardCtx, _cdt, _pdt
+
+RGLRU_C = 8.0
+
+
+def _counts(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_super, n_tail_rec, n_attn) for the (rec, rec, attn) repeating pattern."""
+    L = cfg.n_layers
+    n_super = L // 3
+    tail = L - 3 * n_super              # leftover layers are recurrent
+    return n_super, tail, n_super
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _rec_block_params(keys, n, d, W, ff, d_conv, pdt):
+    def stack(shape):
+        return common.dense_init(next(keys), (n,) + shape, in_axis=1, dtype=pdt)
+    lam = jnp.tile(jnp.linspace(0.9, 5.0, W)[None], (n, 1)).astype(pdt)
+    return {
+        "ln": jnp.zeros((n, d), pdt),
+        "w_x": stack((d, W)),
+        "w_gate": stack((d, W)),
+        "conv_w": (common.dense_init(next(keys), (n, d_conv, W), in_axis=1,
+                                     dtype=pdt)),
+        "lam": lam,                      # Λ (recurrence strength)
+        "w_a": stack((W, W)),
+        "w_i": stack((W, W)),
+        "w_out": stack((W, d)),
+        "ln_mlp": jnp.zeros((n, d), pdt),
+        "mlp_g": stack((d, ff)),
+        "mlp_i": stack((d, ff)),
+        "mlp_o": stack((ff, d)),
+    }
+
+
+def _attn_block_params(keys, n, cfg, pdt):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV, ff = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+
+    def stack(shape):
+        return common.dense_init(next(keys), (n,) + shape, in_axis=1, dtype=pdt)
+    return {
+        "ln": jnp.zeros((n, d), pdt),
+        "wq": stack((d, H * hd)),
+        "wk": stack((d, KV * hd)),
+        "wv": stack((d, KV * hd)),
+        "wo": stack((H * hd, d)),
+        "ln_mlp": jnp.zeros((n, d), pdt),
+        "mlp_g": stack((d, ff)),
+        "mlp_i": stack((d, ff)),
+        "mlp_o": stack((ff, d)),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    d, V, ff = cfg.d_model, cfg.vocab_size, cfg.d_ff
+    W = cfg.recurrent.lru_width or d
+    pdt = _pdt(cfg)
+    keys = iter(jax.random.split(key, 80))
+    n_super, tail, n_attn = _counts(cfg)
+    params = {
+        "embed": common.embed_init(next(keys), (V, d), dtype=pdt),
+        "final_norm": jnp.zeros((d,), pdt),
+        "rec_blocks": _rec_block_params(keys, 2 * n_super, d, W, ff,
+                                        cfg.recurrent.d_conv, pdt),
+        "attn_blocks": _attn_block_params(keys, n_attn, cfg, pdt),
+    }
+    if tail:
+        params["tail_rec"] = _rec_block_params(keys, tail, d, W, ff,
+                                               cfg.recurrent.d_conv, pdt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(next(keys), (d, V), dtype=pdt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rglru_parallel(x_in, gate_a, lam):
+    """x_in, gate_a: (B, T, W) f32; lam: (W,). Associative-scan recurrence."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam)[None, None] * gate_a      # ≤ 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * x_in
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(x_in, gate_a, lam, h_prev):
+    log_a = -RGLRU_C * jax.nn.softplus(lam)[None] * gate_a            # (B, W)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * x_in
+    return a * h_prev + b
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: (B, T, W), w: (K, W). state: (B, K-1, W)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return out, xp[:, -(K - 1):]
+
+
+def _rec_block(cfg, bp, x, state=None):
+    """state: (conv_state (B,K-1,W), h (B,W)) or None. x: (B,T,d)."""
+    B, T, d = x.shape
+    h = common.rms_norm(x, bp["ln"], cfg.norm_eps)
+    xb = h @ bp["w_x"]                                   # (B, T, W)
+    gate = jax.nn.gelu(h @ bp["w_gate"])
+    conv_state = state[0] if state is not None else None
+    xb, new_conv = _causal_conv1d(xb, bp["conv_w"], conv_state)
+
+    g_a = jax.nn.sigmoid((xb @ bp["w_a"]).astype(jnp.float32))
+    g_i = jax.nn.sigmoid((xb @ bp["w_i"]).astype(jnp.float32))
+    xin = g_i * xb.astype(jnp.float32)
+    lam = bp["lam"].astype(jnp.float32)
+
+    if state is not None and T == 1:
+        hh = rglru_step(xin[:, 0], g_a[:, 0], lam, state[1])
+        rec = hh[:, None]
+        new_h = hh
+    else:
+        if state is not None:
+            # fold carried state in as a virtual step 0
+            pass
+        rec = rglru_parallel(xin, g_a, lam)
+        new_h = rec[:, -1]
+    y = (rec.astype(x.dtype) * gate) @ bp["w_out"]
+    x = x + y
+    # MLP (GeGLU)
+    hm = common.rms_norm(x, bp["ln_mlp"], cfg.norm_eps)
+    x = x + (jax.nn.gelu(hm @ bp["mlp_g"]) * (hm @ bp["mlp_i"])) @ bp["mlp_o"]
+    return x, (new_conv, new_h)
+
+
+def _attn_block(cfg, bp, x, positions, kv_state=None, pos=None):
+    """Local MQA. kv_state: (k_cache, v_cache) ring (B, Win, KV, hd) for decode."""
+    B, T, d = x.shape
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    win = cfg.recurrent.attn_window
+    h = common.rms_norm(x, bp["ln"], cfg.norm_eps)
+    q = (h @ bp["wq"]).reshape(B, T, H, hd)
+    k = (h @ bp["wk"]).reshape(B, T, KV, hd)
+    v = (h @ bp["wv"]).reshape(B, T, KV, hd)
+    if kv_state is None:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+        o = common.chunked_causal_attention(q, k, v, window=win)
+        new_state = None
+    else:
+        kc, vc = kv_state
+        Tc = kc.shape[1]
+        pb = jnp.full((B, 1), pos)
+        q = common.apply_rope(q, pb, cfg.rope_theta)
+        k = common.apply_rope(k, pb, cfg.rope_theta)
+        slot = pos % Tc
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+        o = common.decode_attention(q.astype(jnp.float32),
+                                    kc.astype(jnp.float32),
+                                    vc.astype(jnp.float32),
+                                    jnp.minimum(pos + 1, Tc))
+        new_state = (kc, vc)
+    x = x + (o.reshape(B, T, H * hd) @ bp["wo"]).astype(x.dtype)
+    hm = common.rms_norm(x, bp["ln_mlp"], cfg.norm_eps)
+    x = x + (jax.nn.gelu(hm @ bp["mlp_g"]) * (hm @ bp["mlp_i"])) @ bp["mlp_o"]
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _cast(cfg, tree):
+    return jax.tree_util.tree_map(lambda w: w.astype(_cdt(cfg)), tree)
+
+
+def _super_params(params, n_super):
+    """Regroup rec_blocks (2n, ...) into (n, 2, ...) to scan (rec,rec,attn)."""
+    rec2 = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_super, 2) + a.shape[1:]), params["rec_blocks"])
+    return rec2
+
+
+def forward(cfg: ArchConfig, params, tokens, ctx: Optional[ShardCtx] = None,
+            embeds=None) -> ForwardOut:
+    x = (embeds if embeds is not None else params["embed"][tokens]).astype(_cdt(cfg))
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    n_super, tail, _ = _counts(cfg)
+
+    def super_body(x, layer):
+        rec2, attn = layer
+        rec2, attn = _cast(cfg, rec2), _cast(cfg, attn)
+        r0 = jax.tree_util.tree_map(lambda a: a[0], rec2)
+        r1 = jax.tree_util.tree_map(lambda a: a[1], rec2)
+        x, _ = _rec_block(cfg, r0, x)
+        x, _ = _rec_block(cfg, r1, x)
+        x, _ = _attn_block(cfg, attn, x, positions)
+        return x, None
+
+    if cfg.remat != "none":
+        super_body = jax.checkpoint(
+            super_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False)
+
+    x, _ = jax.lax.scan(super_body, x,
+                        (_super_params(params, n_super), params["attn_blocks"]))
+    if tail:
+        def tail_body(x, bp):
+            x, _ = _rec_block(cfg, _cast(cfg, bp), x)
+            return x, None
+        x, _ = jax.lax.scan(tail_body, x, params["tail_rec"])
+
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    z = jnp.zeros((), jnp.float32)
+    return ForwardOut(logits, z, z)
+
+
+def loss_fn(cfg, params, batch, ctx=None):
+    out = forward(cfg, params, batch["tokens"], ctx, embeds=batch.get("embeds"))
+    loss = common.cross_entropy_loss(out.logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+class GriffinCache(NamedTuple):
+    conv: jax.Array        # (n_rec, B, K-1, W)
+    h: jax.Array           # (n_rec, B, W)
+    k: jax.Array           # (n_attn, B, Win, KV, hd)
+    v: jax.Array
+    length: jax.Array
+
+
+def init_cache(cfg: ArchConfig, B: int, max_len: int, dtype=None) -> GriffinCache:
+    dtype = dtype or _cdt(cfg)
+    n_super, tail, n_attn = _counts(cfg)
+    n_rec = 2 * n_super + tail
+    W = cfg.recurrent.lru_width or cfg.d_model
+    K = cfg.recurrent.d_conv
+    win = min(cfg.recurrent.attn_window, max_len)
+    return GriffinCache(
+        jnp.zeros((n_rec, B, K - 1, W), dtype),
+        jnp.zeros((n_rec, B, W), jnp.float32),
+        jnp.zeros((n_attn, B, win, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
+        jnp.zeros((n_attn, B, win, cfg.n_kv_heads, cfg.resolved_head_dim), dtype),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(cfg, params, token, cache: GriffinCache,
+                ctx: Optional[ShardCtx] = None, embed=None):
+    x = (embed if embed is not None else params["embed"][token])
+    x = x[:, None, :].astype(_cdt(cfg))
+    n_super, tail, n_attn = _counts(cfg)
+    pos = cache.length
+
+    def super_body(x, layer):
+        rec2, attn, conv2, h2, kc, vc = layer
+        rec2, attn = _cast(cfg, rec2), _cast(cfg, attn)
+        new_conv, new_h = [], []
+        for i in range(2):
+            r = jax.tree_util.tree_map(lambda a: a[i], rec2)
+            x, (cv, hh) = _rec_block(cfg, r, x, state=(conv2[i], h2[i]))
+            new_conv.append(cv)
+            new_h.append(hh)
+        x, (kc, vc) = _attn_block(cfg, attn, x, None, kv_state=(kc, vc), pos=pos)
+        return x, (jnp.stack(new_conv), jnp.stack(new_h), kc, vc)
+
+    rec2 = _super_params(params, n_super)
+    conv2 = cache.conv[:2 * n_super].reshape((n_super, 2) + cache.conv.shape[1:])
+    h2 = cache.h[:2 * n_super].reshape((n_super, 2) + cache.h.shape[1:])
+    x, (nconv, nh, kc, vc) = jax.lax.scan(
+        super_body, x, (rec2, params["attn_blocks"], conv2, h2, cache.k, cache.v))
+    nconv = nconv.reshape((2 * n_super,) + cache.conv.shape[1:])
+    nh = nh.reshape((2 * n_super,) + cache.h.shape[1:])
+
+    if tail:
+        def tail_body(x, layer):
+            bp, cv, hh = layer
+            x, (cv, hh) = _rec_block(cfg, _cast(cfg, bp), x, state=(cv, hh))
+            return x, (cv, hh)
+        x, (tconv, th) = jax.lax.scan(
+            tail_body, x,
+            (params["tail_rec"], cache.conv[2 * n_super:], cache.h[2 * n_super:]))
+        nconv = jnp.concatenate([nconv, tconv])
+        nh = jnp.concatenate([nh, th])
+
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype))[:, 0]
+    return logits, GriffinCache(nconv, nh, kc, vc, cache.length + 1)
+
+
+def prefill(cfg, params, tokens, max_len: int, ctx=None, embeds=None):
+    """Forward pass that also materializes the decode cache (states + window KV)."""
+    x = (embeds if embeds is not None else params["embed"][tokens]).astype(_cdt(cfg))
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    n_super, tail, n_attn = _counts(cfg)
+    cache = init_cache(cfg, B, max_len)
+    win = cache.k.shape[2]
+
+    def super_body(x, layer):
+        rec2, attn = layer
+        rec2c, attnc = _cast(cfg, rec2), _cast(cfg, attn)
+        states = []
+        for i in range(2):
+            r = jax.tree_util.tree_map(lambda a: a[i], rec2c)
+            x, st = _rec_block(cfg, r, x)
+            states.append(st)
+        # attention with KV collection
+        h = common.rms_norm(x, attnc["ln"], cfg.norm_eps)
+        hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+        k = (h @ attnc["wk"]).reshape(B, S, KV, hd)
+        v = (h @ attnc["wv"]).reshape(B, S, KV, hd)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+        x, _ = _attn_block(cfg, attnc, x, positions)
+        # ring-aligned last-window slice: position p sits at slot p % win
+        Tc = min(win, S)
+        kk = jax.lax.dynamic_slice_in_dim(k, max(S - Tc, 0), Tc, axis=1)
+        vv = jax.lax.dynamic_slice_in_dim(v, max(S - Tc, 0), Tc, axis=1)
+        idx = (jnp.arange(Tc) + max(S - Tc, 0)) % win
+        kc = jnp.zeros((B, win, KV, hd), kk.dtype).at[:, idx].set(kk)
+        vc = jnp.zeros((B, win, KV, hd), vv.dtype).at[:, idx].set(vv)
+        conv2 = jnp.stack([states[0][0], states[1][0]])
+        h2 = jnp.stack([states[0][1], states[1][1]])
+        return x, (conv2, h2, kc, vc)
+
+    x, (conv2, h2, kc, vc) = jax.lax.scan(
+        super_body, x, (_super_params(params, n_super), params["attn_blocks"]))
+    nconv = conv2.reshape((2 * n_super,) + conv2.shape[2:])
+    nh = h2.reshape((2 * n_super,) + h2.shape[2:])
+
+    if tail:
+        def tail_body(x, bp):
+            x, st = _rec_block(cfg, _cast(cfg, bp), x)
+            return x, st
+        x, (tconv, th) = jax.lax.scan(tail_body, x, params["tail_rec"])
+        nconv = jnp.concatenate([nconv, tconv])
+        nh = jnp.concatenate([nh, th])
+
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, GriffinCache(nconv, nh, kc.astype(cache.k.dtype),
+                                vc.astype(cache.v.dtype),
+                                jnp.asarray(S, jnp.int32))

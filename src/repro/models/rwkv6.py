@@ -1,0 +1,315 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Layer = time-mix (WKV6 recurrence) + channel-mix, both with token-shift and
+Finch's low-rank data-dependent interpolation (ddlerp).
+
+WKV6 per head (state S ∈ R^{hd×hd}):
+    o_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ ,   w_t = exp(-exp(ŵ(x_t)))  ∈ (0,1)
+
+Two implementations:
+  * ``wkv_scan``    — token-recurrent `lax.scan` (oracle; also THE decode path,
+                      O(1) state ⇒ the long_500k cell is runnable).
+  * ``wkv_chunked`` — chunk-parallel form (training/prefill): within a chunk
+                      the decay products are materialized as an attention-like
+                      C×C score matrix whose entries are products of w ∈ (0,1)
+                      (computed as exp of cumsum differences with a mid-chunk
+                      offset for f32 range), so each chunk is dense MXU work;
+                      chunks are chained by carrying S.  This is the TPU
+                      adaptation of the CUDA wkv kernel: instead of a
+                      per-token warp loop, reshape the recurrence into
+                      matmul-sized blocks the MXU can stream — same insight
+                      as the paper's "reshape conv into the XPP dataflow".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ArchConfig
+from repro.models.transformer import ForwardOut, ShardCtx, _cdt, _pdt, _w
+
+LORA_R = 16          # ddlerp low-rank dim
+DECAY_LORA_R = 32
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    d, L, V, ff = cfg.d_model, cfg.n_layers, cfg.vocab_size, cfg.d_ff
+    hd = cfg.recurrent.head_dim
+    H = d // hd
+    pdt = _pdt(cfg)
+    keys = iter(jax.random.split(key, 40))
+
+    def stack(shape):
+        return common.dense_init(next(keys), (L,) + shape, in_axis=1, dtype=pdt)
+
+    # decay init: moderate decay so both scan and chunked paths are in a
+    # healthy numeric range (trained RWKV decays live here too)
+    w0 = jnp.tile(jnp.linspace(-6.0, -0.5, d)[None, :], (L, 1)).astype(pdt)
+
+    return {
+        "embed": common.embed_init(next(keys), (V, d), dtype=pdt),
+        "final_norm": jnp.zeros((d,), pdt),
+        "lm_head": common.dense_init(next(keys), (d, V), dtype=pdt),
+        "blocks": {
+            "ln1": jnp.zeros((L, d), pdt),
+            "ln2": jnp.zeros((L, d), pdt),
+            # ddlerp
+            "mu_x": jnp.zeros((L, d), pdt),
+            "mu": jnp.zeros((L, 5, d), pdt),            # per {w,k,v,r,g}
+            "ddl_A": stack((d, 5 * LORA_R)),
+            "ddl_B": stack((5, LORA_R, d)) * 0.0,
+            # time-mix projections
+            "wr": stack((d, d)),
+            "wk": stack((d, d)),
+            "wv": stack((d, d)),
+            "wg": stack((d, d)),
+            "wo": stack((d, d)),
+            # decay
+            "w0": w0,
+            "dec_A": stack((d, DECAY_LORA_R)),
+            "dec_B": stack((DECAY_LORA_R, d)) * 0.0,
+            "u": jnp.zeros((L, H, hd), pdt),
+            "ln_x": jnp.zeros((L, d), pdt),             # per-head group norm scale
+            # channel-mix
+            "cm_mu_k": jnp.zeros((L, d), pdt),
+            "cm_mu_r": jnp.zeros((L, d), pdt),
+            "cm_wk": stack((d, ff)),
+            "cm_wv": stack((ff, d)),
+            "cm_wr": stack((d, d)),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+
+def wkv_scan(r, k, v, w, u, s0=None):
+    """Token-recurrent oracle. r,k,v,w: (B, T, H, hd) f32; u: (H, hd).
+
+    Returns (o (B,T,H,hd), s_final (B,H,hd,hd))."""
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B, H, hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B, H, hd, hd)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1), s
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
+    """Chunk-parallel WKV6. Same contract as wkv_scan (f32 inputs)."""
+    B, T, H, hd = r.shape
+    C = min(chunk, T)
+    n = -(-T // C)
+    Tp = n * C
+    if Tp != T:
+        pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(t, pad) for t in (r, k, v))
+        w = jnp.pad(w, pad, constant_values=1.0)        # pad decay = identity
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    # (n, B, C, H, hd)
+    rc, kc, vc, wc = (t.reshape(B, n, C, H, hd).transpose(1, 0, 2, 3, 4)
+                      for t in (r, k, v, w))
+
+    def chunk_body(s, inp):
+        rr, kk, vv, ww = inp                            # (B, C, H, hd)
+        lw = jnp.log(jnp.maximum(ww, 1e-24))            # ≤ 0
+        L = jnp.cumsum(lw, axis=1)                      # inclusive
+        E = L - lw                                      # exclusive
+        mid = L[:, -1:, :, :] * 0.5                     # per-channel offset
+        r_s = rr * jnp.exp(E - mid)                     # bounded by exp(|Lc|/2)
+        k_s = kk * jnp.exp(mid - L)
+        # intra-chunk scores s[t, i] = Σ_c r_s[t, c] k_s[i, c]  (strict lower tri)
+        scores = jnp.einsum("bthc,bihc->bhti", r_s, k_s)
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        o = jnp.einsum("bhti,bihv->bthv", scores, vv)
+        # current-token bonus
+        o += jnp.einsum("bthc,bthc,bthv->bthv", rr * u[None, None], kk, vv)
+        # inter-chunk: o_t += (r ⊙ Π_{j<t} w) · S0
+        o += jnp.einsum("bthk,bhkv->bthv", rr * jnp.exp(E), s)
+        # state to next chunk: S = diag(ΠW) S0 + Σ_i (Π_{j>i} w ⊙ k_i) v_iᵀ
+        decay_all = jnp.exp(L[:, -1])                   # (B, H, hd)
+        k_tail = kk * jnp.exp(L[:, -1:, :, :] - L)      # Π_{j>i} w  ≤ 1
+        s = decay_all[..., :, None] * s + jnp.einsum("bihk,bihv->bhkv", k_tail, vv)
+        return s, o
+
+    s, o = jax.lax.scan(chunk_body, s0, (rc, kc, vc, wc))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, hd)
+    return o[:, :T], s
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(bp, x, xx):
+    """Finch data-dependent interpolation → 5 mixed inputs (w,k,v,r,g)."""
+    diff = xx - x
+    x_mix = x + diff * bp["mu_x"]
+    lo = jnp.tanh(x_mix @ bp["ddl_A"])                  # (B,T,5R)
+    B_, T_, _ = lo.shape
+    lo = lo.reshape(B_, T_, 5, LORA_R)
+    delta = jnp.einsum("btfr,frd->btfd", lo, bp["ddl_B"])
+    mixed = x[:, :, None] + diff[:, :, None] * (bp["mu"][None, None] + delta)
+    return [mixed[:, :, i] for i in range(5)]           # w,k,v,r,g
+
+
+def _time_mix(cfg, bp, x, use_chunked: bool, state=None):
+    """x: (B, T, d). state: (x_prev (B,d), S (B,H,hd,hd)) for decode chaining."""
+    B, T, d = x.shape
+    hd = cfg.recurrent.head_dim
+    H = d // hd
+    h = common.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    x_prev = state[0] if state is not None else jnp.zeros((B, d), h.dtype)
+    xx = jnp.concatenate([x_prev[:, None], h[:, :-1]], axis=1)   # token shift
+    xw, xk, xv, xr, xg = _ddlerp(bp, h, xx)
+
+    r = (xr @ bp["wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xk @ bp["wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xv @ bp["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ bp["wg"])
+
+    logw = bp["w0"][None, None] + jnp.tanh(xw @ bp["dec_A"]) @ bp["dec_B"]
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32))).reshape(B, T, H, hd)
+    u = bp["u"].astype(jnp.float32)
+
+    s0 = state[1] if state is not None else None
+    if use_chunked and T > 1:
+        o, s = wkv_chunked(r, k, v, w, u, s0)
+    else:
+        o, s = wkv_scan(r, k, v, w, u, s0)
+
+    # per-head group norm
+    o = o.reshape(B, T, H, hd)
+    o = common.rms_norm(o, bp["ln_x"].reshape(H, hd), cfg.norm_eps)
+    o = o.reshape(B, T, d).astype(x.dtype) * g
+    out = x + o @ bp["wo"]
+    return out, (h[:, -1], s)
+
+
+def _channel_mix(cfg, bp, x, state=None):
+    B, T, d = x.shape
+    h = common.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    x_prev = state if state is not None else jnp.zeros((B, d), h.dtype)
+    xx = jnp.concatenate([x_prev[:, None], h[:, :-1]], axis=1)
+    xk = h + (xx - h) * bp["cm_mu_k"]
+    xr = h + (xx - h) * bp["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ bp["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ bp["cm_wr"]) * (kk @ bp["cm_wv"])
+    return x + out, h[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _cast_block(cfg, bp):
+    return jax.tree_util.tree_map(lambda w: w.astype(_cdt(cfg)), bp)
+
+
+def forward(cfg: ArchConfig, params, tokens: jax.Array,
+            ctx: Optional[ShardCtx] = None,
+            embeds: Optional[jax.Array] = None) -> ForwardOut:
+    x = (embeds if embeds is not None else params["embed"][tokens]).astype(_cdt(cfg))
+
+    def body(x, bp):
+        bp = _cast_block(cfg, bp)
+        x, _ = _time_mix(cfg, bp, x, use_chunked=True)
+        x, _ = _channel_mix(cfg, bp, x)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    z = jnp.zeros((), jnp.float32)
+    return ForwardOut(logits, z, z)
+
+
+def loss_fn(cfg, params, batch, ctx=None):
+    out = forward(cfg, params, batch["tokens"], ctx, embeds=batch.get("embeds"))
+    loss = common.cross_entropy_loss(out.logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+class RwkvCache(NamedTuple):
+    tm_x: jax.Array       # (L, B, d)   time-mix shift state
+    tm_s: jax.Array       # (L, B, H, hd, hd) wkv state
+    cm_x: jax.Array       # (L, B, d)   channel-mix shift state
+    length: jax.Array
+
+
+def init_cache(cfg: ArchConfig, B: int, max_len: int, dtype=None) -> RwkvCache:
+    dtype = dtype or _cdt(cfg)
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.recurrent.head_dim
+    H = d // hd
+    return RwkvCache(jnp.zeros((L, B, d), dtype),
+                     jnp.zeros((L, B, H, hd, hd), jnp.float32),
+                     jnp.zeros((L, B, d), dtype),
+                     jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg, params, token, cache: RwkvCache,
+                ctx: Optional[ShardCtx] = None,
+                embed: Optional[jax.Array] = None):
+    x = (embed if embed is not None else params["embed"][token])
+    x = x[:, None, :].astype(_cdt(cfg))
+
+    def body(x, layer):
+        bp, tmx, tms, cmx = layer
+        bp = _cast_block(cfg, bp)
+        x, (tmx, tms) = _time_mix(cfg, bp, x, use_chunked=False, state=(tmx, tms))
+        x, cmx = _channel_mix(cfg, bp, x, state=cmx)
+        return x, (tmx, tms, cmx)
+
+    x, (tmx, tms, cmx) = jax.lax.scan(
+        body, x, (params["blocks"], cache.tm_x, cache.tm_s, cache.cm_x))
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+    return logits, RwkvCache(tmx, tms, cmx, cache.length + 1)
+
+
+def prefill(cfg, params, tokens, max_len: int, ctx=None, embeds=None):
+    """Chunked forward that also returns the recurrent state as the cache."""
+    x = (embeds if embeds is not None else params["embed"][tokens]).astype(_cdt(cfg))
+    B, S = x.shape[:2]
+
+    def body(x, bp):
+        bp = _cast_block(cfg, bp)
+        x, (tmx, tms) = _time_mix(cfg, bp, x, use_chunked=True)
+        x, cmx = _channel_mix(cfg, bp, x)
+        return x, (tmx, tms, cmx)
+
+    x, (tmx, tms, cmx) = jax.lax.scan(body, x, params["blocks"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, RwkvCache(tmx, tms, cmx, jnp.asarray(S, jnp.int32))

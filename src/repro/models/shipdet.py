@@ -1,0 +1,152 @@
+"""Ship Detection CNN — the paper's own workload (OBPMark-ML, YoloX-style).
+
+A compact quantized detector backbone whose middle layers are *exactly* the
+four Table-1 layers of the paper (kernel / image geometry):
+
+    conv1:  24×3×3×24  @ 194×194×24
+    conv2:  48×3×3×48  @  98× 98×48
+    conv3:  96×3×3×96  @  50× 50×96
+    conv4:  96×1×1×96  @  96× 96×96   (parallel 1×1 branch)
+
+Every convolution executes as int8 conv + fused re-quantization through
+kernels/qconv2d — i.e. the exact op the HPDP runs — composed into a network
+by the framework (the role Klepsydra AI + RTG4 orchestration plays in the
+paper).  Dependability policy applies per layer (core/dependability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.dependability import Policy
+from repro.core import abft as abft_mod
+from repro.kernels.qconv2d import ops as qconv_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    h: int                 # input spatial (square images per the paper's table)
+    w: int
+    stride: int = 1
+
+    @property
+    def macs(self) -> int:
+        return self.h * self.w * self.cin * self.cout * self.kh * self.kw // (self.stride ** 2)
+
+
+# The paper's Table-1 layers, exact geometry.
+TABLE1_LAYERS = [
+    ConvSpec("conv_24x3x3x24", 3, 3, 24, 24, 194, 194),
+    ConvSpec("conv_48x3x3x48", 3, 3, 48, 48, 98, 98),
+    ConvSpec("conv_96x3x3x96", 3, 3, 96, 96, 50, 50),
+    ConvSpec("conv_96x1x1x96", 1, 1, 96, 96, 96, 96),
+]
+
+
+def network_specs(img: int = 194) -> List[ConvSpec]:
+    """Full ship-detector: stem + Table-1 trunk + head."""
+    return [
+        ConvSpec("stem", 3, 3, 3, 24, img * 2, img * 2, stride=2),
+        TABLE1_LAYERS[0],
+        ConvSpec("down1", 3, 3, 24, 48, 194, 194, stride=2),
+        TABLE1_LAYERS[1],
+        ConvSpec("down2", 3, 3, 48, 96, 98, 98, stride=2),
+        TABLE1_LAYERS[2],
+        ConvSpec("head1x1", 1, 1, 96, 96, 50, 50),
+        ConvSpec("det_head", 1, 1, 96, 6, 50, 50),     # 1 class + 4 box + obj
+    ]
+
+
+def reduced_specs() -> List[ConvSpec]:
+    """Small variant for CPU smoke tests (same topology, 16× smaller maps)."""
+    full = network_specs()
+    out = []
+    for s in full:
+        out.append(dataclasses.replace(s, h=max(s.h // 8, 4), w=max(s.w // 8, 4)))
+    return out
+
+
+def init_params(specs: List[ConvSpec], key: jax.Array) -> List[Dict[str, Any]]:
+    """Float master weights + static activation qparams per layer (calibrated)."""
+    params = []
+    keys = jax.random.split(key, len(specs))
+    for s, k in zip(specs, keys):
+        w = jax.random.normal(k, (s.kh, s.kw, s.cin, s.cout)) * (
+            1.0 / jnp.sqrt(s.kh * s.kw * s.cin))
+        b = jnp.zeros((s.cout,), jnp.float32)
+        params.append({
+            "qconv": qconv_ops.make_qconv_params(w, b),
+            # static calibration (identity-ish ranges; real deployments run
+            # the MinMaxObserver over a calibration set)
+            "in_scale": jnp.float32(0.05), "in_zp": jnp.int32(0),
+            "out_scale": jnp.float32(0.05), "out_zp": jnp.int32(0),
+        })
+    return params
+
+
+def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
+            *, policy: Policy = Policy.NONE, use_kernel: bool = False,
+            interpret: bool = False, inject=None) -> Tuple[jax.Array, Dict]:
+    """x: (N, H, W, 3) float in [0,1]. Returns (det map, dependability stats)."""
+    stats = {"faults_detected": jnp.zeros((), jnp.int32),
+             "checks_run": jnp.zeros((), jnp.int32)}
+    for i, (s, p) in enumerate(zip(specs, params)):
+        stride = (s.stride, s.stride)
+        if policy == Policy.ABFT:
+            x_q = quant.quantize(x, p["in_scale"], p["in_zp"])
+            bias_i32 = jnp.round(
+                p["qconv"].bias_f / (p["in_scale"] * p["qconv"].w_scale)
+            ).astype(jnp.int32)
+            res = abft_mod.abft_qconv2d(
+                x_q, p["in_zp"], p["qconv"].w_q, bias_i32,
+                stride=stride, padding="SAME",
+                inject=inject if i == len(specs) // 2 else None)
+            rq = quant.requant_scale(p["in_scale"], p["qconv"].w_scale,
+                                     p["out_scale"])
+            y_q = quant.requantize(res.acc, rq, p["out_zp"])
+            x = (y_q.astype(jnp.float32) - p["out_zp"]) * p["out_scale"]
+            stats["faults_detected"] = stats["faults_detected"] + res.faults_detected
+            stats["checks_run"] = stats["checks_run"] + 1
+        else:
+            x = qconv_ops.qconv_act(
+                x, p["qconv"], p["in_scale"], p["in_zp"],
+                p["out_scale"], p["out_zp"], stride=stride, padding="SAME",
+                use_kernel=use_kernel, interpret=interpret)
+        if i < len(specs) - 1:
+            x = jax.nn.relu(x)
+    return x, stats
+
+
+def layer_forward(s: ConvSpec, p: Dict[str, Any], x: jax.Array,
+                  quantized: bool = True, interpret: bool = True) -> jax.Array:
+    """One layer, float in → float out; quantized=False is the float oracle
+    (dequantized weights, float conv) used by the Fig.-4-style validation."""
+    stride = (s.stride, s.stride)
+    if quantized:
+        return qconv_ops.qconv_act(
+            x, p["qconv"], p["in_scale"], p["in_zp"],
+            p["out_scale"], p["out_zp"], stride=stride, padding="SAME",
+            use_kernel=True, interpret=interpret)
+    w = p["qconv"].w_q.astype(jnp.float32) * p["qconv"].w_scale
+    y = jax.lax.conv_general_dilated(
+        x, w, stride, "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["qconv"].bias_f
+
+
+def float_forward(specs: List[ConvSpec], params: List[Dict[str, Any]],
+                  x: jax.Array) -> jax.Array:
+    """Float-oracle network forward (dequantized weights)."""
+    for i, (s, p) in enumerate(zip(specs, params)):
+        x = layer_forward(s, p, x, quantized=False)
+        if i < len(specs) - 1:
+            x = jax.nn.relu(x)
+    return x

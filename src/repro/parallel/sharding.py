@@ -1,0 +1,161 @@
+"""Logical sharding rules: parameter-tree paths → PartitionSpec.
+
+Axis scheme (single-pod 16×16 and multi-pod 2×16×16 production meshes):
+
+  batch          → dp axes ("data",) or ("pod", "data")
+  heads / d_ff / vocab / experts' E  → "model"   (tensor / expert parallel)
+  weight non-TP dim                  → "data" when cfg.fsdp_params (ZeRO-3)
+
+Rules are name-based over the parameter pytree, so every model family in the
+zoo gets its specs from this one table — the same way MaxText's
+logical-axis-rules work, without requiring models to annotate tensors.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _rules(cfg: ArchConfig, dp: Tuple[str, ...], mdl: str,
+           moe_mode: str = "ep"):
+    """name → spec-builder. fsdp shards one non-TP dim over the dp axes."""
+    fsdp = dp if cfg.fsdp_params else None
+
+    # MoE expert layout must match the shard_map in_specs
+    # (models.transformer.moe_mode): EP when E % model_size == 0, else
+    # expert-TP (de → model, d → dp).
+    if moe_mode == "ep":
+        we_g = we_i = P(mdl, None, dp)
+        we_o = P(mdl, dp, None)
+    else:
+        we_g = we_i = P(None, dp, mdl)
+        we_o = P(None, mdl, dp)
+
+    # (leading L axis is added automatically for stacked block params)
+    table = {
+        # transformer attention
+        "wq": P(fsdp, mdl), "wk": P(fsdp, mdl), "wv": P(fsdp, mdl),
+        "wo": P(mdl, fsdp),
+        "bq": P(mdl), "bk": P(mdl), "bv": P(mdl),
+        # dense mlp
+        "wi": P(fsdp, mdl), "wg": P(fsdp, mdl), "wd": P(mdl, fsdp),
+        "mlp_g": P(fsdp, mdl), "mlp_i": P(fsdp, mdl), "mlp_o": P(mdl, fsdp),
+        "router": P(None, None),
+        "we_g": we_g, "we_i": we_i, "we_o": we_o,
+        # W8A8 (cfg.quant): int8 weights shard like their float originals,
+        # per-out-channel scales follow the output dim's placement
+        "wi_q": P(fsdp, mdl), "wg_q": P(fsdp, mdl), "wd_q": P(mdl, fsdp),
+        "wi_s": P(mdl), "wg_s": P(mdl), "wd_s": P(fsdp),
+        "we_g_q": we_g, "we_i_q": we_i, "we_o_q": we_o,
+        "we_g_s": P(*(we_g[:1] + we_g[2:])),
+        "we_i_s": P(*(we_i[:1] + we_i[2:])),
+        "we_o_s": P(*(we_o[:1] + we_o[2:])),
+        "ws_g": P(None, mdl), "ws_i": P(None, mdl), "ws_o": P(mdl, None),
+        "ws_g_q": P(None, mdl), "ws_i_q": P(None, mdl), "ws_o_q": P(mdl, None),
+        "ws_g_s": P(mdl), "ws_i_s": P(mdl), "ws_o_s": P(None),
+        # rwkv time/channel mix
+        "wr": P(fsdp, mdl),
+        "cm_wk": P(fsdp, mdl), "cm_wv": P(mdl, fsdp), "cm_wr": P(fsdp, None),
+        "ddl_A": P(fsdp, None), "ddl_B": P(None, None, fsdp),
+        "dec_A": P(fsdp, None), "dec_B": P(None, fsdp),
+        # griffin
+        "w_x": P(fsdp, mdl), "w_gate": P(fsdp, mdl),
+        "conv_w": P(None, mdl),
+        "w_a": P(None, mdl), "w_i": P(None, mdl),
+        "w_out": P(mdl, fsdp),
+        "lam": P(mdl),
+        # embeddings
+        "embed": P(mdl, fsdp),
+        "lm_head": P(fsdp, mdl),
+    }
+    return table
+
+
+def _spec_for(name: str, ndim: int, stacked: bool, table) -> P:
+    spec = table.get(name)
+    if spec is None:
+        return P()                     # norms, scalars, small adapters: replicated
+    if stacked:
+        spec = P(*((None,) + tuple(spec)))
+    # pad/truncate to tensor rank (e.g. biases)
+    parts = tuple(spec)
+    if len(parts) < ndim:
+        parts = parts + (None,) * (ndim - len(parts))
+    elif len(parts) > ndim:
+        parts = parts[:ndim]
+    return P(*parts)
+
+
+def param_specs(cfg: ArchConfig, params: Any,
+                dp: Tuple[str, ...] = ("data",), mdl: str = "model",
+                mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching ``params``.
+
+    ``mesh`` (when given) selects the MoE expert layout: EP if n_experts
+    divides the model-axis size, expert-TP otherwise (mixtral 8e on a
+    16-way axis).  Without a mesh the EP layout is assumed.
+    """
+    if cfg.layout == "dp":
+        # pure-DP layout: the model axis is folded into dp by the caller;
+        # no tensor dimension shards over it
+        mdl = None
+    mode = "ep"
+    if cfg.moe is not None and mesh is not None and mdl is not None:
+        from repro.models.transformer import moe_mode
+        mode = moe_mode(cfg, int(mesh.shape[mdl]))
+    table = _rules(cfg, dp, mdl, moe_mode=mode)
+
+    def spec(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        stacked = any(n in ("blocks", "dense_blocks", "moe_blocks",
+                            "rec_blocks", "attn_blocks", "tail_rec")
+                      for n in names[:-1])
+        # rwkv 'wk'/'wv'/'wo' are (d, d) projections: same rule applies
+        return _spec_for(name, leaf.ndim, stacked, table)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def shardings_for(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(dp: Tuple[str, ...] = ("data",)) -> Any:
+    """tokens/labels (B, S) sharded over batch."""
+    return P(dp, None)
+
+
+def cache_specs(cfg: ArchConfig, dp: Tuple[str, ...], mdl: str) -> Any:
+    """KV / recurrent cache specs by family (batch over dp, heads/width over model)."""
+    dp = dp or None        # () → replicated batch (e.g. long_500k, B=1)
+    if cfg.family == "transformer":
+        from repro.models.transformer import KVCache
+        # Shard the cache's TIME dim over the model axis (flash-decoding):
+        # GQA KV heads (8) rarely divide the axis (16), but T always does.
+        # XLA SPMD turns the softmax reductions over the sharded T into
+        # local reductions + tiny all-reduces of per-shard partials — each
+        # chip reads 1/msize of the cache instead of all of it, and the
+        # 57 GB/dev replicated cache (kimi-k2 @ 32k) drops to 3.6 GB/dev.
+        tshard = mdl if (mdl is not None and mdl not in (dp or ())) else None
+        kv = P(None, dp, tshard, None, None)   # (L, B, T, KV, hd)
+        if cfg.quant_kv:
+            sc = P(None, dp, tshard, None)     # (L, B, T, KV) scales
+            return KVCache(kv, kv, P(dp), sc, sc)
+        return KVCache(kv, kv, P(dp))          # per-row lengths (B,)
+    if cfg.family == "rwkv":
+        from repro.models.rwkv6 import RwkvCache
+        return RwkvCache(P(None, dp, mdl), P(None, dp, None, None, None),
+                         P(None, dp, mdl), P())
+    if cfg.family == "hybrid":
+        from repro.models.griffin import GriffinCache
+        return GriffinCache(P(None, dp, None, mdl), P(None, dp, mdl),
+                            P(None, dp, None, None, None),
+                            P(None, dp, None, None, None), P())
+    raise ValueError(cfg.family)

@@ -1,0 +1,158 @@
+"""Optimizers: AdamW and Adafactor (factored second moment, for ≥100B params).
+
+Self-contained (no optax dependency).  Both are (init_fn, update_fn) pairs
+operating on pytrees; state shardings derive from the param shardings
+(train/steps.py), which is what lets kimi-k2-1t fit: Adafactor's factored
+state is O(m+n) per (m, n) matrix instead of Adam's O(2·m·n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    name: str
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m, v
+
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        mflat = treedef.flatten_up_to(state["m"])
+        vflat = treedef.flatten_up_to(state["v"])
+        ups, ms, vs = [], [], []
+        for g, m, v, p in zip(gflat, mflat, vflat, flat):
+            u, m2, v2 = upd(g, m, v, p)
+            ups.append(u)
+            ms.append(m2)
+            vs.append(v2)
+        unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+        return unf(ups), {"m": unf(ms), "v": unf(vs)}
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored second moment
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return jax.tree_util.tree_map(st, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms = jnp.sqrt(
+                    vr[..., :, None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps))
+                u = g / jnp.maximum(rms, eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS of update ≤ clip_threshold)
+            urms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, urms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), new_s
+
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        sflat = treedef.flatten_up_to(state)
+        ups, ns = [], []
+        for g, s, p in zip(gflat, sflat, flat):
+            u, s2 = upd(g, s, p)
+            ups.append(u)
+            ns.append(s2)
+        return (jax.tree_util.tree_unflatten(treedef, ups),
+                jax.tree_util.tree_unflatten(treedef, ns))
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    if name == "sgdm":
+        return sgdm(lr=lr)
+    raise ValueError(name)
+
+
+def sgdm(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        def upd(g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return m
+        m = jax.tree_util.tree_map(upd, grads, state["m"])
+        updates = jax.tree_util.tree_map(
+            lambda mm, p: (-lr * mm).astype(p.dtype), m, params)
+        return updates, {"m": m}
+
+    return Optimizer(init, update, "sgdm")

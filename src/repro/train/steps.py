@@ -1,0 +1,211 @@
+"""Train / serve step builders — the functions the launcher jits and the
+dry-run lowers.
+
+``make_train_step`` returns a pure (state, batch) → (state, metrics) function
+plus the sharding pytrees for its inputs/outputs, so launch/dryrun.py can do
+
+    jax.jit(step, in_shardings=…, out_shardings=…).lower(...).compile()
+
+with no further knowledge of the model family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api as model_api
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.transformer import ShardCtx
+from repro.parallel import sharding as shd
+from repro.train import optim as optim_mod
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array,
+                     optimizer: Optional[optim_mod.Optimizer] = None) -> TrainState:
+    optimizer = optimizer or optim_mod.make_optimizer(cfg.optimizer)
+    params = model_api.init_params(cfg, key)
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Sharding derivation
+# ---------------------------------------------------------------------------
+
+
+def _opt_state_specs(pspecs, params, opt_name: str):
+    """Optimizer state specs follow param specs (Adafactor drops one dim).
+
+    The factored/unfactored split must mirror optim.adafactor exactly:
+    it factors on ``param.ndim >= 2`` (stacked 1-D scales are 2-D ⇒
+    factored), so we decide from the param leaf, padding short specs to
+    the tensor rank first.
+    """
+    if opt_name == "adamw":
+        return {"m": pspecs, "v": pspecs}
+    if opt_name == "sgdm":
+        return {"m": pspecs}
+
+    # adafactor: vr drops the last dim's entry, vc drops the second-to-last
+    def fac(spec: P, p):
+        parts = tuple(spec)
+        parts = parts + (None,) * (p.ndim - len(parts))
+        if p.ndim >= 2:
+            return {"vr": P(*parts[:-1]), "vc": P(*(parts[:-2] + parts[-1:]))}
+        return {"v": P(*parts)}
+
+    sflat = jax.tree_util.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    pflat, pdef = jax.tree_util.tree_flatten(params)
+    assert len(sflat) == len(pflat)
+    return jax.tree_util.tree_unflatten(
+        pdef, [fac(s, p) for s, p in zip(sflat, pflat)])
+
+
+def train_state_specs(cfg: ArchConfig, params, dp, mdl, opt_name: str,
+                      mesh=None):
+    pspecs = shd.param_specs(cfg, params, dp, mdl, mesh=mesh)
+    return TrainState(pspecs, _opt_state_specs(pspecs, params, opt_name), P())
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, ctx: Optional[ShardCtx] = None,
+                    optimizer: Optional[optim_mod.Optimizer] = None,
+                    grad_clip: float = 1.0):
+    optimizer = optimizer or optim_mod.make_optimizer(cfg.optimizer)
+    n_micro = max(cfg.grad_accum, 1)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: model_api.loss_fn(cfg, p, batch, ctx), has_aux=True
+        )(params)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            # microbatched gradient accumulation: activation memory scales
+            # with B/n_micro while the optimizer still sees the full-batch
+            # gradient — the capacity lever for 405B-class models at 4k seq.
+            # Grads accumulate in f32 regardless of compute dtype.
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            # the f32 accumulator MUST inherit the parameter sharding — left
+            # unconstrained, XLA SPMD replicates it and re-reduces every
+            # microbatch (measured 10× collective blow-up on llama3-405b)
+            def pin(tree):
+                if ctx is None:
+                    return tree
+                from jax.sharding import NamedSharding
+                from repro.parallel import sharding as shd
+                specs = shd.param_specs(cfg, state.params, ctx.dp, ctx.model,
+                                        mesh=ctx.mesh)
+                sh = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(ctx.mesh, s), specs,
+                    is_leaf=lambda x: isinstance(x, P))
+                return jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, tree, sh)
+
+            def acc_body(carry, microbatch):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(state.params, microbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (pin(g_acc), loss_acc + loss), metrics
+
+            g0 = pin(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (grads, loss), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+
+        grads, gnorm = optim_mod.clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params, state.step)
+        params = jax.tree_util.tree_map(jnp.add, state.params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, ctx: Optional[ShardCtx] = None):
+    def eval_step(params, batch):
+        loss, metrics = model_api.loss_fn(cfg, params, batch, ctx)
+        return metrics
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int,
+                      ctx: Optional[ShardCtx] = None):
+    def prefill_step(params, batch):
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        logits, cache = model_api.prefill(cfg, params, tokens, max_len, ctx,
+                                          embeds=embeds)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, ctx: Optional[ShardCtx] = None):
+    def decode_step(params, token, cache):
+        logits, cache = model_api.decode_step(cfg, params, token, cache, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins for the dry-run; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for one (arch × shape) cell.
+
+    train/prefill: token batch (+labels for train). [audio]/[vlm] archs get
+    precomputed frame/patch embeddings instead of tokens (stub frontend).
+    decode: one new token + the KV/recurrent cache at seq_len.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.input_mode == "embeddings":
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.input_mode == "embeddings":
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+        return batch
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: model_api.init_cache(cfg, B, S))
+        return {"token": jax.ShapeDtypeStruct((B,), jnp.int32), "cache": cache}
+    raise ValueError(shape.kind)
+
+
+def abstract_train_state(cfg: ArchConfig,
+                         optimizer: Optional[optim_mod.Optimizer] = None) -> TrainState:
+    """eval_shape'd TrainState (no device allocation — dry-run input)."""
+    optimizer = optimizer or optim_mod.make_optimizer(cfg.optimizer)
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.key(0), optimizer))

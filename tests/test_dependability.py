@@ -1,0 +1,201 @@
+"""Dependability layer: inject → detect → recover, property-tested.
+
+System invariants:
+  * ABFT detects EVERY single bit flip in the accumulator (exact mod-2^32
+    checksums — zero false negatives), and recovery restores the fault-free
+    result bit-for-bit.
+  * ABFT raises NO false alarms on clean runs (zero false positives).
+  * Bitwise 3-way majority corrects any single corrupted replica exactly.
+  * SEU injection primitives flip exactly what they claim to flip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import abft, fault_injection as fi, redundancy
+from repro.core.dependability import Policy, dependable_qmatmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _case(rng, m=32, k=64, n=48):
+    x_q = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int32), jnp.int8)
+    w_q = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int32), jnp.int8)
+    bias = jnp.asarray(rng.integers(-500, 500, (n,), dtype=np.int32))
+    x_zp = jnp.int32(3)
+    return x_q, w_q, bias, x_zp
+
+
+# ---------------------------------------------------------------------------
+# ABFT
+# ---------------------------------------------------------------------------
+
+
+def test_abft_clean_run_no_false_positives():
+    rng = np.random.default_rng(0)
+    x_q, w_q, bias, x_zp = _case(rng)
+    res = abft.abft_qmatmul(x_q, x_zp, w_q, bias)
+    assert bool(res.ok)
+    assert int(res.faults_detected) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 31))
+def test_abft_detects_and_corrects_any_single_bitflip(seed, bit):
+    """Exactness property: every (position, bit) flip is detected + corrected."""
+    rng = np.random.default_rng(seed)
+    x_q, w_q, bias, x_zp = _case(rng, m=8, k=16, n=12)
+
+    clean = abft.abft_qmatmul(x_q, x_zp, w_q, bias)
+    r, c = int(rng.integers(0, 8)), int(rng.integers(0, 12))
+
+    def inject(acc):
+        return acc.at[r, c].set(acc[r, c] ^ jnp.int32(np.int32(np.uint32(1) << np.uint32(bit))))
+
+    res = abft.abft_qmatmul(x_q, x_zp, w_q, bias, inject=inject)
+    assert int(res.faults_detected) >= 1          # detected
+    assert bool(res.ok)                           # corrected
+    np.testing.assert_array_equal(np.asarray(res.acc), np.asarray(clean.acc))
+
+
+def test_abft_conv_detects_and_corrects():
+    rng = np.random.default_rng(5)
+    x_q = jnp.asarray(rng.integers(-128, 128, (1, 10, 10, 8), dtype=np.int32), jnp.int8)
+    w_q = jnp.asarray(rng.integers(-127, 128, (3, 3, 8, 16), dtype=np.int32), jnp.int8)
+    bias = jnp.asarray(rng.integers(-100, 100, (16,), dtype=np.int32))
+    clean = abft.abft_qconv2d(x_q, jnp.int32(2), w_q, bias)
+    assert bool(clean.ok) and int(clean.faults_detected) == 0
+
+    def inject(acc):
+        return acc.at[0, 4, 7, 3].add(jnp.int32(1 << 20))
+
+    res = abft.abft_qconv2d(x_q, jnp.int32(2), w_q, bias, inject=inject)
+    assert int(res.faults_detected) >= 1
+    assert bool(res.ok)
+    np.testing.assert_array_equal(np.asarray(res.acc), np.asarray(clean.acc))
+
+
+def test_abft_overhead_is_small():
+    """Checksum FLOPs ≈ matmul/N — structural property of the construction."""
+    m, k, n = 128, 256, 128
+    matmul_flops = 2 * m * k * n
+    checksum_flops = 2 * m * k + m * n   # X·(W1) matvec + rowsum
+    assert checksum_flops / matmul_flops < 2.0 / n + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# NMR voting
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_tmr_corrects_single_corrupted_replica(seed):
+    rng = np.random.default_rng(seed)
+    clean = jnp.asarray(rng.normal(size=(17, 9)).astype(np.float32))
+    corrupted = fi.flip_one_bit(clean, jax.random.key(seed))
+    # corrupt a different replica each time
+    for bad_idx in range(3):
+        replicas = [clean, clean, clean]
+        replicas[bad_idx] = corrupted
+        voted = redundancy.vote(replicas)
+        np.testing.assert_array_equal(np.asarray(voted), np.asarray(clean))
+
+
+def test_dmr_detects_disagreement():
+    a = jnp.arange(12, dtype=jnp.int32).reshape(3, 4)
+    b = a.at[1, 2].add(1)
+    assert bool(redundancy.agree([a, a]))
+    assert not bool(redundancy.agree([a, b]))
+
+
+def test_vote_int8_and_bf16_dtypes():
+    for dtype in (jnp.int8, jnp.bfloat16, jnp.int32):
+        x = jnp.asarray(np.arange(-8, 8), dtype=dtype)
+        bad = fi.flip_one_bit(x, jax.random.key(1))
+        voted = redundancy.vote([x, bad, x])
+        np.testing.assert_array_equal(np.asarray(voted), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Fault injection primitives
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_flip_one_bit_changes_exactly_one_element(seed):
+    x = jnp.zeros((64,), jnp.int32)
+    y = fi.flip_one_bit(x, jax.random.key(seed))
+    diff = np.asarray(x) != np.asarray(y)
+    assert diff.sum() == 1
+    # the changed element differs in exactly one bit
+    changed = np.asarray(y)[diff][0]
+    assert bin(np.uint32(changed)).count("1") == 1
+
+
+def test_flip_rate_statistics():
+    x = jnp.zeros((4096,), jnp.int8)
+    y = fi.flip_bits_at_rate(x, jax.random.key(0), rate=0.01)
+    flipped_bits = np.unpackbits(np.asarray(y).view(np.uint8)).sum()
+    total_bits = 4096 * 8
+    # binomial(32768, 0.01): mean 327, std ~18 — accept ±6σ
+    assert 200 < flipped_bits < 450
+
+
+def test_inject_into_pytree():
+    params = {"w": jnp.zeros((32, 32), jnp.float32), "b": jnp.zeros((32,), jnp.float32)}
+    broken = fi.inject_into_pytree(params, jax.random.key(2), n_flips=1)
+    ndiff = sum(int((np.asarray(a) != np.asarray(b)).sum())
+                for a, b in zip(jax.tree_util.tree_leaves(params),
+                                jax.tree_util.tree_leaves(broken)))
+    assert ndiff == 1
+
+
+# ---------------------------------------------------------------------------
+# Policy layer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", [Policy.NONE, Policy.ABFT, Policy.TMR])
+def test_policies_agree_on_clean_input(policy):
+    rng = np.random.default_rng(9)
+    x_q, w_q, bias, x_zp = _case(rng, m=16, k=32, n=24)
+    scale = jnp.full((24,), 1e-3, jnp.float32)
+    y, stats = dependable_qmatmul(policy, x_q, x_zp, w_q, bias, scale, jnp.int32(0))
+    y_ref, _ = dependable_qmatmul(Policy.NONE, x_q, x_zp, w_q, bias, scale, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_abft_policy_recovers_from_injected_fault():
+    rng = np.random.default_rng(10)
+    x_q, w_q, bias, x_zp = _case(rng, m=16, k=32, n=24)
+    scale = jnp.full((24,), 1e-3, jnp.float32)
+
+    def inject(acc):
+        return acc.at[3, 5].add(jnp.int32(1 << 15))
+
+    y_clean, _ = dependable_qmatmul(Policy.ABFT, x_q, x_zp, w_q, bias, scale, jnp.int32(0))
+    y_faulty, stats = dependable_qmatmul(Policy.ABFT, x_q, x_zp, w_q, bias, scale,
+                                         jnp.int32(0), inject=inject)
+    assert int(stats["faults_detected"]) >= 1
+    np.testing.assert_array_equal(np.asarray(y_faulty), np.asarray(y_clean))
+
+
+def test_none_policy_is_vulnerable():
+    """Sanity: without dependability, the same fault silently corrupts output."""
+    rng = np.random.default_rng(10)
+    x_q, w_q, bias, x_zp = _case(rng, m=16, k=32, n=24)
+    scale = jnp.full((24,), 1e-3, jnp.float32)
+
+    def inject(acc):
+        return acc.at[3, 5].add(jnp.int32(1 << 20))
+
+    y_clean, _ = dependable_qmatmul(Policy.NONE, x_q, x_zp, w_q, bias, scale, jnp.int32(0))
+    y_faulty, _ = dependable_qmatmul(Policy.NONE, x_q, x_zp, w_q, bias, scale,
+                                     jnp.int32(0), inject=inject)
+    assert (np.asarray(y_clean) != np.asarray(y_faulty)).any()

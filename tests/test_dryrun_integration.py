@@ -1,0 +1,65 @@
+"""Integration: the launch layer lowers+compiles real configs on a small
+fake-device mesh (2×4), including the hillclimb variants.  Runs in a
+subprocess so the main pytest process keeps its single-device view."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import registry
+from repro.launch import dryrun, mesh as mesh_mod
+from repro.models.config import SHAPES
+import dataclasses, tempfile, pathlib
+
+mesh = mesh_mod.make_mesh((2, 4))
+out = pathlib.Path(tempfile.mkdtemp())
+
+cases = [
+    # (arch, shape, overrides) — spans families and perf levers
+    ("smollm-135m", "train_4k", {"layout": "dp", "remat": "none"}),
+    ("qwen3-0.6b", "decode_32k", {"quant_kv": True}),
+    ("mixtral-8x7b", "decode_32k", {"quant": "w8a8_ffn"}),   # expert-TP path
+    ("rwkv6-1.6b", "long_500k", {}),
+    ("recurrentgemma-2b", "decode_32k", {}),
+    ("musicgen-large", "prefill_32k", {}),                   # embeds stub
+    ("llama3-405b", "train_4k", {"seq_shard": True, "grad_accum": 2}),
+]
+# shrink the big ones so an 8-device CPU compile stays fast
+shrink = {"n_layers": 2}
+for arch, shape_name, ov in cases:
+    cfg = registry.get(arch)
+    cfg = dataclasses.replace(cfg, **shrink, **ov)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, n_dense_layers=min(cfg.moe.n_dense_layers, 1)))
+    shape = SHAPES[shape_name]
+    # shrink shapes too (keep divisibility by mesh axes)
+    shape = dataclasses.replace(shape, seq_len=min(shape.seq_len, 2048),
+                                global_batch=min(shape.global_batch, 8))
+    rec = dryrun.run_cell(cfg, shape, mesh, "2x4", out, verbose=False,
+                          save_hlo=False)
+    assert rec["hlo_analysis"]["flops"] > 0, (arch, shape_name)
+    print("OK", arch, shape_name)
+print("DRYRUN_INTEGRATION_OK")
+"""
+
+
+@pytest.mark.timeout(1200)
+def test_dryrun_small_mesh_all_families():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "DRYRUN_INTEGRATION_OK" in out.stdout

@@ -1,0 +1,115 @@
+"""Property tests for the quantization core (hypothesis-driven).
+
+Invariants under test:
+  * quantize/dequantize round-trip error is bounded by scale/2 inside range
+  * zero is exactly representable (required for zp-padding correctness)
+  * fp32 requantization agrees with the gemmlowp integer-exact oracle except
+    (at most) off-by-one on 0.5-ULP ties, at a tiny rate
+  * fake_quant is idempotent and its STE gradient masks saturated entries
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@st.composite
+def float_arrays(draw, max_dim=64):
+    n = draw(st.integers(1, max_dim))
+    lo = draw(st.floats(-100.0, 0.0))
+    hi = draw(st.floats(0.001, 100.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=(n,)).astype(np.float32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(float_arrays())
+def test_quantize_roundtrip_bounded(x):
+    scale, zp = quant.affine_qparams(jnp.min(x), jnp.max(x))
+    q = quant.quantize(jnp.asarray(x), scale, zp)
+    deq = (q.astype(jnp.float32) - zp) * scale
+    err = np.max(np.abs(np.asarray(deq) - x))
+    assert err <= float(scale) * 0.501 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(float_arrays())
+def test_zero_exactly_representable(x):
+    scale, zp = quant.affine_qparams(jnp.min(x), jnp.max(x))
+    q0 = quant.quantize(jnp.zeros(()), scale, zp)
+    deq0 = (q0.astype(jnp.float32) - zp) * scale
+    assert float(deq0) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.floats(1e-6, 0.99),
+)
+def test_fp32_requant_matches_gemmlowp(seed, multiplier):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-(2**20), 2**20, size=(256, 8), dtype=np.int64).astype(np.int32)
+    out_zp = int(rng.integers(-20, 20))
+
+    got = np.asarray(quant.requantize(jnp.asarray(acc), jnp.float32(multiplier),
+                                      jnp.int32(out_zp)))
+    want = quant.requantize_gemmlowp_np(acc, multiplier, out_zp)
+
+    diff = np.abs(got.astype(np.int32) - want.astype(np.int32))
+    # agreement: identical except possibly off-by-one on round-to-even ties
+    assert diff.max() <= 1
+    mismatch_rate = (diff > 0).mean()
+    assert mismatch_rate < 1e-2, mismatch_rate
+
+
+def test_quantize_multiplier_reconstruction():
+    for real in [0.25, 0.5, 0.75, 1e-4, 0.9999, 0.0001234]:
+        qm, shift = quant.quantize_multiplier_np(real)
+        approx = qm * 2.0 ** (shift - 31)
+        assert abs(approx - real) / real < 1e-8
+
+
+def test_weight_quant_per_channel_symmetric():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    qt = quant.quantize_weight(w, axis=-1)
+    assert qt.q.dtype == jnp.int8
+    assert qt.scale.shape == (16,)
+    assert int(qt.zero_point) == 0
+    assert int(jnp.max(jnp.abs(qt.q.astype(jnp.int32)))) <= 127
+    # per-channel reconstruction error bounded by scale/2
+    deq = qt.dequantize()
+    err = jnp.max(jnp.abs(deq - w), axis=0)
+    assert np.all(np.asarray(err) <= np.asarray(qt.scale) * 0.5 + 1e-7)
+
+
+def test_fake_quant_idempotent_and_ste():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32) * 3)
+    scale, zp = quant.affine_qparams(jnp.min(x), jnp.max(x))
+    y = quant.fake_quant(x, scale, zp)
+    y2 = quant.fake_quant(y, scale, zp)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-6)
+
+    # STE: grad == 1 in-range, 0 when saturated
+    big = jnp.asarray([1e6, -1e6, 0.0])
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant(v, scale, zp)))(big)
+    assert float(g[0]) == 0.0 and float(g[1]) == 0.0 and float(g[2]) == 1.0
+
+
+def test_observer_tracks_range():
+    obs = quant.MinMaxObserver(jnp.zeros(()), jnp.zeros(()), momentum=0.9)
+    for i in range(100):
+        obs = obs.update(jnp.asarray([-2.0, 3.0]))
+    scale, zp = obs.qparams()
+    assert float(scale) > 0
+    # after many updates EMA approaches the true range
+    assert float(obs.max_val) > 2.5 and float(obs.min_val) < -1.5

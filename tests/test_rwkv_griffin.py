@@ -1,0 +1,206 @@
+"""RWKV6 + Griffin: chunked/parallel forms vs recurrent oracles, decode
+consistency, gradient health."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import rwkv6, griffin
+from repro.models.config import ArchConfig, RecurrentConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rwkv_cfg(**kw):
+    base = dict(name="rwkv-t", family="rwkv", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=1, d_ff=64, vocab_size=128,
+                recurrent=RecurrentConfig(kind="rwkv6", head_dim=8),
+                compute_dtype="float32", sub_quadratic=True)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def griffin_cfg(**kw):
+    base = dict(name="grif-t", family="hybrid", n_layers=5, d_model=32,
+                n_heads=4, n_kv_heads=1, d_ff=64, vocab_size=128, head_dim=8,
+                recurrent=RecurrentConfig(kind="rglru", attn_window=8,
+                                          lru_width=32, d_conv=4),
+                compute_dtype="float32", sub_quadratic=True)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,chunk", [(16, 4), (17, 8), (32, 32), (9, 16)])
+def test_wkv_chunked_matches_scan(T, chunk):
+    rng = np.random.default_rng(T * 31 + chunk)
+    B, H, hd = 2, 3, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(B, T, H, hd)).astype(np.float32))
+               for _ in range(3))
+    # decays in a realistic range (0.4 .. 0.999)
+    w = jnp.asarray(rng.uniform(0.4, 0.999, size=(B, T, H, hd)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(H, hd)).astype(np.float32)) * 0.3
+
+    o_ref, s_ref = rwkv6.wkv_scan(r, k, v, w, u)
+    o_chk, s_chk = rwkv6.wkv_chunked(r, k, v, w, u, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o_chk), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_chunked_with_initial_state():
+    rng = np.random.default_rng(0)
+    B, T, H, hd = 1, 12, 2, 4
+    mk = lambda: jnp.asarray(rng.normal(size=(B, T, H, hd)).astype(np.float32))
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(0.5, 0.99, size=(B, T, H, hd)).astype(np.float32))
+    u = jnp.zeros((H, hd), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, hd, hd)).astype(np.float32))
+    o_ref, s_ref = rwkv6.wkv_scan(r, k, v, w, u, s0)
+    o_chk, s_chk = rwkv6.wkv_chunked(r, k, v, w, u, s0, chunk=5)
+    np.testing.assert_allclose(np.asarray(o_chk), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 model
+# ---------------------------------------------------------------------------
+
+
+def test_rwkv_forward_finite():
+    cfg = rwkv_cfg()
+    params = rwkv6.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    out = rwkv6.forward(cfg, params, tokens)
+    assert out.logits.shape == (2, 16, cfg.vocab_size)
+    assert np.isfinite(np.asarray(out.logits, np.float32)).all()
+
+
+def test_rwkv_decode_matches_forward():
+    cfg = rwkv_cfg()
+    params = rwkv6.init_params(cfg, jax.random.key(0))
+    B, S = 2, 10
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full = rwkv6.forward(cfg, params, tokens)
+    cache = rwkv6.init_cache(cfg, B, max_len=S)
+    outs = []
+    for t in range(S):
+        logits, cache = rwkv6.decode_step(cfg, params, tokens[:, t], cache)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full.logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_prefill_then_decode():
+    cfg = rwkv_cfg()
+    params = rwkv6.init_params(cfg, jax.random.key(0))
+    B, S = 1, 9
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab_size)
+    full = rwkv6.forward(cfg, params, tokens)
+    logits_p, cache = rwkv6.prefill(cfg, params, tokens[:, :S], max_len=S + 2)
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1], np.float32),
+                               np.asarray(full.logits[:, S - 1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+    logits_d, _ = rwkv6.decode_step(cfg, params, tokens[:, S], cache)
+    np.testing.assert_allclose(np.asarray(logits_d, np.float32),
+                               np.asarray(full.logits[:, S], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_grads_finite():
+    cfg = rwkv_cfg()
+    params = rwkv6.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: rwkv6.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for l in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(l, np.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# Griffin / RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def test_rglru_parallel_matches_step():
+    rng = np.random.default_rng(1)
+    B, T, W = 2, 11, 16
+    x = jnp.asarray(rng.normal(size=(B, T, W)).astype(np.float32))
+    g = jnp.asarray(rng.uniform(0.1, 0.9, size=(B, T, W)).astype(np.float32))
+    lam = jnp.asarray(rng.uniform(0.5, 3.0, size=(W,)).astype(np.float32))
+    h_par = griffin.rglru_parallel(x, g, lam)
+    h = jnp.zeros((B, W), jnp.float32)
+    seq = []
+    for t in range(T):
+        h = griffin.rglru_step(x[:, t], g[:, t], lam, h)
+        seq.append(h)
+    h_seq = jnp.stack(seq, axis=1)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_seq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_griffin_forward_finite():
+    cfg = griffin_cfg()
+    params = griffin.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab_size)
+    out = griffin.forward(cfg, params, tokens)
+    assert out.logits.shape == (2, 12, cfg.vocab_size)
+    assert np.isfinite(np.asarray(out.logits, np.float32)).all()
+
+
+def test_griffin_decode_matches_forward():
+    cfg = griffin_cfg()
+    params = griffin.init_params(cfg, jax.random.key(0))
+    B, S = 1, 12                       # past the window (8)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    full = griffin.forward(cfg, params, tokens)
+    cache = griffin.init_cache(cfg, B, max_len=S)
+    outs = []
+    for t in range(S):
+        logits, cache = griffin.decode_step(cfg, params, tokens[:, t], cache)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full.logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_griffin_prefill_then_decode():
+    cfg = griffin_cfg()
+    params = griffin.init_params(cfg, jax.random.key(0))
+    B, S = 1, 10
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab_size)
+    full = griffin.forward(cfg, params, tokens)
+    logits_p, cache = griffin.prefill(cfg, params, tokens[:, :S], max_len=S + 2)
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1], np.float32),
+                               np.asarray(full.logits[:, S - 1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+    logits_d, _ = griffin.decode_step(cfg, params, tokens[:, S], cache)
+    np.testing.assert_allclose(np.asarray(logits_d, np.float32),
+                               np.asarray(full.logits[:, S], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_griffin_grads_finite():
+    cfg = griffin_cfg()
+    params = griffin.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: griffin.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for l in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(l, np.float32)).all()

@@ -1,0 +1,118 @@
+"""W8A8 quantized FFN (cfg.quant="w8a8_ffn") — the paper's integer-arithmetic
+technique as a first-class LM feature.  Property tests via hypothesis on the
+weight quantizer; numeric agreement vs the float path on dense + MoE."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import transformer as tfm
+from repro.models.config import ArchConfig, MoEConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def base_cfg(**kw):
+    d = dict(name="t", family="transformer", n_layers=2, d_model=32,
+             n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128, head_dim=8,
+             compute_dtype="float32")
+    d.update(kw)
+    return ArchConfig(**d)
+
+
+MOE = MoEConfig(n_experts=4, top_k=2, d_expert=16, n_shared_experts=1,
+                n_dense_layers=1, capacity_factor=8.0)
+
+
+# ------------------------------ quantizer props -----------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 24), st.integers(2, 24),
+       st.floats(0.01, 100.0), st.integers(0, 2**31 - 1))
+def test_quantize_ffn_weight_roundtrip(k, n, scale_mag, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((k, n)) * scale_mag, jnp.float32)
+    w_q, w_s = tfm.quantize_ffn_weight(w)
+    assert w_q.dtype == jnp.int8 and w_s.shape == (n,)
+    # dequantization error bounded by half a step per element
+    deq = w_q.astype(jnp.float32) * w_s[None, :]
+    err = np.asarray(jnp.abs(deq - w))
+    step = np.asarray(w_s)[None, :]
+    assert (err <= 0.5 * step + 1e-6).all()
+    # int8 range honored, per-channel max hits ±127 (scale is tight)
+    assert int(jnp.max(jnp.abs(w_q.astype(jnp.int32)))) <= 127
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 16), st.integers(2, 16),
+       st.integers(0, 2**31 - 1))
+def test_quantize_ffn_weight_stacked(L, k, n, seed):
+    """Stacked (L, K, N) weights quantize per (layer, channel)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((L, k, n)), jnp.float32)
+    w_q, w_s = tfm.quantize_ffn_weight(w)
+    assert w_s.shape == (L, n)
+    for l in range(L):
+        q1, s1 = tfm.quantize_ffn_weight(w[l])
+        np.testing.assert_array_equal(np.asarray(w_q[l]), np.asarray(q1))
+        np.testing.assert_allclose(np.asarray(w_s[l]), np.asarray(s1),
+                                   rtol=1e-6)
+
+
+# ------------------------------ model agreement -----------------------------
+
+@pytest.mark.parametrize("moe", [None, MOE], ids=["dense", "moe"])
+def test_w8a8_matches_float_forward(moe):
+    cfg_f = base_cfg(moe=moe)
+    cfg_q = dataclasses.replace(cfg_f, quant="w8a8_ffn")
+    pf = tfm.init_params(cfg_f, jax.random.key(0))
+    pq = tfm.init_params(cfg_q, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 128)
+    of = tfm.forward(cfg_f, pf, toks).logits
+    oq = tfm.forward(cfg_q, pq, toks).logits
+    rel = float(jnp.linalg.norm(oq - of) / jnp.linalg.norm(of))
+    assert rel < 0.1, rel
+
+
+def test_w8a8_params_are_int8():
+    cfg = base_cfg(quant="w8a8_ffn", moe=MOE)
+    p = tfm.init_params(cfg, jax.random.key(0))
+    mb = p["moe_blocks"]
+    for name in ("we_g", "we_i", "we_o", "ws_g", "ws_i", "ws_o"):
+        assert name not in mb
+        assert mb[name + "_q"].dtype == jnp.int8
+        assert mb[name + "_s"].dtype == jnp.float32
+    db = p["dense_blocks"]
+    for name in ("wg", "wi", "wd"):
+        assert db[name + "_q"].dtype == jnp.int8
+
+
+def test_w8a8_decode_consistent_with_prefill():
+    """Batch prefill then token-by-token decode agree under quantization."""
+    cfg = base_cfg(quant="w8a8_ffn")
+    p = tfm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 8), 0, 128)
+    full = tfm.forward(cfg, p, toks).logits          # (1, 8, V)
+    logits, cache = tfm.prefill(cfg, p, toks, 16)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    dec, cache = tfm.decode_step(cfg, p, nxt, cache)
+    assert np.isfinite(np.asarray(dec)).all()
+
+
+def test_w8a8_sharding_specs_cover_quant_params():
+    from repro.parallel import sharding as shd
+    cfg = base_cfg(quant="w8a8_ffn", moe=MOE)
+    p = tfm.init_params(cfg, jax.random.key(0))
+    specs = shd.param_specs(cfg, p)
+    flat_p = jax.tree_util.tree_leaves_with_path(p)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: hasattr(x, "_partitions") or
+        type(x).__name__ == "PartitionSpec")
+    assert len(flat_p) == len(flat_s)
