@@ -1,0 +1,107 @@
+"""Dependability-policy overhead bench: NONE vs ABFT vs TMR throughput.
+
+Measures the steady-state cost of each policy on the quantized matmul and
+conv primitives (the Safe-NEureka-style hybrid-redundancy comparison: how
+much throughput does each protection level buy its coverage with), plus the
+campaign engine's own trial rate.
+
+    PYTHONPATH=src python -m benchmarks.campaign_bench [--fast]
+
+Prints ``campaign_bench,<name>,<key>=<val>,...`` CSV-ish lines like the
+other benches.  CPU wall-clock: relative overhead is the signal, absolute
+latency is not a TPU claim.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dependability import Policy, dependable_qconv2d, dependable_qmatmul
+
+
+def _time(f, *args, reps: int = 20):
+    out = f(*args)                      # compile
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_policy_overhead(m=256, k=512, n=256, reps=20):
+    print(f"\n=== policy overhead: qmatmul ({m}x{k}x{n} int8) ===")
+    rng = np.random.default_rng(0)
+    x_q = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int32), jnp.int8)
+    w_q = jnp.asarray(rng.integers(-127, 128, (k, n), dtype=np.int32), jnp.int8)
+    bias = jnp.asarray(rng.integers(-500, 500, (n,), dtype=np.int32))
+    scale = jnp.full((n,), 1e-3, jnp.float32)
+    zp = jnp.int32(0)
+
+    base = None
+    rows = []
+    for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
+        f = jax.jit(lambda xq, wq, p=policy: dependable_qmatmul(
+            p, xq, zp, wq, bias, scale, zp)[0])
+        t = _time(f, x_q, w_q, reps=reps)
+        base = base or t
+        gmacs = m * k * n / t / 1e9
+        rows.append((policy.value, t, t / base, gmacs))
+        print(f"campaign_bench,qmatmul_policy={policy.value},"
+              f"ms={t * 1e3:.3f},overhead_x={t / base:.2f},gmacs={gmacs:.2f}")
+    return rows
+
+
+def bench_conv_policy_overhead(h=32, w=32, cin=32, cout=32, reps=10):
+    print(f"\n=== policy overhead: qconv2d ({h}x{w}x{cin}->{cout} 3x3) ===")
+    rng = np.random.default_rng(1)
+    x_q = jnp.asarray(rng.integers(-128, 128, (1, h, w, cin), dtype=np.int32), jnp.int8)
+    w_q = jnp.asarray(rng.integers(-127, 128, (3, 3, cin, cout), dtype=np.int32), jnp.int8)
+    bias = jnp.asarray(rng.integers(-100, 100, (cout,), dtype=np.int32))
+    scale = jnp.full((cout,), 1e-3, jnp.float32)
+    zp = jnp.int32(0)
+
+    base = None
+    rows = []
+    for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
+        f = jax.jit(lambda xq, wq, p=policy: dependable_qconv2d(
+            p, xq, zp, wq, bias, scale, zp)[0])
+        t = _time(f, x_q, w_q, reps=reps)
+        base = base or t
+        rows.append((policy.value, t, t / base))
+        print(f"campaign_bench,qconv2d_policy={policy.value},"
+              f"ms={t * 1e3:.3f},overhead_x={t / base:.2f}")
+    return rows
+
+
+def bench_trial_rate(trials=200):
+    print(f"\n=== campaign engine trial rate ({trials} trials/config) ===")
+    from repro.campaign import CampaignSpec, run_campaign
+    specs = [CampaignSpec("qmatmul", p, "accumulator", "single_bitflip",
+                          trials, seed=0)
+             for p in (Policy.NONE, Policy.ABFT, Policy.TMR)]
+    t0 = time.perf_counter()
+    results = run_campaign(specs)
+    dt = time.perf_counter() - t0
+    total = sum(r.trials for r in results)
+    print(f"campaign_bench,trial_rate,trials={total},seconds={dt:.2f},"
+          f"trials_per_s={total / dt:.1f}")
+    return total / dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    reps = 5 if args.fast else 20
+    bench_policy_overhead(reps=reps)
+    bench_conv_policy_overhead(reps=max(reps // 2, 3))
+    bench_trial_rate(trials=50 if args.fast else 200)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Statistical SEU fault-injection campaign engine.
+
+DAVOS-style dependability assessment for the software-rendered rad-hard
+stack: sweep fault models × injection sites × dependability policies ×
+workloads, classify every seeded trial, and emit a per-configuration
+coverage report.  See docs/dependability.md for how to read one.
+"""
+from repro.campaign.faultload import (
+    FAULT_MODELS, CampaignSpec, expand_grid, resolve_fault_model, trial_keys)
+from repro.campaign.report import (
+    ConfigResult, classify_counts, load_report, to_markdown, write_report)
+from repro.campaign.runner import CASES, build_case, run_campaign
+
+__all__ = [
+    "FAULT_MODELS", "CampaignSpec", "expand_grid", "resolve_fault_model",
+    "trial_keys", "ConfigResult", "classify_counts", "load_report",
+    "to_markdown", "write_report", "CASES", "build_case", "run_campaign",
+]

@@ -1,0 +1,123 @@
+"""Faultload generation — which faults strike where, reproducibly.
+
+A *faultload* (DAVOS terminology) is the set of faults a campaign injects:
+a fault model (what kind of corruption), an injection site (which tensor in
+the execution path), and a deterministic per-trial PRNG key stream.  One
+``CampaignSpec`` pins all of it plus the policy under test, so a campaign
+row is rerunnable bit-for-bit from (spec, seed) alone.
+
+Fault models map 1:1 onto ``core.fault_injection`` primitives:
+
+  single_bitflip   one SEU: one random bit of one random element XORed
+  multi_bitflip    fleet-scale rate model: every bit flips independently
+                   (default rate 1e-4; ``multi_bitflip@3e-4`` overrides)
+  stuck_at0/1      permanent fault: one random bit forced to 0 / 1
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, List, Sequence
+
+import jax
+
+from repro.core import fault_injection as fi
+from repro.core.fault_injection import inject_pytree_with  # noqa: F401 — re-export
+from repro.core.dependability import Policy
+
+DEFAULT_MULTI_RATE = 1e-4
+
+SITES = ("accumulator", "weights", "activations")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    name: str
+    apply: Callable[[jax.Array, jax.Array], jax.Array]   # (x, key) -> x'
+    description: str
+
+
+def _rate_model(rate: float) -> FaultModel:
+    return FaultModel(
+        f"multi_bitflip@{rate:g}" if rate != DEFAULT_MULTI_RATE else "multi_bitflip",
+        lambda x, key: fi.flip_bits_at_rate(x, key, rate),
+        f"each bit flips independently with p={rate:g}")
+
+
+FAULT_MODELS = {
+    "single_bitflip": FaultModel(
+        "single_bitflip", fi.flip_one_bit,
+        "one random bit of one random element XOR-flipped"),
+    "multi_bitflip": _rate_model(DEFAULT_MULTI_RATE),
+    "stuck_at0": FaultModel(
+        "stuck_at0", lambda x, key: fi.stuck_at(x, key, 0),
+        "one random bit forced to 0"),
+    "stuck_at1": FaultModel(
+        "stuck_at1", lambda x, key: fi.stuck_at(x, key, 1),
+        "one random bit forced to 1"),
+}
+
+
+def resolve_fault_model(name: str) -> FaultModel:
+    """Registry lookup; ``multi_bitflip@<rate>`` builds a custom-rate model."""
+    if name in FAULT_MODELS:
+        return FAULT_MODELS[name]
+    if name.startswith("multi_bitflip@"):
+        return _rate_model(float(name.split("@", 1)[1]))
+    raise KeyError(f"unknown fault model {name!r}; known: "
+                   f"{sorted(FAULT_MODELS)} or multi_bitflip@<rate>")
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """One campaign configuration = one row of the coverage report."""
+    workload: str
+    policy: Policy
+    site: str
+    fault_model: str
+    trials: int
+    seed: int = 0
+
+    def label(self) -> str:
+        return (f"{self.workload}/{self.policy.value}/{self.site}/"
+                f"{self.fault_model}")
+
+
+def trial_keys(spec: CampaignSpec) -> jax.Array:
+    """Deterministic per-trial key stream: the campaign seed folded with a
+    stable hash of the configuration, so every row draws independent faults
+    while the whole campaign replays exactly from one integer seed."""
+    base = jax.random.key(spec.seed)
+    disc = zlib.crc32(spec.label().encode())
+    return jax.random.split(jax.random.fold_in(base, disc), spec.trials)
+
+
+def expand_grid(
+    workloads: Sequence[str],
+    policies: Sequence[Policy],
+    sites: Sequence[str],
+    fault_models: Sequence[str],
+    trials: int,
+    seed: int = 0,
+    supported: dict | None = None,
+) -> List[CampaignSpec]:
+    """Cartesian sweep, filtered to combinations the workload supports.
+
+    ``supported`` maps workload -> (sites, policies); unsupported combos are
+    dropped (e.g. ABFT on the float transformer has no checksum to check).
+    """
+    specs = []
+    for w in workloads:
+        if supported is not None and w not in supported:
+            raise KeyError(f"unknown workload {w!r}; known: {sorted(supported)}")
+        ok_sites, ok_policies = (supported or {}).get(w, (SITES, tuple(Policy)))
+        for p in policies:
+            if p not in ok_policies:
+                continue
+            for s in sites:
+                if s not in ok_sites:
+                    continue
+                for fm in fault_models:
+                    resolve_fault_model(fm)          # fail fast on typos
+                    specs.append(CampaignSpec(w, p, s, fm, trials, seed))
+    return specs

@@ -1,0 +1,124 @@
+"""Campaign result classification + coverage reports (JSON + markdown).
+
+Every trial lands in exactly one DAVOS-style dependability class, derived
+from two observables — did the policy raise a detection, and does the final
+output differ bit-for-bit from the fault-free golden run:
+
+                      output == golden     output != golden
+  no detection        masked               SDC  (silent data corruption)
+  detection raised    detected_corrected   detected_uncorrected
+
+Coverage = 1 − SDC rate: the fraction of injected faults that could not
+silently corrupt the result (either they never manifested, or the policy
+caught them — caught-but-uncorrected faults still trigger recovery at a
+higher layer, e.g. checkpoint restore, so they are not silent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+CLASSES = ("masked", "detected_corrected", "detected_uncorrected", "sdc")
+
+
+def classify_counts(detected: np.ndarray, mismatch: np.ndarray) -> Dict[str, int]:
+    """Vector classification of a trial batch → per-class counts."""
+    detected = np.asarray(detected, bool)
+    mismatch = np.asarray(mismatch, bool)
+    return {
+        "masked": int((~detected & ~mismatch).sum()),
+        "detected_corrected": int((detected & ~mismatch).sum()),
+        "detected_uncorrected": int((detected & mismatch).sum()),
+        "sdc": int((~detected & mismatch).sum()),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigResult:
+    """One row of the coverage report: a configuration and its trial tallies."""
+    workload: str
+    policy: str
+    site: str
+    fault_model: str
+    trials: int
+    masked: int
+    detected_corrected: int
+    detected_uncorrected: int
+    sdc: int
+
+    @property
+    def detection_rate(self) -> float:
+        return (self.detected_corrected + self.detected_uncorrected) / max(self.trials, 1)
+
+    @property
+    def sdc_rate(self) -> float:
+        return self.sdc / max(self.trials, 1)
+
+    @property
+    def coverage(self) -> float:
+        return 1.0 - self.sdc_rate
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["detection_rate"] = self.detection_rate
+        d["sdc_rate"] = self.sdc_rate
+        d["coverage"] = self.coverage
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "ConfigResult":
+        fields = {f.name for f in dataclasses.fields(ConfigResult)}
+        return ConfigResult(**{k: v for k, v in d.items() if k in fields})
+
+
+def to_json_dict(results: Sequence[ConfigResult], meta: dict | None = None) -> dict:
+    return {"meta": dict(meta or {}),
+            "results": [r.to_dict() for r in results]}
+
+
+def from_json_dict(d: dict) -> Tuple[dict, List[ConfigResult]]:
+    return d.get("meta", {}), [ConfigResult.from_dict(r) for r in d["results"]]
+
+
+def load_report(path) -> Tuple[dict, List[ConfigResult]]:
+    with open(path) as f:
+        return from_json_dict(json.load(f))
+
+
+def to_markdown(results: Sequence[ConfigResult], meta: dict | None = None) -> str:
+    lines = ["# SEU fault-injection campaign report", ""]
+    for k, v in (meta or {}).items():
+        lines.append(f"- **{k}**: {v}")
+    if meta:
+        lines.append("")
+    lines += [
+        "| workload | policy | site | fault model | trials | masked "
+        "| det-corr | det-unc | SDC | det. rate | SDC rate | coverage |",
+        "|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|",
+    ]
+    for r in results:
+        lines.append(
+            f"| {r.workload} | {r.policy} | {r.site} | {r.fault_model} "
+            f"| {r.trials} | {r.masked} | {r.detected_corrected} "
+            f"| {r.detected_uncorrected} | {r.sdc} "
+            f"| {r.detection_rate:.3f} | {r.sdc_rate:.3f} | {r.coverage:.3f} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def write_report(results: Sequence[ConfigResult], out_dir,
+                 meta: dict | None = None,
+                 basename: str = "campaign") -> Tuple[pathlib.Path, pathlib.Path]:
+    """Write <out_dir>/<basename>.json and .md; returns both paths."""
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    jpath = out / f"{basename}.json"
+    mpath = out / f"{basename}.md"
+    with open(jpath, "w") as f:
+        json.dump(to_json_dict(results, meta), f, indent=2)
+    mpath.write_text(to_markdown(results, meta))
+    return jpath, mpath

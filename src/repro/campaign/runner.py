@@ -1,0 +1,395 @@
+"""Campaign trial execution: workload cases, policy wrapping, classification.
+
+Each workload case exposes one method —
+
+    run_trials(policy, site, fault, keys) -> (detected[n], mismatch[n])
+
+where ``fault(x, key) -> x'`` is a fault-model primitive.  The *golden*
+reference for a configuration is the same code path run with an identity
+fault, so classification measures exactly the injected fault's effect, never
+incidental numeric differences between execution paths.
+
+Injection-site semantics per policy:
+
+  accumulator   fault the int32 matmul/conv accumulator via the ``inject=``
+                hook (compute-path SEU — what ABFT's checksum covers)
+  weights       fault the stored quantized weights before execution
+                (memory SEU — ABFT detects it only with a deploy-time
+                checksum; recompute-recovery cannot fix it)
+  activations   fault the layer input (upstream data SEU — outside any
+                single layer's ABFT contract; TMR still corrects it when
+                only one replica's copy is hit)
+
+TMR is evaluated at the campaign level with explicit replica voting
+(``redundancy.vote``/``agree``): replica 0 executes with the fault, replicas
+1–2 clean, matching spatial TMR where a single event upsets one replica.
+
+Kernel-shaped cases (qmatmul, qconv2d) are pure JAX all the way through, so
+trials are vmapped and jitted in one batch; model/serving cases inject on
+the host (pytree surgery) and loop over jitted forwards.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.campaign import faultload as fl
+from repro.campaign.report import ConfigResult, classify_counts
+from repro.core import abft as abft_mod
+from repro.core import redundancy
+from repro.core.dependability import (
+    Policy, dependable_qconv2d, dependable_qmatmul)
+from repro.core.fault_injection import _as_bits
+
+_IDENTITY = lambda x, key: x
+
+
+def _bitwise_mismatch(a, b) -> jax.Array:
+    """() bool — any leaf of pytree ``a`` differs bit-for-bit from ``b``
+    (bit-pattern compare: NaN-safe, dtype-uniform)."""
+    out = jnp.asarray(False)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        ab, _ = _as_bits(la)
+        bb, _ = _as_bits(lb)
+        out = out | jnp.any(ab != bb)
+    return out
+
+
+def _tmr_vote(faulty, clean) -> Tuple[jax.Array, jax.Array]:
+    """(voted_output, detected) for replicas [faulty, clean, clean]."""
+    detected = ~redundancy.agree([faulty, clean])
+    voted = redundancy.vote([faulty, clean, clean])
+    return voted, detected
+
+
+# ---------------------------------------------------------------------------
+# Kernel-shaped cases: fully vmappable
+# ---------------------------------------------------------------------------
+
+
+class _KernelCase:
+    """Shared trial machinery for the pure-JAX op cases: subclasses build the
+    quantized operands in __init__ and implement ``_op`` (the dependable op
+    call); site dispatch, TMR voting, and the vmapped trial loop live here."""
+
+    sites = ("accumulator", "weights", "activations")
+    policies = (Policy.NONE, Policy.ABFT, Policy.TMR)
+
+    def _op(self, policy: Policy, x_q, w_q, inject, w_check):
+        raise NotImplementedError
+
+    def _one(self, policy: Policy, site: str, fault, key):
+        x_q, w_q, inject = self.x_q, self.w_q, None
+        if site == "weights":
+            w_q = fault(w_q, key)
+        elif site == "activations":
+            x_q = fault(x_q, key)
+        else:
+            inject = lambda acc: fault(acc, key)
+
+        base = Policy.NONE if policy == Policy.TMR else policy
+        y, st = self._op(base, x_q, w_q, inject,
+                         self.w_check if policy == Policy.ABFT else None)
+        if policy == Policy.TMR:
+            y_clean, _ = self._op(Policy.NONE, self.x_q, self.w_q, None, None)
+            return _tmr_vote(y, y_clean)
+        if policy == Policy.ABFT:
+            return y, st["faults_detected"] > 0
+        return y, jnp.asarray(False)
+
+    def run_trials(self, policy, site, fault, keys):
+        golden, _ = self._one(policy, site, _IDENTITY, keys[0])
+
+        def trial(key):
+            y, detected = self._one(policy, site, fault, key)
+            return detected, _bitwise_mismatch(y, golden)
+
+        detected, mismatch = jax.jit(jax.vmap(trial))(keys)
+        return np.asarray(detected), np.asarray(mismatch)
+
+
+class QMatmulCase(_KernelCase):
+    """int8×int8→int32 matmul + requant (the paper's hot-path primitive)."""
+
+    name = "qmatmul"
+
+    def __init__(self, key: jax.Array, m: int = 32, k: int = 64, n: int = 48):
+        kx, kw, kb = jax.random.split(key, 3)
+        self.x_q = jax.random.randint(kx, (m, k), -128, 128).astype(jnp.int8)
+        self.w_q = jax.random.randint(kw, (k, n), -127, 128).astype(jnp.int8)
+        self.bias = jax.random.randint(kb, (n,), -500, 500).astype(jnp.int32)
+        self.x_zp = jnp.int32(3)
+        self.out_zp = jnp.int32(0)
+        self.scale = jnp.full((n,), 1e-3, jnp.float32)
+        # deploy-time checksum from the known-good weights (weight-SEU cover)
+        self.w_check = abft_mod.checksum_vector(self.w_q)
+
+    def _op(self, policy, x_q, w_q, inject, w_check):
+        return dependable_qmatmul(
+            policy, x_q, self.x_zp, w_q, self.bias, self.scale, self.out_zp,
+            inject=inject, w_check=w_check)
+
+
+class QConv2dCase(_KernelCase):
+    """int8 NHWC conv + requant (the HPDP's Table-1 op, reduced geometry)."""
+
+    name = "qconv2d"
+
+    def __init__(self, key: jax.Array, h: int = 12, w: int = 12,
+                 cin: int = 8, cout: int = 8):
+        kx, kw, kb = jax.random.split(key, 3)
+        self.x_q = jax.random.randint(kx, (1, h, w, cin), -128, 128).astype(jnp.int8)
+        self.w_q = jax.random.randint(kw, (3, 3, cin, cout), -127, 128).astype(jnp.int8)
+        self.bias = jax.random.randint(kb, (cout,), -100, 100).astype(jnp.int32)
+        self.x_zp = jnp.int32(2)
+        self.out_zp = jnp.int32(0)
+        self.scale = jnp.full((cout,), 1e-3, jnp.float32)
+        self.w_check = abft_mod.conv_checksum_weight(self.w_q)
+
+    def _op(self, policy, x_q, w_q, inject, w_check):
+        return dependable_qconv2d(
+            policy, x_q, self.x_zp, w_q, self.bias, self.scale, self.out_zp,
+            inject=inject, w_check=w_check)
+
+
+# ---------------------------------------------------------------------------
+# Model cases: host-side pytree injection + jitted forwards
+# ---------------------------------------------------------------------------
+
+
+class ShipdetCase:
+    """The paper's ship-detection CNN (reduced geometry), full-network
+    forward under a per-layer dependability policy."""
+
+    name = "shipdet"
+    sites = ("accumulator", "weights", "activations")
+    policies = (Policy.NONE, Policy.ABFT, Policy.TMR)
+
+    def __init__(self, key: jax.Array):
+        from repro.models import shipdet
+        self._shipdet = shipdet
+        kp, kx = jax.random.split(key)
+        self.specs = shipdet.reduced_specs()
+        self.params = shipdet.init_params(self.specs, kp)
+        s0 = self.specs[0]
+        self.x = jax.random.uniform(kx, (1, s0.h, s0.w, 3))
+
+    def _wq_pytree(self, params) -> List[jax.Array]:
+        return [p["qconv"].w_q for p in params]
+
+    def _with_wq(self, wq_leaves) -> list:
+        return [{**p, "qconv": p["qconv"]._replace(w_q=wq)}
+                for p, wq in zip(self.params, wq_leaves)]
+
+    def run_trials(self, policy, site, fault, keys):
+        sd = self._shipdet
+        base = Policy.NONE if policy == Policy.TMR else policy
+
+        def fwd(params, x, inject=None):
+            out, st = sd.forward(self.specs, params, x, policy=base,
+                                 inject=inject)
+            return out, st["faults_detected"] > 0
+
+        detected_l, mismatch_l = [], []
+        if site == "weights":
+            run = jax.jit(lambda p, x: fwd(p, x))
+            golden, _ = run(self.params, self.x)
+            clean = golden
+            for k in keys:
+                wq = fl.inject_pytree_with(self._wq_pytree(self.params), k, fault)
+                out, det = run(self._with_wq(wq), self.x)
+                if policy == Policy.TMR:
+                    out, det = _tmr_vote(out, clean)
+                detected_l.append(bool(det) if policy != Policy.NONE else False)
+                mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
+        else:
+            if site == "activations":
+                def one(key):
+                    x = fault(self.x, key)
+                    return fwd(self.params, x)
+
+                golden, _ = jax.jit(lambda: fwd(self.params, self.x))()
+            else:   # accumulator — mid-layer int32 accumulator hook
+                def one(key):
+                    return fwd(self.params, self.x,
+                               inject=lambda acc: fault(acc, key))
+
+                golden, _ = jax.jit(
+                    lambda: fwd(self.params, self.x, inject=lambda a: a))()
+
+            one_j = jax.jit(one)
+            clean = golden
+            for k in keys:
+                out, det = one_j(k)
+                if policy == Policy.TMR:
+                    out, det = _tmr_vote(out, clean)
+                detected_l.append(bool(det) if policy != Policy.NONE else False)
+                mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
+        return np.asarray(detected_l), np.asarray(mismatch_l)
+
+
+class TransformerCase:
+    """Small transformer LM forward from the config registry (float path —
+    no integer checksum exists, so the supported policies are NONE/TMR)."""
+
+    name = "transformer"
+    sites = ("weights", "activations")
+    policies = (Policy.NONE, Policy.TMR)
+
+    def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
+        from repro.configs import registry
+        from repro.models import api as model_api
+        from repro.models.config import reduced
+        self._api = model_api
+        kp, kt = jax.random.split(key)
+        self.cfg = reduced(registry.get(arch))
+        self.params = model_api.init_params(self.cfg, kp)
+        self.tokens = jax.random.randint(kt, (2, 16), 0, self.cfg.vocab_size)
+
+    def run_trials(self, policy, site, fault, keys):
+        api = self._api
+
+        def logits_from_params(params):
+            return api.forward(self.cfg, params, self.tokens).logits
+
+        def logits_from_embeds(embeds):
+            return api.forward(self.cfg, self.params, self.tokens,
+                               embeds=embeds).logits
+
+        detected_l, mismatch_l = [], []
+        if site == "weights":
+            run = jax.jit(logits_from_params)
+            golden = run(self.params)
+            for k in keys:
+                out = run(fl.inject_pytree_with(self.params, k, fault))
+                det = jnp.asarray(False)
+                if policy == Policy.TMR:
+                    out, det = _tmr_vote(out, golden)
+                detected_l.append(bool(det))
+                mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
+        else:   # activations — fault the token embeddings feeding the stack
+            embeds = self.params["embed"][self.tokens]
+
+            def one(key):
+                return logits_from_embeds(fault(embeds, key))
+
+            one_j = jax.jit(one)
+            golden = jax.jit(lambda: logits_from_embeds(embeds))()
+            for k in keys:
+                out = one_j(k)
+                det = jnp.asarray(False)
+                if policy == Policy.TMR:
+                    out, det = _tmr_vote(out, golden)
+                detected_l.append(bool(det))
+                mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
+        return np.asarray(detected_l), np.asarray(mismatch_l)
+
+
+class ServingCase:
+    """End-to-end serving drill: SEUs strike the weight memory of a live
+    continuous-batching engine; classification compares full generated token
+    streams.  Detected faults are rolled into the engine's DependabilityStats
+    so the serving layer reports campaign results like any other counter."""
+
+    name = "serving"
+    sites = ("weights",)
+    policies = (Policy.NONE, Policy.TMR)
+
+    def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
+        from repro.configs import registry
+        from repro.models import api as model_api
+        from repro.models.config import reduced
+        from repro.runtime.serving import Engine, Request
+        self._Request = Request
+        self.cfg = reduced(registry.get(arch))
+        self.params = model_api.init_params(self.cfg, key)
+        self.engine = Engine(self.cfg, self.params, capacity=2, max_len=64,
+                             prefill_pad=8)
+        self.prompts = [[5, 9, 2], [3, 1, 4, 1]]
+
+    def _run_engine(self, params) -> Tuple[Tuple[int, ...], ...]:
+        self.engine.reset(params=params)
+        reqs = [self._Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(self.prompts)]
+        for r in reqs:
+            self.engine.submit(r)
+        self.engine.run()
+        return tuple(tuple(r.output) for r in reqs)
+
+    def run_trials(self, policy, site, fault, keys):
+        golden = self._run_engine(self.params)
+        detected_l, mismatch_l = [], []
+        for k in keys:
+            out = self._run_engine(fl.inject_pytree_with(self.params, k, fault))
+            differs = out != golden
+            if policy == Policy.TMR:
+                # temporal TMR: clean replicas replay deterministically, so a
+                # per-token majority of (faulty, clean, clean) is the clean
+                # stream; disagreement is the detection signal.
+                detected_l.append(differs)
+                mismatch_l.append(False)
+                if differs:
+                    self.engine.record_dependability({
+                        "faults_detected": jnp.int32(1),
+                        "checks_run": jnp.int32(1)})
+            else:
+                detected_l.append(False)
+                mismatch_l.append(differs)
+        return np.asarray(detected_l), np.asarray(mismatch_l)
+
+
+# ---------------------------------------------------------------------------
+# Campaign driver
+# ---------------------------------------------------------------------------
+
+CASES: Dict[str, type] = {
+    "qmatmul": QMatmulCase,
+    "qconv2d": QConv2dCase,
+    "shipdet": ShipdetCase,
+    "transformer": TransformerCase,
+    "serving": ServingCase,
+}
+
+SUPPORTED = {name: (cls.sites, cls.policies) for name, cls in CASES.items()}
+
+
+def build_case(workload: str, seed: int = 0):
+    if workload not in CASES:
+        raise KeyError(f"unknown workload {workload!r}; known: {sorted(CASES)}")
+    return CASES[workload](jax.random.key(seed))
+
+
+def run_campaign(specs: Sequence[fl.CampaignSpec],
+                 log: Callable[[str], None] = lambda s: None
+                 ) -> List[ConfigResult]:
+    """Execute every configuration; returns one ConfigResult per spec.
+
+    Deterministic: results depend only on (specs, their seeds).  Workload
+    cases are cached per (workload, seed) so all configurations of one
+    workload share data, params, and compiled functions.
+    """
+    cache: Dict[Tuple[str, int], object] = {}
+    results: List[ConfigResult] = []
+    for spec in specs:
+        case = cache.get((spec.workload, spec.seed))
+        if case is None:
+            case = build_case(spec.workload, spec.seed)
+            cache[(spec.workload, spec.seed)] = case
+        if spec.site not in case.sites or spec.policy not in case.policies:
+            log(f"skip {spec.label()}: unsupported for workload")
+            continue
+        fault = fl.resolve_fault_model(spec.fault_model)
+        keys = fl.trial_keys(spec)
+        detected, mismatch = case.run_trials(spec.policy, spec.site,
+                                             fault.apply, keys)
+        counts = classify_counts(detected, mismatch)
+        res = ConfigResult(
+            workload=spec.workload, policy=spec.policy.value, site=spec.site,
+            fault_model=spec.fault_model, trials=spec.trials, **counts)
+        log(f"{spec.label()}: det={res.detection_rate:.3f} "
+            f"sdc={res.sdc_rate:.3f} cov={res.coverage:.3f}")
+        results.append(res)
+    return results

@@ -1,0 +1,36 @@
+"""jax version compatibility shims.
+
+``shard_map`` drifted twice across the jax versions this repo must span:
+the import moved (``jax.experimental.shard_map`` → ``jax.shard_map``) and
+the replication-check kwarg was renamed (``check_rep`` → ``check_vma``).
+Everything in-repo imports it from here and always uses the ``check_vma``
+spelling; the shim maps onto whatever the installed jax accepts.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                      # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:                       # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+    kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def axis_size(axis_name) -> int:
+    """``lax.axis_size`` appeared after jax 0.4.x; the classic static-size
+    idiom is ``psum(1, axis)``, which constant-folds at trace time."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

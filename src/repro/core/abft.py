@@ -58,13 +58,21 @@ def abft_qmatmul(
     bias: jax.Array,         # (N,)  i32
     *,
     inject=None,             # optional fn(acc)->acc used by tests to corrupt
+    w_check=None,            # precomputed checksum_vector(w) from *deploy time*
 ) -> AbftResult:
     """Checksummed quantized matmul accumulator with detect + recompute-recover.
 
     Overhead: one (M,K)×(K,1) matvec + one row reduction ≈ 1/N of the matmul
     FLOPs (0.8 % for N=128).
+
+    ``w_check`` lets the caller supply the check vector computed from a known-
+    good weight copy (e.g. at checkpoint load).  With it, ABFT also catches
+    weight-memory SEUs: a flipped ``w_q`` no longer matches the stored
+    checksum.  Without it the checksum is derived from the (possibly already
+    corrupted) live weights, so only compute-path faults are covered.
     """
-    w_check = checksum_vector(w_q)
+    if w_check is None:
+        w_check = checksum_vector(w_q)
     acc_dot = _dot_i32(x_q, w_q)
     if inject is not None:
         acc_dot = inject(acc_dot)
@@ -98,9 +106,13 @@ def conv_checksum_weight(w_q: jax.Array) -> jax.Array:
 
 def abft_qconv2d(
     x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
-    stride=(1, 1), padding="SAME", *, inject=None,
+    stride=(1, 1), padding="SAME", *, inject=None, w_check=None,
 ) -> AbftResult:
-    """Checksummed quantized conv accumulator (detection per output pixel)."""
+    """Checksummed quantized conv accumulator (detection per output pixel).
+
+    ``w_check`` — optional precomputed ``conv_checksum_weight`` from a known-
+    good weight copy; see ``abft_qmatmul``.
+    """
     x = x_q.astype(jnp.int32) - x_zp.astype(jnp.int32)
 
     def conv(w):
@@ -112,7 +124,9 @@ def abft_qconv2d(
     if inject is not None:
         acc_dot = inject(acc_dot)
 
-    want = conv(conv_checksum_weight(w_q))[..., 0]       # (N, OH, OW)
+    if w_check is None:
+        w_check = conv_checksum_weight(w_q)
+    want = conv(w_check)[..., 0]                         # (N, OH, OW)
     got = jnp.sum(acc_dot, axis=3)
     pix_ok = got == want
     faults = jnp.sum(~pix_ok).astype(jnp.int32)

@@ -44,22 +44,35 @@ class DependabilityStats:
         return {"faults_detected": jnp.zeros((), jnp.int32),
                 "checks_run": jnp.zeros((), jnp.int32)}
 
+    @staticmethod
+    def merge(a: dict, b: dict) -> dict:
+        """Elementwise sum of two stats pytrees (campaign / engine rollups)."""
+        return {k: a[k] + b[k] for k in a}
+
+    @staticmethod
+    def to_host(stats: dict) -> dict:
+        """Device scalars → plain ints, for JSON reports and log lines."""
+        return {k: int(v) for k, v in stats.items()}
+
 
 def dependable_qmatmul(
     policy: Policy,
     x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
     scale: jax.Array, out_zp: jax.Array,
-    *, inject=None, stats: Optional[dict] = None,
+    *, inject=None, stats: Optional[dict] = None, w_check=None,
 ):
     """Quantized matmul + requant executed under a dependability policy.
 
-    Returns (y_q int8, stats dict).
+    ``inject`` corrupts the int32 accumulator (the campaign engine's
+    accumulator injection site); ``w_check`` is the optional deploy-time
+    checksum vector (see ``abft.abft_qmatmul``).  Returns (y_q int8, stats).
     """
     if stats is None:
         stats = DependabilityStats.zero()
 
     if policy == Policy.ABFT:
-        res = abft_mod.abft_qmatmul(x_q, x_zp, w_q, bias, inject=inject)
+        res = abft_mod.abft_qmatmul(x_q, x_zp, w_q, bias, inject=inject,
+                                    w_check=w_check)
         y = requantize(res.acc, scale, out_zp)
         stats = {
             "faults_detected": stats["faults_detected"] + res.faults_detected,
@@ -68,24 +81,78 @@ def dependable_qmatmul(
         return y, stats
 
     if policy == Policy.TMR:
-        def run():
+        # inject corrupts replica 0's accumulator — the same site as the
+        # ABFT/NONE paths, so policy sweeps compare like for like
+        def run(inj):
             acc = jax.lax.dot_general(
                 x_q, w_q, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.int32)
+            if inj is not None:
+                acc = inj(acc)
             colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
             acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
             return requantize(acc, scale, out_zp)
 
-        injectors = (inject, None, None) if inject is not None else (None, None, None)
-        y = redundancy.tmr_apply(lambda: run(), injectors=injectors)
+        y = redundancy.vote([run(inject), run(None), run(None)])
         stats = {**stats, "checks_run": stats["checks_run"] + 1}
         return y, stats
 
     # Policy.NONE — plain path
     acc = jax.lax.dot_general(
         x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
-    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
-    acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
     if inject is not None:
         acc = inject(acc)
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
     return requantize(acc, scale, out_zp), stats
+
+
+def dependable_qconv2d(
+    policy: Policy,
+    x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
+    scale: jax.Array, out_zp: jax.Array,
+    *, stride=(1, 1), padding="SAME",
+    inject=None, stats: Optional[dict] = None, w_check=None,
+):
+    """Quantized NHWC conv + requant under a dependability policy — the conv
+    twin of ``dependable_qmatmul`` so every campaign injection site drives
+    matmul and conv through one uniform hook surface.
+
+    Returns (y_q int8, stats dict).
+    """
+    if stats is None:
+        stats = DependabilityStats.zero()
+
+    def plain_acc():
+        x = x_q.astype(jnp.int32) - x_zp.astype(jnp.int32)
+        return jax.lax.conv_general_dilated(
+            x, w_q.astype(jnp.int32), stride, padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32)
+
+    if policy == Policy.ABFT:
+        res = abft_mod.abft_qconv2d(x_q, x_zp, w_q, bias, stride=stride,
+                                    padding=padding, inject=inject,
+                                    w_check=w_check)
+        y = requantize(res.acc, scale, out_zp)
+        stats = {
+            "faults_detected": stats["faults_detected"] + res.faults_detected,
+            "checks_run": stats["checks_run"] + 1,
+        }
+        return y, stats
+
+    if policy == Policy.TMR:
+        def run(inj):
+            acc = plain_acc()
+            if inj is not None:
+                acc = inj(acc)
+            return requantize(acc + bias[None, None, None, :], scale, out_zp)
+
+        y = redundancy.vote([run(inject), run(None), run(None)])
+        stats = {**stats, "checks_run": stats["checks_run"] + 1}
+        return y, stats
+
+    acc = plain_acc()
+    if inject is not None:
+        acc = inject(acc)
+    return requantize(acc + bias[None, None, None, :], scale, out_zp), stats

@@ -26,16 +26,26 @@ def _as_bits(x: jax.Array) -> Tuple[jax.Array, jnp.dtype]:
     return jax.lax.bitcast_convert_type(x, u), u
 
 
-def flip_one_bit(x: jax.Array, key: jax.Array) -> jax.Array:
-    """Flip exactly one uniformly-random bit of one uniformly-random element."""
+def _random_bit(x: jax.Array, key: jax.Array):
+    """Pick one uniformly-random bit of one uniformly-random element.
+
+    Returns (flat_bits, element_index, bit_mask, uint_dtype) — the shared
+    targeting step of every single-bit fault model.
+    """
     bits, u = _as_bits(x)
     flat = bits.reshape(-1)
     k1, k2 = jax.random.split(key)
     idx = jax.random.randint(k1, (), 0, flat.shape[0])
     bit = jax.random.randint(k2, (), 0, x.dtype.itemsize * 8)
     mask = (jnp.ones((), u) << bit.astype(u)).astype(u)
+    return flat, idx, mask, u
+
+
+def flip_one_bit(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Flip exactly one uniformly-random bit of one uniformly-random element."""
+    flat, idx, mask, _ = _random_bit(x, key)
     flat = flat.at[idx].set(flat[idx] ^ mask)
-    return jax.lax.bitcast_convert_type(flat.reshape(bits.shape), x.dtype)
+    return jax.lax.bitcast_convert_type(flat.reshape(x.shape), x.dtype)
 
 
 def flip_bits_at_rate(x: jax.Array, key: jax.Array, rate: float) -> jax.Array:
@@ -51,17 +61,39 @@ def flip_bits_at_rate(x: jax.Array, key: jax.Array, rate: float) -> jax.Array:
     return jax.lax.bitcast_convert_type(out, x.dtype)
 
 
+def stuck_at(x: jax.Array, key: jax.Array, stuck_value: int = 1) -> jax.Array:
+    """Force one uniformly-random bit of one uniformly-random element to
+    ``stuck_value`` (classic stuck-at-0 / stuck-at-1 fault model).
+
+    Unlike ``flip_one_bit`` this is idempotent and can be *masked at the
+    site*: if the chosen bit already holds ``stuck_value`` the tensor is
+    unchanged, so campaigns over stuck-at faultloads see a ~50% intrinsic
+    masking floor — the same behaviour DAVOS-style RTL campaigns report.
+    """
+    flat, idx, mask, u = _random_bit(x, key)
+    stuck = jnp.where(jnp.asarray(stuck_value, u) != 0,
+                      flat[idx] | mask, flat[idx] & ~mask)
+    flat = flat.at[idx].set(stuck)
+    return jax.lax.bitcast_convert_type(flat.reshape(x.shape), x.dtype)
+
+
+def inject_pytree_with(params, key: jax.Array, fault):
+    """Apply ``fault(x, key) -> x'`` to one random leaf of a pytree, chosen
+    weighted by element count (uniform over elements).  Host-side: the leaf
+    choice materializes, so this cannot run under jit/vmap."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    sizes = jnp.asarray([l.size for l in leaves], jnp.float32)
+    k_leaf, k_fault = jax.random.split(key)
+    leaf_idx = int(jax.random.choice(k_leaf, len(leaves), p=sizes / sizes.sum()))
+    leaves[leaf_idx] = fault(leaves[leaf_idx], k_fault)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def inject_into_pytree(params, key: jax.Array, n_flips: int = 1):
     """Flip ``n_flips`` single bits, each in a random leaf of a pytree
     (weight-memory SEU model for checkpoint/restart tests)."""
-    leaves, treedef = jax.tree_util.tree_flatten(params)
-    keys = jax.random.split(key, 2 * n_flips)
-    sizes = jnp.asarray([l.size for l in leaves], jnp.float32)
-    for i in range(n_flips):
-        # choose a leaf weighted by element count (uniform over elements);
-        # an independent key per flip — re-flipping the same bit with a
-        # shared key would XOR-cancel and silently weaken the drill
-        leaf_idx = int(jax.random.choice(keys[2 * i], len(leaves),
-                                         p=sizes / sizes.sum()))
-        leaves[leaf_idx] = flip_one_bit(leaves[leaf_idx], keys[2 * i + 1])
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+    # an independent key per flip — re-flipping the same bit with a shared
+    # key would XOR-cancel and silently weaken the drill
+    for k in jax.random.split(key, n_flips):
+        params = inject_pytree_with(params, k, flip_one_bit)
+    return params

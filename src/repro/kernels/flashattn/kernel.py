@@ -33,6 +33,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, seq_len: int, block_q: int, block_k: int,
@@ -150,7 +153,7 @@ def flash_attention(
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -390,7 +393,7 @@ def flash_attention_fwd_lse(q, k, v, *, causal=True, window=None,
         scratch_shapes=[pltpu.VMEM((block_q,), jnp.float32),
                         pltpu.VMEM((block_q,), jnp.float32),
                         pltpu.VMEM((block_q, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr)
@@ -445,7 +448,7 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=None,
         out_specs=pl.BlockSpec((1, block_q, hd), q_map),
         out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr, dor, lser, dvr)
@@ -485,7 +488,7 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=None,
                    jax.ShapeDtypeStruct((B * KV, S, hd), v.dtype)],
         scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
                         pltpu.VMEM((block_k, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr, dor, lser, dvr)

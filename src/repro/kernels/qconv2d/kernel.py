@@ -34,6 +34,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _qconv2d_kernel(x_ref, w_ref, colsum_ref, bias_ref, scale_ref, zps_ref,
                     out_ref, *, stride, oh, ow):
@@ -100,7 +103,7 @@ def qconv2d(
         ],
         out_specs=pl.BlockSpec((1, oh, ow, block_cout), lambda b, c: (b, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int8),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.dependability import Policy
-from repro.core import abft as abft_mod
+from repro.core.dependability import (
+    DependabilityStats, Policy, dependable_qconv2d)
 from repro.kernels.qconv2d import ops as qconv_ops
 
 
@@ -97,25 +97,26 @@ def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
             *, policy: Policy = Policy.NONE, use_kernel: bool = False,
             interpret: bool = False, inject=None) -> Tuple[jax.Array, Dict]:
     """x: (N, H, W, 3) float in [0,1]. Returns (det map, dependability stats)."""
-    stats = {"faults_detected": jnp.zeros((), jnp.int32),
-             "checks_run": jnp.zeros((), jnp.int32)}
+    stats = DependabilityStats.zero()
     for i, (s, p) in enumerate(zip(specs, params)):
         stride = (s.stride, s.stride)
-        if policy == Policy.ABFT:
+        # uniform accumulator injection site: the mid-layer int32 accumulator
+        # is reachable under every policy, so fault-injection campaigns
+        # measure all policies on the same hook
+        layer_inject = inject if i == len(specs) // 2 else None
+        if policy == Policy.ABFT or layer_inject is not None:
             x_q = quant.quantize(x, p["in_scale"], p["in_zp"])
             bias_i32 = jnp.round(
                 p["qconv"].bias_f / (p["in_scale"] * p["qconv"].w_scale)
             ).astype(jnp.int32)
-            res = abft_mod.abft_qconv2d(
-                x_q, p["in_zp"], p["qconv"].w_q, bias_i32,
-                stride=stride, padding="SAME",
-                inject=inject if i == len(specs) // 2 else None)
             rq = quant.requant_scale(p["in_scale"], p["qconv"].w_scale,
                                      p["out_scale"])
-            y_q = quant.requantize(res.acc, rq, p["out_zp"])
+            y_q, lstats = dependable_qconv2d(
+                policy if policy == Policy.ABFT else Policy.NONE,
+                x_q, p["in_zp"], p["qconv"].w_q, bias_i32, rq, p["out_zp"],
+                stride=stride, padding="SAME", inject=layer_inject)
             x = (y_q.astype(jnp.float32) - p["out_zp"]) * p["out_scale"]
-            stats["faults_detected"] = stats["faults_detected"] + res.faults_detected
-            stats["checks_run"] = stats["checks_run"] + 1
+            stats = DependabilityStats.merge(stats, lstats)
         else:
             x = qconv_ops.qconv_act(
                 x, p["qconv"], p["in_scale"], p["in_zp"],

@@ -296,7 +296,7 @@ def _attention_core(cfg: ArchConfig, q, k, v, positions, ctx):
     if ctx is None:
         return flash_attn_model(q, k, v, window=cfg.swa_window)
 
-    from jax import shard_map
+    from repro.compat import shard_map
     H, KV = cfg.n_heads, cfg.n_kv_heads
     msize = ctx.model_size
     tp_ok = (ctx.model not in ctx.dp and H % msize == 0 and KV % msize == 0)
@@ -466,7 +466,7 @@ def moe_mode(cfg: ArchConfig, model_size: int) -> str:
 
 def _moe_ffn(cfg: ArchConfig, bp, x, ctx: ShardCtx):
     """shard_map wrapper: explicit EP (or expert-TP) + FSDP for the experts."""
-    from jax import shard_map
+    from repro.compat import shard_map
     m = cfg.moe
     dp = ctx.dp
     mode = moe_mode(cfg, ctx.model_size)

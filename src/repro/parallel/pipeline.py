@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def bubble_fraction(n_stages: int, n_micro: int) -> float:
     """Idle fraction of the GPipe schedule — the PP napkin-math term."""
@@ -95,7 +97,7 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
         params = jax.tree_util.tree_map(lambda x: x[0], params)
         return body((params, mb))
 
-    out = jax.shard_map(
+    out = shard_map(
         per_device, mesh=mesh,
         in_specs=(pparams_spec, P()), out_specs=P(),
         check_vma=False,   # carry becomes stage-varying after the first hop

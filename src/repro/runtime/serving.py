@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dependability import DependabilityStats
 from repro.models import api as model_api
 from repro.models.config import ArchConfig
 
@@ -95,6 +96,42 @@ class Engine:
             static_argnums=())
         self._snapshot = None
         self._snapshot_step = 0
+        self.dependability = DependabilityStats.zero()
+
+    def reset(self, params=None):
+        """Return the engine's run state (queue, slots, cache, per-run stats)
+        to fresh, optionally with new (same-shaped) params.  Lifetime
+        dependability counters (``self.dependability``) survive resets — a
+        campaign accumulates verdicts across many reset+run trials.
+        Campaigns reuse one engine across trials so the jitted prefill/decode
+        stay compiled; swapping params is free because they are traced
+        arguments, not constants."""
+        if params is not None:
+            self.params = params
+        self.queue.clear()
+        self.active.clear()
+        self.slot_pos[:] = 0
+        self.slot_remaining[:] = 0
+        self.stats = EngineStats()
+        self.cache = model_api.init_cache(self.cfg, self.capacity, self.max_len)
+        self.tokens = jnp.zeros((self.capacity,), jnp.int32)
+        self._snapshot = None
+        self._snapshot_step = 0
+
+    # ------------------------------------------------------- dependability
+    def record_dependability(self, stats: dict):
+        """Fold a DependabilityStats pytree (from dependable ops or a
+        campaign's detection verdicts) into the engine-lifetime counters."""
+        self.dependability = DependabilityStats.merge(self.dependability, stats)
+
+    def dependability_report(self) -> dict:
+        """Host-side dependability summary: detection counters + the
+        replay/snapshot state a campaign needs to judge recovery cost."""
+        out = DependabilityStats.to_host(self.dependability)
+        out.update(steps=self.stats.steps, replays=self.stats.replays,
+                   tokens_out=self.stats.tokens_out,
+                   snapshot_every=self.snapshot_every)
+        return out
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request):

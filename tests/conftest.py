@@ -1,0 +1,76 @@
+"""Shared test fixtures + optional-dependency shims.
+
+``hypothesis`` is an optional dependency of this repo: the property-based
+tests want it, but the container image does not ship it and tier-1 must
+stay runnable regardless.  When the real package is absent we install a
+stub into ``sys.modules`` *before collection* that turns every
+``@given(...)``-decorated test into an explicit skip (with a clear reason)
+while leaving the example-based tests in the same files untouched.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import pytest
+
+
+def _install_hypothesis_stub() -> None:
+    try:
+        import hypothesis  # noqa: F401
+        return                                   # real package available
+    except ImportError:
+        pass
+
+    skip_mark = pytest.mark.skip(
+        reason="hypothesis not installed — property-based test skipped")
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return skip_mark(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):             # @settings(...) — identity
+        def deco(fn):
+            return fn
+        return deco
+
+    for attr in ("register_profile", "load_profile", "get_profile"):
+        setattr(settings, attr, lambda *a, **k: None)
+
+    def assume(_cond=True):
+        return True
+
+    class _Strategy:
+        """Inert strategy object: supports the combinator API shape
+        (map/filter/flatmap/chaining) so module-level strategy definitions
+        evaluate without the real library."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+        def __or__(self, _other):
+            return self
+
+    class _Strategies(types.ModuleType):
+        def __getattr__(self, _name):            # st.integers, st.lists, ...
+            return _Strategy()
+
+    stub = types.ModuleType("hypothesis")
+    stub.given = given
+    stub.settings = settings
+    stub.assume = assume
+    stub.example = lambda *a, **k: (lambda fn: fn)
+    stub.note = lambda *a, **k: None
+    stub.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    stub.strategies = _Strategies("hypothesis.strategies")
+    stub.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = stub.strategies
+
+
+_install_hypothesis_stub()

@@ -15,7 +15,7 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.parallel import collectives as coll
 
@@ -52,6 +52,7 @@ print("GRADBF16_OK")
 """
 
 
+@pytest.mark.slow
 def test_collectives_8dev():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

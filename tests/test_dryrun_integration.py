@@ -54,6 +54,7 @@ print("DRYRUN_INTEGRATION_OK")
 """
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(1200)
 def test_dryrun_small_mesh_all_families():
     env = dict(os.environ)

@@ -11,6 +11,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 SCRIPT = r"""
@@ -54,6 +56,7 @@ print("PIPELINE_OK")
 """
 
 
+@pytest.mark.slow
 def test_pipeline_parallel_8dev():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
