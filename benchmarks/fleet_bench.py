@@ -1,0 +1,97 @@
+"""Fleet scaling + dependability-policy overhead benchmark.
+
+Measures released-token throughput of the serving fleet as replicas and
+policies vary — the serving-side companion of benchmarks/campaign_bench.py
+(which prices the op-level policies).  The interesting ratios:
+
+  * none → abft: the cost of certify-before-release (periodic pytree
+    checksums + release latency, no extra decode), and
+  * none → dmr: the cost of pair-serving (2× decode of every request).
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench --fast
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.dependability import Policy
+from repro.fleet import Fleet
+from repro.runtime.serving import Request
+
+
+def bench(arch: str, n_replicas: int, policy: Policy, n_requests: int,
+          max_new: int, seed: int = 0):
+    from repro.configs import registry
+    from repro.models import api as model_api
+    from repro.models.config import reduced
+
+    cfg = reduced(registry.get(arch))
+    params = model_api.init_params(cfg, jax.random.key(seed))
+    fleet = Fleet(cfg, params, n_replicas=n_replicas, policy=policy,
+                  capacity=4, max_len=96, prefill_pad=8, scrub_every=4)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=4).tolist()
+               for _ in range(n_requests)]
+
+    def run_once():
+        fleet.reset(policy=policy)
+        for i, p in enumerate(prompts):
+            fleet.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new))
+        fleet.run()
+        return fleet.metrics
+
+    run_once()                                   # warmup / compile
+    t0 = time.perf_counter()
+    m = run_once()
+    dt = time.perf_counter() - t0
+    return {
+        "arch": cfg.name, "replicas": n_replicas, "policy": policy.value,
+        "released": m.released, "tokens": m.tokens_out, "ticks": m.ticks,
+        "tok_per_s": m.tokens_out / dt,
+        "p50_ticks": m.p50_ticks, "p99_ticks": m.p99_ticks,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.fleet_bench")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--replicas", default="1,2,4")
+    ap.add_argument("--policies", default="none,abft,dmr")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--fast", action="store_true",
+                    help="2 replicas only, 6 requests")
+    args = ap.parse_args(argv)
+
+    replica_counts = [2] if args.fast else [
+        int(x) for x in args.replicas.split(",")]
+    n_requests = 6 if args.fast else args.requests
+    policies = [Policy(p) for p in args.policies.split(",")]
+
+    rows = []
+    for n in replica_counts:
+        for pol in policies:
+            if pol == Policy.DMR and n < 2:
+                continue                          # pair-serving needs 2
+            r = bench(args.arch, n, pol, n_requests, args.max_new_tokens)
+            rows.append(r)
+            print(f"{r['arch']}  replicas={r['replicas']}  "
+                  f"policy={r['policy']:>4}  {r['tok_per_s']:8.1f} tok/s  "
+                  f"p50={r['p50_ticks']:.0f}t p99={r['p99_ticks']:.0f}t  "
+                  f"({r['released']} released)", flush=True)
+
+    base = {r["replicas"]: r["tok_per_s"] for r in rows
+            if r["policy"] == "none"}
+    for r in rows:
+        if r["policy"] != "none" and r["replicas"] in base:
+            print(f"  overhead {r['policy']} @ {r['replicas']} replicas: "
+                  f"{base[r['replicas']] / max(r['tok_per_s'], 1e-9):.2f}×")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

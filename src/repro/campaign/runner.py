@@ -23,6 +23,10 @@ Injection-site semantics per policy:
 TMR is evaluated at the campaign level with explicit replica voting
 (``redundancy.vote``/``agree``): replica 0 executes with the fault, replicas
 1–2 clean, matching spatial TMR where a single event upsets one replica.
+DMR is its detect-only half: replica 0 (faulted) vs one clean replica,
+disagreement raises the alarm but replica 0's output ships unchanged —
+manifested faults classify ``detected_uncorrected`` (covered, because a
+failover layer takes over; the ``fleet`` workload closes that loop).
 
 Kernel-shaped cases (qmatmul, qconv2d) are pure JAX all the way through, so
 trials are vmapped and jitted in one batch; model/serving cases inject on
@@ -65,6 +69,12 @@ def _tmr_vote(faulty, clean) -> Tuple[jax.Array, jax.Array]:
     return voted, detected
 
 
+def _dmr_check(faulty, clean) -> Tuple[jax.Array, jax.Array]:
+    """(replica-0 output, detected) for replicas [faulty, clean] — DMR is
+    detect-only, so the faulted replica's output ships unchanged."""
+    return faulty, ~redundancy.agree([faulty, clean])
+
+
 # ---------------------------------------------------------------------------
 # Kernel-shaped cases: fully vmappable
 # ---------------------------------------------------------------------------
@@ -76,7 +86,7 @@ class _KernelCase:
     call); site dispatch, TMR voting, and the vmapped trial loop live here."""
 
     sites = ("accumulator", "weights", "activations")
-    policies = (Policy.NONE, Policy.ABFT, Policy.TMR)
+    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR)
 
     def _op(self, policy: Policy, x_q, w_q, inject, w_check):
         raise NotImplementedError
@@ -90,12 +100,15 @@ class _KernelCase:
         else:
             inject = lambda acc: fault(acc, key)
 
-        base = Policy.NONE if policy == Policy.TMR else policy
+        base = Policy.NONE if policy in (Policy.TMR, Policy.DMR) else policy
         y, st = self._op(base, x_q, w_q, inject,
                          self.w_check if policy == Policy.ABFT else None)
         if policy == Policy.TMR:
             y_clean, _ = self._op(Policy.NONE, self.x_q, self.w_q, None, None)
             return _tmr_vote(y, y_clean)
+        if policy == Policy.DMR:
+            y_clean, _ = self._op(Policy.NONE, self.x_q, self.w_q, None, None)
+            return _dmr_check(y, y_clean)
         if policy == Policy.ABFT:
             return y, st["faults_detected"] > 0
         return y, jnp.asarray(False)
@@ -166,7 +179,7 @@ class ShipdetCase:
 
     name = "shipdet"
     sites = ("accumulator", "weights", "activations")
-    policies = (Policy.NONE, Policy.ABFT, Policy.TMR)
+    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR)
 
     def __init__(self, key: jax.Array):
         from repro.models import shipdet
@@ -186,7 +199,7 @@ class ShipdetCase:
 
     def run_trials(self, policy, site, fault, keys):
         sd = self._shipdet
-        base = Policy.NONE if policy == Policy.TMR else policy
+        base = Policy.NONE if policy in (Policy.TMR, Policy.DMR) else policy
 
         def fwd(params, x, inject=None):
             out, st = sd.forward(self.specs, params, x, policy=base,
@@ -203,6 +216,8 @@ class ShipdetCase:
                 out, det = run(self._with_wq(wq), self.x)
                 if policy == Policy.TMR:
                     out, det = _tmr_vote(out, clean)
+                elif policy == Policy.DMR:
+                    out, det = _dmr_check(out, clean)
                 detected_l.append(bool(det) if policy != Policy.NONE else False)
                 mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
         else:
@@ -226,6 +241,8 @@ class ShipdetCase:
                 out, det = one_j(k)
                 if policy == Policy.TMR:
                     out, det = _tmr_vote(out, clean)
+                elif policy == Policy.DMR:
+                    out, det = _dmr_check(out, clean)
                 detected_l.append(bool(det) if policy != Policy.NONE else False)
                 mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
         return np.asarray(detected_l), np.asarray(mismatch_l)
@@ -237,7 +254,7 @@ class TransformerCase:
 
     name = "transformer"
     sites = ("weights", "activations")
-    policies = (Policy.NONE, Policy.TMR)
+    policies = (Policy.NONE, Policy.DMR, Policy.TMR)
 
     def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
         from repro.configs import registry
@@ -268,6 +285,8 @@ class TransformerCase:
                 det = jnp.asarray(False)
                 if policy == Policy.TMR:
                     out, det = _tmr_vote(out, golden)
+                elif policy == Policy.DMR:
+                    out, det = _dmr_check(out, golden)
                 detected_l.append(bool(det))
                 mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
         else:   # activations — fault the token embeddings feeding the stack
@@ -283,6 +302,8 @@ class TransformerCase:
                 det = jnp.asarray(False)
                 if policy == Policy.TMR:
                     out, det = _tmr_vote(out, golden)
+                elif policy == Policy.DMR:
+                    out, det = _dmr_check(out, golden)
                 detected_l.append(bool(det))
                 mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
         return np.asarray(detected_l), np.asarray(mismatch_l)
@@ -296,7 +317,7 @@ class ServingCase:
 
     name = "serving"
     sites = ("weights",)
-    policies = (Policy.NONE, Policy.TMR)
+    policies = (Policy.NONE, Policy.DMR, Policy.TMR)
 
     def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
         from repro.configs import registry
@@ -335,9 +356,99 @@ class ServingCase:
                     self.engine.record_dependability({
                         "faults_detected": jnp.int32(1),
                         "checks_run": jnp.int32(1)})
+            elif policy == Policy.DMR:
+                # detect-only: the pair disagrees but the faulted stream is
+                # what shipped — detected_uncorrected until a failover layer
+                # (the fleet workload) replays it
+                detected_l.append(differs)
+                mismatch_l.append(differs)
+                if differs:
+                    self.engine.record_dependability({
+                        "faults_detected": jnp.int32(1),
+                        "checks_run": jnp.int32(1)})
             else:
                 detected_l.append(False)
                 mismatch_l.append(differs)
+        return np.asarray(detected_l), np.asarray(mismatch_l)
+
+
+class FleetCase:
+    """Fleet-level end-to-end drill: an SEU strikes ONE replica of a live
+    multi-replica serving fleet (src/repro/fleet/) and the campaign judges
+    the *released output stream* — the paper's actual system property.
+
+    Sites:
+      weights      persistent storage SEU in replica 0's parameters.  The
+                   ABFT fleet policy scrubs against deploy-time storage
+                   checksums, quarantines, reloads from the golden
+                   checkpoint, re-verifies, readmits, and replays recalled
+                   requests — trials end ``detected_corrected``.
+      accumulator  transient SEU in replica 0's live decode-state (the
+                   sampled-token buffer) mid-flight.  DMR pair-serving
+                   detects the divergence, scrub-attribution clears the
+                   weights, and the replayed request restores the golden
+                   stream.  The weight scrub cannot see this site, so
+                   ABFT×accumulator is an unsupported combination
+                   (``supports``) — the blind spot is the contract
+                   boundary, not a bug (see docs/fleet.md).
+
+    Under NONE the fleet releases whatever the corrupted replica produced:
+    nonzero SDC, the baseline every dependable policy is judged against.
+    One fleet instance is reused across all trials (engines stay compiled);
+    ``Fleet.reset`` restores golden params and a fully-healthy fleet.
+    """
+
+    name = "fleet"
+    sites = ("weights", "accumulator")
+    policies = (Policy.NONE, Policy.ABFT, Policy.DMR)
+
+    def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
+        from repro.configs import registry
+        from repro.fleet.fleet import Fleet
+        from repro.models import api as model_api
+        from repro.models.config import reduced
+        from repro.runtime.serving import Request
+        self._Request = Request
+        self.cfg = reduced(registry.get(arch))
+        self.params = model_api.init_params(self.cfg, key)
+        self.fleet = Fleet(self.cfg, self.params, n_replicas=2,
+                           policy=Policy.NONE, capacity=2, max_len=64,
+                           prefill_pad=8, scrub_every=3)
+        self.prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7]]
+
+    @staticmethod
+    def supports(policy: Policy, site: str) -> bool:
+        return not (policy == Policy.ABFT and site == "accumulator")
+
+    def _serve(self, policy: Policy, site: str, fault, key):
+        fleet = self.fleet
+        fleet.reset(policy=policy)
+        reqs = [self._Request(uid=i, prompt=list(p), max_new_tokens=4)
+                for i, p in enumerate(self.prompts)]
+        for r in reqs:
+            fleet.submit(r)
+        victim = fleet.replicas[0]
+        if site == "weights":
+            victim.engine.params = fl.inject_pytree_with(
+                victim.engine.params, key, fault)
+        else:   # accumulator: strike live decode state two ticks in
+            fleet.tick()
+            fleet.tick()
+            victim.engine.tokens = fault(victim.engine.tokens, key)
+        fleet.run()
+        outs = tuple(
+            tuple(fleet.released[r.uid].output) if r.uid in fleet.released
+            else None
+            for r in reqs)
+        return outs, fleet.metrics.detections > 0
+
+    def run_trials(self, policy, site, fault, keys):
+        golden, _ = self._serve(policy, site, _IDENTITY, keys[0])
+        detected_l, mismatch_l = [], []
+        for k in keys:
+            out, det = self._serve(policy, site, fault, k)
+            detected_l.append(bool(det))
+            mismatch_l.append(out != golden)
         return np.asarray(detected_l), np.asarray(mismatch_l)
 
 
@@ -351,6 +462,7 @@ CASES: Dict[str, type] = {
     "shipdet": ShipdetCase,
     "transformer": TransformerCase,
     "serving": ServingCase,
+    "fleet": FleetCase,
 }
 
 SUPPORTED = {name: (cls.sites, cls.policies) for name, cls in CASES.items()}
@@ -378,7 +490,10 @@ def run_campaign(specs: Sequence[fl.CampaignSpec],
         if case is None:
             case = build_case(spec.workload, spec.seed)
             cache[(spec.workload, spec.seed)] = case
-        if spec.site not in case.sites or spec.policy not in case.policies:
+        supported = (spec.site in case.sites and spec.policy in case.policies)
+        if supported and hasattr(case, "supports"):
+            supported = case.supports(spec.policy, spec.site)
+        if not supported:
             log(f"skip {spec.label()}: unsupported for workload")
             continue
         fault = fl.resolve_fault_model(spec.fault_model)

@@ -95,6 +95,41 @@ def abft_qmatmul(
 
 
 # ---------------------------------------------------------------------------
+# Storage scrubbing: the w_check idea generalized to whole parameter pytrees
+# ---------------------------------------------------------------------------
+
+
+def storage_checksums(params):
+    """Per-leaf mod-2^32 storage checksums for an arbitrary parameter pytree.
+
+    ``checksum_vector`` protects one matmul's weights; a serving fleet needs
+    the same deploy-time guarantee over *every* stored tensor (float params
+    included).  Each leaf is bitcast to its same-width unsigned view and
+    summed mod 2^32: a flipped bit b changes the sum by ±2^b ≠ 0 (mod 2^32),
+    so any single-bit weight-memory SEU is detected exactly — zero false
+    positives, zero false negatives, dtype-uniform.
+
+    Returns a pytree of () uint32 leaves mirroring ``params``; compute it
+    from the known-good copy at deploy/checkpoint time and scrub live
+    replicas against it (``verify_storage``).
+    """
+    from repro.core.fault_injection import _as_bits
+
+    def one(x):
+        bits, _ = _as_bits(jnp.asarray(x))
+        return jnp.sum(bits.astype(jnp.uint32))
+
+    return jax.tree_util.tree_map(one, params)
+
+
+def verify_storage(params, checks):
+    """Pytree of () bool leaves: True == leaf still matches its deploy-time
+    checksum.  ``jax.tree_util.tree_all`` of the result is the scrub verdict."""
+    fresh = storage_checksums(params)
+    return jax.tree_util.tree_map(lambda a, b: a == b, fresh, checks)
+
+
+# ---------------------------------------------------------------------------
 # Conv variant: checksum over output channels
 # ---------------------------------------------------------------------------
 

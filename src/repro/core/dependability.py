@@ -9,6 +9,10 @@ ask for a ``qlinear``; the policy decides how it is executed:
           as on the HPDP itself).
   ABFT  — exact integer checksum verify + recompute-recover (default for
           fleet deployment; ~1/N FLOP overhead).
+  DMR   — dual execution + bitwise compare (2× cost, detect-only): raises
+          the alarm but returns replica 0's output unchanged.  The cheap
+          partner of a failover layer — the fleet supervisor quarantines the
+          flagged replica and replays the work elsewhere.
   TMR   — triple execution + bitwise majority vote (3× cost; for the few
           layers whose corruption is mission-fatal, e.g. the final
           classification head of the ship detector).
@@ -33,6 +37,7 @@ from repro.core.quant import requantize
 class Policy(str, enum.Enum):
     NONE = "none"
     ABFT = "abft"
+    DMR = "dmr"
     TMR = "tmr"
 
 
@@ -80,7 +85,7 @@ def dependable_qmatmul(
         }
         return y, stats
 
-    if policy == Policy.TMR:
+    if policy in (Policy.TMR, Policy.DMR):
         # inject corrupts replica 0's accumulator — the same site as the
         # ABFT/NONE paths, so policy sweeps compare like for like
         def run(inj):
@@ -92,6 +97,18 @@ def dependable_qmatmul(
             colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
             acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
             return requantize(acc, scale, out_zp)
+
+        if policy == Policy.DMR:
+            # detect-only: replica 0 (possibly faulted) is returned as-is;
+            # disagreement with the clean re-execution raises the alarm
+            y = run(inject)
+            detected = ~redundancy.agree([y, run(None)])
+            stats = {
+                "faults_detected": stats["faults_detected"]
+                + detected.astype(jnp.int32),
+                "checks_run": stats["checks_run"] + 1,
+            }
+            return y, stats
 
         y = redundancy.vote([run(inject), run(None), run(None)])
         stats = {**stats, "checks_run": stats["checks_run"] + 1}
@@ -141,12 +158,22 @@ def dependable_qconv2d(
         }
         return y, stats
 
-    if policy == Policy.TMR:
+    if policy in (Policy.TMR, Policy.DMR):
         def run(inj):
             acc = plain_acc()
             if inj is not None:
                 acc = inj(acc)
             return requantize(acc + bias[None, None, None, :], scale, out_zp)
+
+        if policy == Policy.DMR:
+            y = run(inject)
+            detected = ~redundancy.agree([y, run(None)])
+            stats = {
+                "faults_detected": stats["faults_detected"]
+                + detected.astype(jnp.int32),
+                "checks_run": stats["checks_run"] + 1,
+            }
+            return y, stats
 
         y = redundancy.vote([run(inject), run(None), run(None)])
         stats = {**stats, "checks_run": stats["checks_run"] + 1}

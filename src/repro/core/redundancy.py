@@ -62,6 +62,24 @@ def agree(replicas: Sequence[jax.Array]) -> jax.Array:
     return ok
 
 
+def dmr_apply(f: Callable, *args, injectors: Sequence[Callable | None] = (None, None)):
+    """Dual modular redundancy, detect-only: run ``f`` twice (each pass
+    optionally perturbed by an injector) and compare bit-for-bit.
+
+    Returns ``(y0, detected)`` — replica 0's output plus a () bool that is
+    True when the replicas disagree.  DMR cannot vote a fault away (no
+    majority exists); its role is the cheap detect-then-escalate partner of
+    a failover layer: half the cost of TMR, full single-fault detection.
+    """
+    outs = []
+    for inj in injectors:
+        y = f(*args)
+        if inj is not None:
+            y = jax.tree_util.tree_map(inj, y)
+        outs.append(y)
+    return outs[0], ~agree(outs)
+
+
 def tmr_apply(f: Callable, *args, injectors: Sequence[Callable | None] = (None, None, None)):
     """Run ``f`` three times, each optionally perturbed by an injector
     (tests thread fault injection through here), and vote."""

@@ -1,0 +1,160 @@
+"""Fleet CLI — serve a deterministic request stream through a dependable
+multi-replica fleet, optionally striking one replica with an SEU, and write
+the fleet metrics report.
+
+    PYTHONPATH=src python -m repro.fleet.cli \
+        --arch smollm-135m --replicas 2 --requests 6 \
+        --policy abft --inject weights --seed 0
+
+The run always serves the same stream twice: once fault-free (the golden
+reference) and once under the requested fault.  The exit code is the
+dependability verdict: 0 when every released token stream matches the
+golden run, 1 when the fault silently corrupted the released output —
+so ``--policy none --inject weights`` is *expected* to exit 1 on
+manifesting faults, and abft/dmr must always exit 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import fault_injection as fi
+from repro.core.dependability import Policy
+from repro.fleet.fleet import FLEET_POLICIES, Fleet
+from repro.fleet.router import POLICIES as ROUTER_POLICIES
+from repro.runtime.serving import Request
+
+INJECT_SITES = ("none", "weights", "accumulator")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.fleet.cli",
+        description="Dependable multi-replica serving drill")
+    p.add_argument("--arch", default="smollm-135m")
+    p.add_argument("--replicas", type=int, default=2)
+    p.add_argument("--policy", default="abft",
+                   choices=[pol.value for pol in FLEET_POLICIES])
+    p.add_argument("--router", default="least_loaded",
+                   choices=list(ROUTER_POLICIES))
+    p.add_argument("--requests", type=int, default=6)
+    p.add_argument("--max-new-tokens", type=int, default=6)
+    p.add_argument("--capacity", type=int, default=3,
+                   help="decode slots per replica")
+    p.add_argument("--scrub-every", type=int, default=4,
+                   help="weight-scrub cadence in fleet ticks (abft)")
+    p.add_argument("--inject", default="none", choices=list(INJECT_SITES),
+                   help="SEU drill: corrupt replica 0's weights before "
+                        "serving, or its decode-state buffer mid-serve")
+    p.add_argument("--kill", type=int, default=-1, metavar="RID",
+                   help="kill replica RID mid-serve (failover drill)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default="reports/fleet",
+                   help="output directory for fleet.json")
+    p.add_argument("--quiet", action="store_true")
+    return p
+
+
+def _serve(fleet: Fleet, prompts, max_new_tokens: int, *,
+           inject: str = "none", kill: int = -1, key=None):
+    fleet.reset()
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=max_new_tokens)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        fleet.submit(r)
+    if inject == "weights":
+        victim = fleet.replicas[0]
+        victim.engine.params = fi.inject_pytree_with(
+            victim.engine.params, key, fi.flip_one_bit)
+    mid_drill = inject == "accumulator" or kill >= 0
+    if mid_drill:
+        for _ in range(2):
+            fleet.tick()
+        if inject == "accumulator":
+            victim = fleet.replicas[0]
+            victim.engine.tokens = fi.flip_one_bit(victim.engine.tokens, key)
+        if kill >= 0:
+            fleet.kill_replica(kill)
+    fleet.run()
+    outputs = tuple(
+        tuple(fleet.released[r.uid].output) if r.uid in fleet.released
+        else None
+        for r in reqs)
+    return outputs
+
+
+def main(argv=None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    if args.policy == "abft" and args.inject == "accumulator":
+        # same contract boundary the campaign enforces (FleetCase.supports):
+        # the weight scrub cannot see transient decode-state corruption
+        parser.error("--policy abft does not cover --inject accumulator "
+                     "(weight scrubs verify storage, not live decode state); "
+                     "use --policy dmr for transient-site drills")
+    from repro.configs import registry
+    from repro.models import api as model_api
+    from repro.models.config import reduced
+
+    log = (lambda s: None) if args.quiet else (lambda s: print(s, flush=True))
+    cfg = reduced(registry.get(args.arch))
+    params = model_api.init_params(cfg, jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(2, 7))).tolist()
+               for _ in range(args.requests)]
+
+    fleet = Fleet(cfg, params, n_replicas=args.replicas,
+                  policy=Policy(args.policy), router=args.router,
+                  scrub_every=args.scrub_every, capacity=args.capacity,
+                  max_len=96, prefill_pad=8)
+
+    log(f"fleet: {args.replicas}×{cfg.name} replicas, policy={args.policy}, "
+        f"router={args.router}")
+    log("golden pass (fault-free) …")
+    golden = _serve(fleet, prompts, args.max_new_tokens)
+
+    drill = args.inject != "none" or args.kill >= 0
+    if drill:
+        log(f"drill pass (inject={args.inject}, kill="
+            f"{args.kill if args.kill >= 0 else 'none'}) …")
+    observed = _serve(fleet, prompts, args.max_new_tokens,
+                      inject=args.inject, kill=args.kill,
+                      key=jax.random.key(args.seed + 1))
+
+    report = fleet.report()
+    report["arch"] = cfg.name
+    report["router"] = args.router
+    report["seed"] = args.seed
+    report["inject"] = args.inject
+    report["kill"] = args.kill
+    report["outputs_match_golden"] = observed == golden
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    jpath = out / "fleet.json"
+    jpath.write_text(json.dumps(report, indent=2))
+
+    log(json.dumps({k: v for k, v in report.items() if k != "events"},
+                   indent=2))
+    for e in report["events"]:
+        log(f"  event: {e}")
+    print(f"released {report['released']}/{report['submitted']} requests, "
+          f"recoveries={report['recoveries']}, detections="
+          f"{report['detections']}, outputs_match_golden="
+          f"{report['outputs_match_golden']}; wrote {jpath}")
+
+    if not report["outputs_match_golden"]:
+        print("released output stream differs from golden run "
+              "(silent corruption under this policy)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

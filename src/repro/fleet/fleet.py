@@ -1,0 +1,447 @@
+"""Multi-replica dependable serving — the repo's "dependable service" layer.
+
+The paper's system property — orchestrator watches, co-processor computes,
+faults never corrupt the output stream — promoted from a single ``Engine``
+to a supervised fleet of N of them:
+
+    client ──▶ Router (hash / least-loaded, admission, deadlines)
+                  │ assigns
+                  ▼
+        ┌──── Replica 0 ── Engine ────┐
+        │     Replica 1 ── Engine     │──▶ certified output stream
+        │         …                   │
+        └── Replica N-1 ── Engine ────┘
+                  ▲ scrubs / heartbeats / recovery
+              Supervisor (Orchestrator policies + ABFT storage checksums
+                          + checkpoint reload)
+
+The dependability contract is **certify-before-release**: a finished
+request's tokens are withheld until the replica that produced them proves
+it is clean —
+
+  * ``Policy.NONE``  release immediately (the undefended baseline campaigns
+    measure SDC against);
+  * ``Policy.ABFT``  release only after the serving replica passes a weight
+    scrub dated *after* the request finished.  A failed scrub recalls every
+    uncertified request and replays it on a verified replica, so a weight
+    SEU can delay tokens but never ship them wrong.  Lost work is bounded
+    by scrub_every × capacity tokens per replica.
+  * ``Policy.DMR``   every request is decoded twice on distinct replicas
+    (primary + shadow); bit-identical streams release immediately, any
+    disagreement is detected, attributed by scrubbing both replicas
+    (corrupted one recovers via checkpoint reload), and the request replays
+    on a clean replica.  Catches *transient* compute/state faults the
+    weight scrub cannot see, at 2× decode cost.
+
+Failover is deterministic: greedy decode is a pure function of (params,
+prompt) and the engine's continuous batching is composition-independent, so
+a replayed request reproduces its tokens bit-exactly on any clean replica —
+the property the campaign workload certifies statistically.
+
+Everything advances on an integer ``tick`` (one engine step per healthy
+replica) and every decision is a pure function of fleet state, so a trial
+replays bit-for-bit from its seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+from repro.core.dependability import Policy
+from repro.fleet.metrics import FleetMetrics
+from repro.fleet.replica import Replica, ReplicaState
+from repro.fleet.router import Router
+from repro.fleet.supervisor import Supervisor
+from repro.models.config import ArchConfig
+from repro.runtime.serving import Request
+from repro.train import checkpoint as ckpt_mod
+
+FLEET_POLICIES = (Policy.NONE, Policy.ABFT, Policy.DMR)
+
+
+@dataclasses.dataclass
+class _Tracked:
+    """Fleet-side lifecycle record for one submitted request."""
+    req: Request                      # the caller's object (primary copy)
+    shadow: Optional[Request]         # DMR twin, served on a different replica
+    primary_rid: int
+    shadow_rid: int = -1
+    submitted_tick: int = 0
+    deadline_ticks: Optional[int] = None
+    primary_done: bool = False
+    shadow_done: bool = False
+    replays: int = 0
+    released: bool = False
+    expired: bool = False
+    failed: bool = False
+
+    @property
+    def terminal(self) -> bool:
+        return self.released or self.expired or self.failed
+
+
+class Fleet:
+    MAX_REPLAYS = 3
+
+    def __init__(self, cfg: ArchConfig, params, n_replicas: int = 2, *,
+                 policy: Policy = Policy.ABFT, router: str = "least_loaded",
+                 admit_limit: Optional[int] = None, scrub_every: int = 4,
+                 capacity: int = 4, max_len: int = 128, prefill_pad: int = 8,
+                 snapshot_every: int = 16, eos_id: int = -1,
+                 heartbeat_timeout: float = 25.0, ckpt_dir: Optional[str] = None):
+        if policy not in FLEET_POLICIES:
+            raise ValueError(
+                f"fleet policy must be one of {[p.value for p in FLEET_POLICIES]}"
+                f" (TMR at fleet scale is three engines + vote; use DMR + "
+                f"failover, the 2× alternative this fleet implements)")
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.cfg = cfg
+        self.policy = policy
+        self.scrub_every = scrub_every
+
+        # golden state: checkpoint for reload-recovery, checksums for scrub
+        self._params0 = params
+        self._owns_ckpt_dir = ckpt_dir is None
+        self.ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix="fleet-golden-")
+        ckpt_mod.save(self.ckpt_dir, 0, params)
+
+        first = Replica(0, cfg, params, capacity=capacity, max_len=max_len,
+                        prefill_pad=prefill_pad, snapshot_every=snapshot_every,
+                        eos_id=eos_id)
+        self.replicas: List[Replica] = [first] + [
+            Replica(i, cfg, params, capacity=capacity, max_len=max_len,
+                    prefill_pad=prefill_pad, snapshot_every=snapshot_every,
+                    eos_id=eos_id, golden=first.golden,
+                    compiled=first.engine.compiled)
+            for i in range(1, n_replicas)]
+        self.router = Router(router, admit_limit)
+        self.supervisor = Supervisor(n_replicas, scrub_every=scrub_every,
+                                     heartbeat_timeout=heartbeat_timeout)
+        self.metrics = FleetMetrics(
+            lost_work_bound_tokens=scrub_every * capacity)
+        self.tick_no = 0
+        self.records: Dict[int, _Tracked] = {}
+        self.released: Dict[int, Request] = {}
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: Request,
+               deadline_ticks: Optional[int] = None) -> bool:
+        """Route a request into the fleet; False == rejected (admission
+        control or no healthy replica)."""
+        if req.uid in self.records:
+            raise ValueError(f"duplicate request uid {req.uid}")
+        self.metrics.submitted += 1
+        primary = self.router.pick(req.uid, self.replicas)
+        if primary is None:
+            self.metrics.rejected += 1
+            return False
+        rec = _Tracked(req=req, shadow=None, primary_rid=primary.rid,
+                       submitted_tick=self.tick_no,
+                       deadline_ticks=deadline_ticks)
+        if self.policy == Policy.DMR:
+            self._place_shadow(rec)
+        primary.engine.submit(req)
+        self.records[req.uid] = rec
+        return True
+
+    def _place_shadow(self, rec: _Tracked):
+        """DMR twin placement: a copy of the request on a healthy replica
+        other than the primary.  With no second healthy replica the request
+        serves undoubled (degraded DMR: release on finish, logged)."""
+        shadow_replica = self.router.pick(rec.req.uid, self.replicas,
+                                          exclude=(rec.primary_rid,))
+        if shadow_replica is None:
+            rec.shadow = None
+            rec.shadow_rid = -1
+            self.supervisor.events.append(
+                f"tick {self.tick_no}: uid {rec.req.uid} served without "
+                f"shadow (no second healthy replica)")
+            return
+        rec.shadow = Request(uid=rec.req.uid, prompt=list(rec.req.prompt),
+                             max_new_tokens=rec.req.max_new_tokens)
+        rec.shadow_rid = shadow_replica.rid
+        shadow_replica.engine.submit(rec.shadow)
+
+    # ----------------------------------------------------------- tick loop
+    def tick(self):
+        """One fleet scheduling round: step every healthy engine, collect
+        finishes, heartbeat, scrub on cadence, expire deadlines."""
+        self.tick_no += 1
+        self.metrics.ticks += 1
+        for r in self.replicas:
+            if r.state is not ReplicaState.HEALTHY or r.paused:
+                continue
+            t0 = time.perf_counter()
+            finished = r.engine.step()
+            self.metrics.engine_steps += 1
+            self.supervisor.heartbeat(r.rid, r.engine.stats.steps,
+                                      time.perf_counter() - t0, self.tick_no)
+            for req in finished:
+                self._on_finished(r, req)
+        self.supervisor.stragglers()      # straggler log (advisory in-process)
+
+        for rid in self.supervisor.newly_dead(self.tick_no):
+            r = self.replicas[rid]
+            if r.state is ReplicaState.HEALTHY:
+                self._fail_replica(r, reason="heartbeat timeout",
+                                   recover=False)
+
+        if self.policy == Policy.ABFT and self.supervisor.due_for_scrub(
+                self.tick_no):
+            for r in self.replicas:
+                if r.state is ReplicaState.HEALTHY:
+                    self._scrub_and_settle(r)
+
+        self._expire_deadlines()
+
+    def run(self, max_ticks: int = 100_000) -> FleetMetrics:
+        """Serve until every submitted request reaches a terminal state
+        (released / expired / failed) or the tick budget runs out."""
+        while self.tick_no < max_ticks:
+            if not self._work_pending():
+                self._final_certification()
+                if not self._work_pending():
+                    break
+            self.tick()
+        return self.metrics
+
+    # ------------------------------------------------------ finish handling
+    def _on_finished(self, replica: Replica, req: Request):
+        rec = self.records.get(req.uid)
+        if rec is None or rec.terminal:
+            return
+        is_primary = req is rec.req
+        if not is_primary and req is not rec.shadow:
+            return                                   # stale pre-replay copy
+        if self.policy == Policy.ABFT:
+            if is_primary:
+                replica.uncertified.append(req)
+            return
+        if self.policy == Policy.DMR and rec.shadow is not None:
+            if is_primary:
+                rec.primary_done = True
+            else:
+                rec.shadow_done = True
+            if rec.primary_done and rec.shadow_done:
+                if rec.req.output == rec.shadow.output:
+                    self._release(rec)
+                else:
+                    self._dmr_mismatch(rec)
+            return
+        # Policy.NONE (or degraded DMR): release on finish
+        if is_primary:
+            self._release(rec)
+
+    def _release(self, rec: _Tracked):
+        rec.released = True
+        self.released[rec.req.uid] = rec.req
+        self.metrics.observe_release(self.tick_no - rec.submitted_tick,
+                                     len(rec.req.output or []))
+
+    # ------------------------------------------------------------ ABFT path
+    def _scrub_and_settle(self, replica: Replica):
+        """Scrub a replica; clean ⇒ certify+release its finished requests,
+        dirty ⇒ full recovery loop + recall/replay of everything uncertified
+        or in flight."""
+        if self.supervisor.scrub(replica, self.metrics, self.tick_no):
+            for req in replica.uncertified:
+                rec = self.records.get(req.uid)
+                if rec is not None and not rec.terminal:
+                    self._release(rec)
+            replica.uncertified = []
+        else:
+            self._fail_replica(replica, reason="weight scrub failed",
+                               recover=True)
+
+    # ----------------------------------------------------------- DMR path
+    def _dmr_mismatch(self, rec: _Tracked):
+        """Primary and shadow streams disagree: detect, attribute by
+        scrubbing both replicas (weight-SEU ⇒ recovery loop), then replay
+        the request on a clean replica (transient faults leave both scrubs
+        clean; the fresh third execution is the tie-breaker)."""
+        self.metrics.detections += 1
+        self.supervisor.events.append(
+            f"tick {self.tick_no}: uid {rec.req.uid} DMR mismatch "
+            f"(replicas {rec.primary_rid}/{rec.shadow_rid})")
+        for rid in (rec.primary_rid, rec.shadow_rid):
+            r = self.replicas[rid]
+            if r.state is ReplicaState.HEALTHY and not self.supervisor.scrub(
+                    r, self.metrics, self.tick_no):
+                self._fail_replica(r, reason="weight scrub failed "
+                                   "(DMR attribution)", recover=True)
+        self._replay(rec)
+
+    # ------------------------------------------------------------- failover
+    def kill_replica(self, rid: int, reason: str = "killed"):
+        """Simulated hard loss (test/campaign hook): the replica is DEAD and
+        its in-flight work fails over to the healthy survivors."""
+        r = self.replicas[rid]
+        if r.state is ReplicaState.DEAD:
+            return
+        self._fail_replica(r, reason=reason, recover=False)
+
+    def pause_replica(self, rid: int):
+        """Stop stepping/heartbeating a replica without killing it — the
+        supervisor's heartbeat timeout must notice on its own."""
+        self.replicas[rid].paused = True
+
+    def _fail_replica(self, replica: Replica, *, reason: str, recover: bool):
+        """Common exit from HEALTHY: drain every request the replica owns
+        (queued, decoding, finished-but-uncertified), run the recovery loop
+        if asked, then replay the drained work on verified replicas."""
+        drained = replica.in_flight() + replica.uncertified
+        replica.uncertified = []
+        self.supervisor.events.append(
+            f"tick {self.tick_no}: replica {replica.rid} failed ({reason}); "
+            f"{len(drained)} requests drained")
+        if recover:
+            self.supervisor.recover(replica, self.ckpt_dir, self.metrics,
+                                    self.tick_no)
+        else:
+            replica.state = ReplicaState.DEAD
+            self.metrics.replicas_lost += 1
+            self.supervisor.events.append(
+                f"tick {self.tick_no}: replica {replica.rid} DEAD ({reason})")
+        for req in drained:
+            rec = self.records.get(req.uid)
+            if rec is not None and not rec.terminal:
+                self._replay(rec)
+
+    def _replay(self, rec: _Tracked):
+        """Deterministic failover: requeue the request (and its DMR shadow)
+        from the prompt on healthy replicas; decode determinism makes the
+        replayed stream bit-identical to what a fault-free replica would
+        have produced."""
+        rec.replays += 1
+        self.metrics.failovers += 1
+        self.metrics.lost_tokens += len(rec.req.output or [])
+        if rec.shadow is not None:
+            self.metrics.lost_tokens += len(rec.shadow.output or [])
+        # evict any copy still resident somewhere (queued on a replica that
+        # did not fail, half of a DMR pair, …)
+        for r in self.replicas:
+            r.engine.cancel(rec.req.uid)
+            r.uncertified = [q for q in r.uncertified if q.uid != rec.req.uid]
+        if rec.replays > self.MAX_REPLAYS:
+            rec.failed = True
+            self.metrics.failed += 1
+            self.supervisor.events.append(
+                f"tick {self.tick_no}: uid {rec.req.uid} FAILED "
+                f"(replay budget exhausted)")
+            return
+        rec.req.output = None
+        rec.req.finished_at = 0.0
+        rec.primary_done = rec.shadow_done = False
+        primary = self.router.pick(rec.req.uid, self.replicas)
+        if primary is None:
+            rec.failed = True
+            self.metrics.failed += 1
+            self.supervisor.events.append(
+                f"tick {self.tick_no}: uid {rec.req.uid} FAILED "
+                f"(no healthy replica for failover)")
+            return
+        rec.primary_rid = primary.rid
+        if self.policy == Policy.DMR:
+            self._place_shadow(rec)
+        primary.engine.submit(rec.req)
+
+    # ------------------------------------------------------------ deadlines
+    def _expire_deadlines(self):
+        for rec in self.records.values():
+            if rec.terminal or rec.deadline_ticks is None:
+                continue
+            if self.tick_no - rec.submitted_tick > rec.deadline_ticks:
+                rec.expired = True
+                self.metrics.deadline_misses += 1
+                for r in self.replicas:
+                    r.engine.cancel(rec.req.uid)
+                    r.uncertified = [q for q in r.uncertified
+                                     if q.uid != rec.req.uid]
+                self.supervisor.events.append(
+                    f"tick {self.tick_no}: uid {rec.req.uid} missed its "
+                    f"deadline ({rec.deadline_ticks} ticks)")
+
+    # ------------------------------------------------------------- draining
+    def _engines_busy(self) -> bool:
+        return any(r.state is ReplicaState.HEALTHY and not r.paused
+                   and (r.engine.queue or r.engine.active)
+                   for r in self.replicas)
+
+    def _work_pending(self) -> bool:
+        if self._engines_busy():
+            return True
+        return any(not rec.terminal for rec in self.records.values())
+
+    def _final_certification(self):
+        """End-of-stream settlement: scrub every replica still holding
+        uncertified output so the tail of the stream is certified (or
+        recalled) even when the tick count never hits the scrub cadence."""
+        if self.policy == Policy.ABFT:
+            for r in self.replicas:
+                if r.state is ReplicaState.HEALTHY and r.uncertified:
+                    self._scrub_and_settle(r)
+        # non-ABFT terminal stragglers: requests stranded on dead replicas
+        for rec in list(self.records.values()):
+            if not rec.terminal and not self._request_resident(rec):
+                self._replay(rec)
+
+    def _request_resident(self, rec: _Tracked) -> bool:
+        """Is any live copy of the request still queued/decoding/uncertified
+        on a healthy replica?"""
+        for r in self.replicas:
+            if r.state is not ReplicaState.HEALTHY:
+                continue
+            for req in r.in_flight() + r.uncertified:
+                if req.uid == rec.req.uid:
+                    return True
+        return False
+
+    # --------------------------------------------------------------- reset
+    def reset(self, policy: Optional[Policy] = None):
+        """Return the fleet to a fresh, fully-healthy state with the golden
+        params (campaign trials reuse one fleet so engines stay compiled).
+        Dependability counters restart; the golden checkpoint is reused."""
+        if policy is not None:
+            if policy not in FLEET_POLICIES:
+                raise ValueError(f"fleet policy must be one of "
+                                 f"{[p.value for p in FLEET_POLICIES]}")
+            self.policy = policy
+        for r in self.replicas:
+            r.reset(params=self._params0)
+        self.supervisor.reset()
+        self.metrics = FleetMetrics(
+            lost_work_bound_tokens=self.metrics.lost_work_bound_tokens)
+        self.tick_no = 0
+        self.records = {}
+        self.released = {}
+
+    def close(self):
+        """Delete the golden checkpoint directory if this fleet created it
+        (a caller-supplied ckpt_dir is the caller's to manage)."""
+        if self._owns_ckpt_dir:
+            shutil.rmtree(self.ckpt_dir, ignore_errors=True)
+            self._owns_ckpt_dir = False
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:       # noqa: BLE001 — interpreter teardown
+            pass
+
+    # -------------------------------------------------------------- report
+    def report(self) -> dict:
+        """Fleet metrics + per-replica state, JSON-ready."""
+        out = self.metrics.to_json()
+        out["policy"] = self.policy.value
+        out["replicas"] = [
+            {"rid": r.rid, "state": r.state.value,
+             "recoveries": r.recoveries,
+             "engine_steps": r.engine.stats.steps,
+             "engine_tokens_out": r.engine.stats.tokens_out}
+            for r in self.replicas]
+        out["events"] = list(self.supervisor.events)
+        return out

@@ -1,0 +1,91 @@
+"""Fleet-level service metrics.
+
+One ``FleetMetrics`` instance accumulates everything a dependable-serving
+SLO needs: delivery counters (released / rejected / deadline misses),
+dependability counters (scrubs, detections, recoveries, failovers), the
+lost-work accounting the paper's bounded-recovery story requires, and
+per-request latency in *ticks* (the fleet's deterministic clock) so the
+numbers replay bit-exactly under campaign seeds.  ``to_json`` is the export
+surface — the fleet CLI and campaign reports both serialize it verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    # configuration-derived bound: max tokens a replica can produce between
+    # two clean scrubs (certification window × batch width)
+    lost_work_bound_tokens: int = 0
+
+    # service counters
+    ticks: int = 0
+    engine_steps: int = 0
+    submitted: int = 0
+    released: int = 0
+    rejected: int = 0
+    deadline_misses: int = 0
+    failed: int = 0
+    tokens_out: int = 0              # tokens of *released* (certified) requests
+
+    # dependability counters
+    scrubs: int = 0
+    detections: int = 0              # scrub mismatches + DMR disagreements
+    recoveries: int = 0              # quarantine→reload→re-verify→readmit cycles
+    failovers: int = 0               # requests replayed on another replica
+    replicas_lost: int = 0           # replicas that ended DEAD
+    lost_tokens: int = 0             # tokens discarded and re-decoded (actual lost work)
+
+    # latency, in fleet ticks (submit → release)
+    latencies: List[int] = dataclasses.field(default_factory=list)
+    started_at: float = dataclasses.field(default_factory=time.time)
+
+    # ------------------------------------------------------------- derived
+    def observe_release(self, latency_ticks: int, n_tokens: int):
+        self.released += 1
+        self.tokens_out += n_tokens
+        self.latencies.append(int(latency_ticks))
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies), q))
+
+    @property
+    def p50_ticks(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def p99_ticks(self) -> float:
+        return self.latency_percentile(99)
+
+    def throughput_tokens_per_tick(self) -> float:
+        return self.tokens_out / max(self.ticks, 1)
+
+    # -------------------------------------------------------------- export
+    def to_json(self) -> dict:
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)
+             if f.name not in ("latencies", "started_at")}
+        d.update(
+            p50_latency_ticks=self.p50_ticks,
+            p99_latency_ticks=self.p99_ticks,
+            tokens_per_tick=self.throughput_tokens_per_tick(),
+            wall_seconds=round(time.time() - self.started_at, 3),
+            tokens_per_second=round(
+                self.tokens_out / max(time.time() - self.started_at, 1e-9), 1),
+        )
+        return d
+
+    def dump(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=2))
+        return path

@@ -1,0 +1,103 @@
+"""One supervised serving replica: an Engine plus its dependability lifecycle.
+
+The replica is the fleet's unit of failure.  Its state machine is the
+recovery loop the ROADMAP asked for (quarantine → reload → re-verify →
+readmit), driven by the supervisor:
+
+    HEALTHY ──scrub fail / heartbeat loss──▶ QUARANTINED
+    QUARANTINED ──checkpoint reload──▶ RECOVERING
+    RECOVERING ──re-verify ok──▶ HEALTHY   (readmitted, recoveries += 1)
+    RECOVERING ──re-verify fail──▶ DEAD
+    any ──kill──▶ DEAD
+
+Weight integrity is judged against deploy-time ABFT storage checksums
+(``core.abft.storage_checksums``): computed once from the known-good params,
+carried by every replica, exact mod 2^32 — the same Huang–Abraham identity
+that guards the matmul accumulator, applied to the parameter store.
+"""
+from __future__ import annotations
+
+import enum
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abft
+from repro.models.config import ArchConfig
+from repro.runtime.serving import Engine, Request
+
+# jitted once per pytree structure, shared by all replicas
+_checksums_jit = jax.jit(abft.storage_checksums)
+_verify_jit = jax.jit(abft.verify_storage)
+
+
+class ReplicaState(str, enum.Enum):
+    HEALTHY = "healthy"
+    QUARANTINED = "quarantined"
+    RECOVERING = "recovering"
+    DEAD = "dead"
+
+
+class Replica:
+    """An ``Engine`` wrapped with identity, health state, and scrub support."""
+
+    def __init__(self, rid: int, cfg: ArchConfig, params, *,
+                 capacity: int = 4, max_len: int = 128, prefill_pad: int = 8,
+                 snapshot_every: int = 16, eos_id: int = -1,
+                 golden=None, compiled=None):
+        self.rid = rid
+        self.engine = Engine(cfg, params, capacity=capacity, max_len=max_len,
+                             prefill_pad=prefill_pad,
+                             snapshot_every=snapshot_every, eos_id=eos_id,
+                             compiled=compiled)
+        self.state = ReplicaState.HEALTHY
+        self.paused = False          # test hook: stop heartbeating (looks dead)
+        self.golden = golden if golden is not None else _checksums_jit(params)
+        self.uncertified: List[Request] = []   # finished, awaiting clean scrub
+        self.recoveries = 0
+        self.last_clean_scrub_tick = 0
+
+    # --------------------------------------------------------------- status
+    @property
+    def healthy(self) -> bool:
+        return self.state is ReplicaState.HEALTHY and not self.paused
+
+    def load(self) -> int:
+        """Requests currently owned (queued + decoding) — router's cost."""
+        return len(self.engine.queue) + len(self.engine.active)
+
+    def in_flight(self) -> List[Request]:
+        """Queued + active requests, in deterministic (queue, slot) order."""
+        return list(self.engine.queue) + [
+            self.engine.active[s] for s in sorted(self.engine.active)]
+
+    # ---------------------------------------------------------------- scrub
+    def scrub(self) -> List[str]:
+        """Verify live weights against deploy-time checksums; returns the
+        paths of corrupted leaves ([] == clean)."""
+        ok_tree = _verify_jit(self.engine.params, self.golden)
+        flat, _ = jax.tree_util.tree_flatten_with_path(ok_tree)
+        bad = []
+        for path, ok in flat:
+            if not bool(ok):
+                bad.append(jax.tree_util.keystr(path))
+        return bad
+
+    # ------------------------------------------------------------- recovery
+    def reload(self, params):
+        """Replace params with a known-good copy and clear all run state
+        (the reload step of the recovery loop; compiled fns are kept)."""
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.engine.reset(params=params)
+        self.uncertified = []
+
+    def reset(self, params=None):
+        """Full revival for a new trial/run: fresh engine state, HEALTHY."""
+        if params is not None:
+            params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.engine.reset(params=params)
+        self.uncertified = []
+        self.state = ReplicaState.HEALTHY
+        self.paused = False
+        self.last_clean_scrub_tick = 0

@@ -1,0 +1,112 @@
+"""Fleet supervision: heartbeats, stragglers, scrubbing, and recovery.
+
+The supervisor is the fleet's RTG4: it never touches a token itself, it
+watches the replicas that do.  Health tracking reuses the training
+``Orchestrator`` policies verbatim (heartbeat timeout ⇒ dead, step time
+vs cluster median ⇒ straggler) with the fleet's deterministic tick counter
+as the clock, so verdicts replay bit-exactly under campaign seeds.
+
+On top of health it owns the two dependability duties the serving layer
+needs:
+
+  * **scrub** — verify a replica's live weights against the deploy-time
+    ABFT storage checksums (``core.abft.storage_checksums``); any mismatch
+    is a detected weight-SEU.
+  * **recover** — drive the quarantine → checkpoint reload → re-verify →
+    readmit state machine for a replica whose scrub failed.  Reload comes
+    from the fleet's golden checkpoint (``train/checkpoint.py``, crc32-
+    verified on read); re-verification scrubs the reloaded weights before
+    the replica serves again.  A replica that cannot be re-verified is DEAD.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.fleet.metrics import FleetMetrics
+from repro.fleet.replica import Replica, ReplicaState
+from repro.runtime.orchestrator import Orchestrator
+from repro.train import checkpoint as ckpt_mod
+
+
+class Supervisor:
+    def __init__(self, n_replicas: int, *, scrub_every: int = 8,
+                 heartbeat_timeout: float = 25.0,
+                 straggler_factor: float = 3.0):
+        self.n_replicas = n_replicas
+        self.scrub_every = scrub_every
+        self.heartbeat_timeout = heartbeat_timeout
+        self.straggler_factor = straggler_factor
+        self.orch = Orchestrator(n_replicas,
+                                 heartbeat_timeout=heartbeat_timeout,
+                                 straggler_factor=straggler_factor)
+        self.events: List[str] = self.orch.events   # one shared event log
+
+    def reset(self):
+        self.orch = Orchestrator(self.n_replicas,
+                                 heartbeat_timeout=self.heartbeat_timeout,
+                                 straggler_factor=self.straggler_factor)
+        self.events = self.orch.events
+
+    # ------------------------------------------------------------ heartbeats
+    def heartbeat(self, rid: int, step: int, step_time: float, tick: int):
+        self.orch.heartbeat(rid, step, step_time, now=float(tick))
+
+    def newly_dead(self, tick: int) -> List[int]:
+        """Replica uids whose heartbeats stopped (timeout in ticks)."""
+        return self.orch.check_health(now=float(tick))
+
+    def stragglers(self) -> List[int]:
+        return self.orch.detect_stragglers()
+
+    # ---------------------------------------------------------------- scrub
+    def due_for_scrub(self, tick: int) -> bool:
+        return self.scrub_every > 0 and tick % self.scrub_every == 0
+
+    def scrub(self, replica: Replica, metrics: FleetMetrics,
+              tick: int) -> bool:
+        """Weight-integrity check; returns True when clean."""
+        metrics.scrubs += 1
+        bad = replica.scrub()
+        if bad:
+            metrics.detections += 1
+            self.events.append(
+                f"tick {tick}: replica {replica.rid} scrub FAILED "
+                f"({len(bad)} corrupted leaves, e.g. {bad[0]})")
+            return False
+        replica.last_clean_scrub_tick = tick
+        return True
+
+    # ------------------------------------------------------------- recovery
+    def recover(self, replica: Replica, ckpt_dir, metrics: FleetMetrics,
+                tick: int) -> bool:
+        """quarantine → reload → re-verify → readmit.  Returns True when the
+        replica is HEALTHY again; on any failure it is left DEAD."""
+        replica.state = ReplicaState.QUARANTINED
+        self.events.append(f"tick {tick}: replica {replica.rid} quarantined")
+        replica.state = ReplicaState.RECOVERING
+        try:
+            _, params = ckpt_mod.restore(ckpt_dir)   # crc32-verified read
+        except Exception as e:                        # noqa: BLE001
+            replica.state = ReplicaState.DEAD
+            metrics.replicas_lost += 1
+            self.events.append(
+                f"tick {tick}: replica {replica.rid} DEAD "
+                f"(checkpoint reload failed: {e})")
+            return False
+        replica.reload(params)
+        still_bad = replica.scrub()
+        if still_bad:
+            replica.state = ReplicaState.DEAD
+            metrics.replicas_lost += 1
+            self.events.append(
+                f"tick {tick}: replica {replica.rid} DEAD "
+                f"(re-verify failed after reload)")
+            return False
+        replica.state = ReplicaState.HEALTHY
+        replica.last_clean_scrub_tick = tick
+        replica.recoveries += 1
+        metrics.recoveries += 1
+        self.events.append(
+            f"tick {tick}: replica {replica.rid} readmitted "
+            f"(checkpoint reload + re-verify ok)")
+        return True

@@ -67,7 +67,8 @@ class Engine:
 
     def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
                  max_len: int = 512, prefill_pad: int = 64,
-                 snapshot_every: int = 32, eos_id: int = -1):
+                 snapshot_every: int = 32, eos_id: int = -1,
+                 compiled=None):
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
@@ -86,17 +87,29 @@ class Engine:
         self.cache = model_api.init_cache(cfg, capacity, max_len)
         self.tokens = jnp.zeros((capacity,), jnp.int32)
 
-        def _step(p, t, c):
-            logits, c = model_api.decode_step(cfg, p, t, c)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), c
+        if compiled is not None:
+            # replica fleets share one jitted (decode, prefill) pair so N
+            # engines over the same config compile once, not N times
+            self._decode, self._prefill = compiled
+        else:
+            def _step(p, t, c):
+                logits, c = model_api.decode_step(cfg, p, t, c)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), c
 
-        self._decode = jax.jit(_step)
-        self._prefill = jax.jit(
-            lambda p, t, c=None: model_api.prefill(cfg, p, t, max_len),
-            static_argnums=())
+            self._decode = jax.jit(_step)
+            self._prefill = jax.jit(
+                lambda p, t, c=None: model_api.prefill(cfg, p, t, max_len),
+                static_argnums=())
         self._snapshot = None
         self._snapshot_step = 0
+        self._since_snapshot: List[Request] = []   # admitted after snapshot
         self.dependability = DependabilityStats.zero()
+
+    @property
+    def compiled(self):
+        """The jitted (decode, prefill) pair, shareable with same-config
+        engines via the ``compiled=`` constructor argument."""
+        return (self._decode, self._prefill)
 
     def reset(self, params=None):
         """Return the engine's run state (queue, slots, cache, per-run stats)
@@ -117,6 +130,7 @@ class Engine:
         self.tokens = jnp.zeros((self.capacity,), jnp.int32)
         self._snapshot = None
         self._snapshot_step = 0
+        self._since_snapshot = []
 
     # ------------------------------------------------------- dependability
     def record_dependability(self, stats: dict):
@@ -141,14 +155,49 @@ class Engine:
     def _free_slots(self) -> List[int]:
         return [s for s in range(self.capacity) if s not in self.active]
 
-    def _admit(self):
-        """Prefill queued requests into free slots (continuous batching)."""
+    def cancel(self, uid: int) -> bool:
+        """Evict a request from the queue or its slot (deadline/abort path).
+        The slot's cache rows go stale but are overwritten by the next
+        admission's prefill.  Also purged from snapshot bookkeeping so a
+        later ``restore_snapshot`` cannot resurrect cancelled work.
+        Returns True if the request was found live (queued or decoding)."""
+        self._since_snapshot = [r for r in self._since_snapshot
+                                if r.uid != uid]
+        if self._snapshot is not None:
+            for slot, r in list(self._snapshot["active"].items()):
+                if r.uid == uid:
+                    del self._snapshot["active"][slot]
+                    del self._snapshot["outputs"][slot]
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                return True
+        for slot, r in list(self.active.items()):
+            if r.uid == uid:
+                del self.active[slot]
+                self.slot_remaining[slot] = 0
+                return True
+        return False
+
+    def _admit(self) -> List[Request]:
+        """Prefill queued requests into free slots (continuous batching).
+        Returns requests that finished during admission (prompt already
+        produced their only token)."""
+        finished: List[Request] = []
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.popleft()
+            self._since_snapshot.append(req)
             prompt = req.prompt[: self.max_len - req.max_new_tokens]
-            pad = -(-len(prompt) // self.prefill_pad) * self.prefill_pad
+            # attention caches mask past each row's length, so right-padding
+            # to a bucket is free; recurrent state integrates every token it
+            # sees, so state families must prefill the exact prompt (one
+            # compile per distinct length instead of per bucket)
+            if self.cfg.recurrent is not None:
+                pad = len(prompt)
+            else:
+                pad = -(-len(prompt) // self.prefill_pad) * self.prefill_pad
             toks = jnp.asarray(
                 [prompt + [0] * (pad - len(prompt))], jnp.int32)
             logits, cache1 = self._prefill(self.params, toks)
@@ -165,20 +214,23 @@ class Engine:
             if self.slot_remaining[slot] <= 0:
                 req.finished_at = time.time()
                 del self.active[slot]
+                finished.append(req)
+        return finished
 
     # ----------------------------------------------------------------- steps
-    def step(self) -> int:
-        """One decode step for every active slot; returns #finished."""
-        self._admit()
+    def step(self) -> List[Request]:
+        """One decode step for every active slot; returns requests that
+        finished this step (admission-time finishes included)."""
+        finished = self._admit()
         if not self.active:
-            return 0
+            return finished
         if self.stats.steps % self.snapshot_every == 0:
             self._take_snapshot()
         nxt, self.cache = self._decode(self.params, self.tokens, self.cache)
         self.tokens = nxt
         self.stats.steps += 1
         nxt_host = np.asarray(nxt)
-        finished = []
+        done_slots = []
         for slot, req in list(self.active.items()):
             req.output.append(int(nxt_host[slot]))
             self.slot_pos[slot] += 1
@@ -188,10 +240,10 @@ class Engine:
                     or int(nxt_host[slot]) == self.eos_id
                     or self.slot_pos[slot] >= self.max_len - 1):
                 req.finished_at = time.time()
-                finished.append(slot)
-        for slot in finished:
-            del self.active[slot]
-        return len(finished)
+                done_slots.append(slot)
+        for slot in done_slots:
+            finished.append(self.active.pop(slot))
+        return finished
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         """Drain queue + active set."""
@@ -201,30 +253,56 @@ class Engine:
 
     # ----------------------------------------------------- fault tolerance
     def _take_snapshot(self):
-        self._snapshot = (jax.tree_util.tree_map(lambda x: x, self.cache),
-                          self.tokens, self.slot_pos.copy(),
-                          self.slot_remaining.copy(),
-                          {s: list(r.output) for s, r in self.active.items()})
+        self._snapshot = {
+            "cache": self.cache,
+            "tokens": self.tokens,
+            "slot_pos": self.slot_pos.copy(),
+            "slot_remaining": self.slot_remaining.copy(),
+            "active": dict(self.active),
+            "outputs": {s: list(r.output) for s, r in self.active.items()},
+            "steps": self.stats.steps,
+            "tokens_out": self.stats.tokens_out,
+        }
         self._snapshot_step = self.stats.steps
+        self._since_snapshot = []
 
     def restore_snapshot(self) -> int:
         """Roll back to the last snapshot (device-fault recovery path).
+
+        The snapshot round-trips the *whole* decode state: cache, token
+        buffer, per-slot bookkeeping, active-set membership, request outputs
+        and the step/token counters — so ``tokens_per_step()`` and token
+        accounting stay exact across a replay, and requests that finished or
+        were admitted after the snapshot are correctly re-decoded / requeued.
+        ``replays`` and ``faults_detected`` are lifetime counters and are
+        never rolled back.
 
         Returns the number of steps replayed (lost work bound =
         snapshot_every).
         """
         if self._snapshot is None:
             raise RuntimeError("no snapshot taken yet")
-        cache, tokens, pos, rem, outs = self._snapshot
-        self.cache = cache
-        self.tokens = tokens
-        self.slot_pos = pos.copy()
-        self.slot_remaining = rem.copy()
-        for s, out in outs.items():
-            if s in self.active:
-                self.active[s].output = list(out)
-        lost = self.stats.steps - self._snapshot_step
-        self.stats.steps = self._snapshot_step
+        snap = self._snapshot
+        self.cache = snap["cache"]
+        self.tokens = snap["tokens"]
+        self.slot_pos = snap["slot_pos"].copy()
+        self.slot_remaining = snap["slot_remaining"].copy()
+        # active set as of the snapshot: resurrects requests that finished
+        # after it (their post-snapshot tokens are suspect) and drops ones
+        # admitted after it (requeued below; the cache rollback erased their
+        # prefill rows)
+        self.active = dict(snap["active"])
+        for s, req in self.active.items():
+            req.output = list(snap["outputs"][s])
+            req.finished_at = 0.0
+        for req in reversed(self._since_snapshot):
+            req.output = None
+            req.finished_at = 0.0
+            self.queue.appendleft(req)
+        self._since_snapshot = []
+        lost = self.stats.steps - snap["steps"]
+        self.stats.steps = snap["steps"]
+        self.stats.tokens_out = snap["tokens_out"]
         self.stats.replays += 1
         return lost
 

@@ -72,6 +72,24 @@ def test_tmr_zero_sdc_every_site(site):
 
 
 # ---------------------------------------------------------------------------
+# (b2) DMR: full detection, zero correction — the detect-then-failover half
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("site", ["accumulator", "weights", "activations"])
+def test_dmr_detects_every_manifested_fault_but_corrects_none(site):
+    spec = CampaignSpec("qmatmul", Policy.DMR, site, "single_bitflip",
+                        trials=100, seed=2)
+    detected, mismatch = _run_spec(spec)
+    counts = classify_counts(detected, mismatch)
+    assert counts["sdc"] == 0                      # nothing slips silently
+    assert counts["detected_corrected"] == 0       # …but nothing is healed
+    assert counts["detected_uncorrected"] > 0
+    # detection fires exactly when the fault manifested in the output
+    np.testing.assert_array_equal(detected, mismatch)
+
+
+# ---------------------------------------------------------------------------
 # (c) determinism
 # ---------------------------------------------------------------------------
 

@@ -113,6 +113,34 @@ def test_dmr_detects_disagreement():
     assert not bool(redundancy.agree([a, b]))
 
 
+def test_dmr_apply_detects_but_returns_replica0():
+    f = lambda: jnp.arange(8, dtype=jnp.int32)
+    corrupt = lambda y: y.at[3].add(1)
+    y, det = redundancy.dmr_apply(f, injectors=(corrupt, None))
+    assert bool(det)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(corrupt(f())))
+    y, det = redundancy.dmr_apply(f, injectors=(None, None))
+    assert not bool(det)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(f()))
+
+
+def test_storage_checksums_catch_any_single_bitflip():
+    """The pytree scrub primitive: exact mod-2^32 detection over mixed
+    dtypes, localized to the struck leaf."""
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(32, 16)),
+                               jnp.float32),
+              "b": jnp.arange(-8, 8, dtype=jnp.int8)}
+    checks = abft.storage_checksums(params)
+    ok = abft.verify_storage(params, checks)
+    assert all(bool(v) for v in jax.tree_util.tree_leaves(ok))
+    for seed in range(8):
+        broken = fi.inject_pytree_with(params, jax.random.key(seed),
+                                       fi.flip_one_bit)
+        ok = abft.verify_storage(broken, checks)
+        assert sum(not bool(v)
+                   for v in jax.tree_util.tree_leaves(ok)) == 1, seed
+
+
 def test_vote_int8_and_bf16_dtypes():
     for dtype in (jnp.int8, jnp.bfloat16, jnp.int32):
         x = jnp.asarray(np.arange(-8, 8), dtype=dtype)
@@ -161,7 +189,27 @@ def test_inject_into_pytree():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("policy", [Policy.NONE, Policy.ABFT, Policy.TMR])
+def test_dmr_policy_detects_but_does_not_correct():
+    """DMR contract: the fault raises the alarm, replica 0's (corrupted)
+    output ships unchanged — correction is a failover layer's job."""
+    rng = np.random.default_rng(12)
+    x_q, w_q, bias, x_zp = _case(rng, m=16, k=32, n=24)
+    scale = jnp.full((24,), 1e-3, jnp.float32)
+
+    def inject(acc):
+        return acc.at[2, 3].add(jnp.int32(1 << 20))
+
+    y_clean, st = dependable_qmatmul(Policy.DMR, x_q, x_zp, w_q, bias, scale,
+                                     jnp.int32(0))
+    assert int(st["faults_detected"]) == 0        # no false alarms
+    y_faulty, st = dependable_qmatmul(Policy.DMR, x_q, x_zp, w_q, bias, scale,
+                                      jnp.int32(0), inject=inject)
+    assert int(st["faults_detected"]) == 1
+    assert (np.asarray(y_faulty) != np.asarray(y_clean)).any()   # detect-only
+
+
+@pytest.mark.parametrize("policy", [Policy.NONE, Policy.ABFT, Policy.DMR,
+                                    Policy.TMR])
 def test_policies_agree_on_clean_input(policy):
     rng = np.random.default_rng(9)
     x_q, w_q, bias, x_zp = _case(rng, m=16, k=32, n=24)

@@ -1,0 +1,287 @@
+"""Dependable serving fleet: routing determinism, admission control,
+bit-exact failover across model families, weight-SEU recovery
+(quarantine → checkpoint reload → re-verify → readmit), DMR pair-serving,
+deadlines, metrics export, and the fleet-level campaign certification.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign import CampaignSpec, classify_counts, resolve_fault_model, trial_keys
+from repro.configs import registry
+from repro.core import fault_injection as fi
+from repro.core.dependability import Policy
+from repro.fleet import Fleet, ReplicaState, Router
+from repro.models import api as model_api
+from repro.models.config import reduced
+from repro.runtime.serving import Engine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+PROMPTS = [[5, 9, 2], [3, 1, 4, 1], [2, 7], [8, 8, 6], [1, 6, 1, 8]]
+N_NEW = 5
+
+
+def greedy_reference(cfg, params, prompt, n_new, max_len=96):
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, cache = model_api.prefill(cfg, params, toks, max_len)
+    out = [int(jnp.argmax(logits[0, len(prompt) - 1]))]
+    tok = jnp.asarray([out[-1]], jnp.int32)
+    for _ in range(n_new - 1):
+        logits, cache = model_api.decode_step(cfg, params, tok, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+@pytest.fixture(scope="module", params=["smollm-135m", "rwkv6-1.6b"])
+def family_fleet(request):
+    """One 2-replica fleet per model family (compiled once, reset per test)."""
+    cfg = reduced(registry.get(request.param))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    fleet = Fleet(cfg, params, n_replicas=2, policy=Policy.NONE,
+                  capacity=2, max_len=96, prefill_pad=8, scrub_every=3)
+    return cfg, params, fleet
+
+
+@pytest.fixture(scope="module")
+def smollm_fleet():
+    cfg = reduced(registry.get("smollm-135m"))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    fleet = Fleet(cfg, params, n_replicas=3, policy=Policy.NONE,
+                  capacity=2, max_len=96, prefill_pad=8, scrub_every=3)
+    return cfg, params, fleet
+
+
+def _serve(fleet, prompts, policy, n_new=N_NEW, mid_run=None):
+    """Reset + submit + (optional mid-run drill) + drain; returns requests."""
+    fleet.reset(policy=policy)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert fleet.submit(r)
+    if mid_run is not None:
+        fleet.tick()
+        fleet.tick()
+        mid_run(fleet)
+    fleet.run()
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# baseline correctness: a fleet serves exactly what one engine would
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_matches_single_engine_reference(family_fleet):
+    cfg, params, fleet = family_fleet
+    reqs = _serve(fleet, PROMPTS, Policy.NONE)
+    for r, p in zip(reqs, PROMPTS):
+        assert r.uid in fleet.released
+        assert r.output == greedy_reference(cfg, params, p, N_NEW), f"req {r.uid}"
+    assert fleet.metrics.released == len(PROMPTS)
+
+
+# ---------------------------------------------------------------------------
+# router: determinism + admission control
+# ---------------------------------------------------------------------------
+
+
+def test_hash_router_is_deterministic_and_stable(smollm_fleet):
+    _, _, fleet = smollm_fleet
+    fleet.reset()
+    router = Router("hash")
+    picks = [router.pick(uid, fleet.replicas).rid for uid in range(20)]
+    assert picks == [router.pick(uid, fleet.replicas).rid for uid in range(20)]
+    assert len(set(picks)) > 1            # spreads over replicas
+
+
+def test_least_loaded_router_prefers_idle_lowest_rid(smollm_fleet):
+    _, _, fleet = smollm_fleet
+    fleet.reset()
+    router = Router("least_loaded")
+    assert router.pick(0, fleet.replicas).rid == 0     # all idle → lowest rid
+    fleet.replicas[0].engine.submit(Request(uid=90, prompt=[1], max_new_tokens=2))
+    assert router.pick(1, fleet.replicas).rid == 1     # 0 now loaded
+
+
+def test_admission_control_rejects_when_full(smollm_fleet):
+    _, _, fleet = smollm_fleet
+    fleet.reset()
+    old = fleet.router
+    try:
+        fleet.router = Router("least_loaded", admit_limit=1)
+        assert fleet.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2))
+        assert fleet.submit(Request(uid=1, prompt=[1, 2], max_new_tokens=2))
+        assert fleet.submit(Request(uid=2, prompt=[1, 2], max_new_tokens=2))
+        # all three replicas now hold one request each — fleet is full
+        assert not fleet.submit(Request(uid=3, prompt=[1, 2], max_new_tokens=2))
+        assert fleet.metrics.rejected == 1
+        fleet.run()
+        assert fleet.metrics.released == 3
+    finally:
+        fleet.router = old
+
+
+def test_deadline_miss_expires_request(smollm_fleet):
+    _, _, fleet = smollm_fleet
+    fleet.reset()
+    req = Request(uid=0, prompt=[5, 9, 2], max_new_tokens=30)
+    assert fleet.submit(req, deadline_ticks=2)
+    fleet.run()
+    assert fleet.metrics.deadline_misses == 1
+    assert req.uid not in fleet.released
+
+
+# ---------------------------------------------------------------------------
+# deterministic failover — same tokens with or without a mid-decode kill,
+# across two model families (satellite requirement)
+# ---------------------------------------------------------------------------
+
+
+def test_failover_after_kill_is_bit_exact(family_fleet):
+    cfg, params, fleet = family_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.NONE)]
+
+    reqs = _serve(fleet, PROMPTS, Policy.NONE,
+                  mid_run=lambda f: f.kill_replica(0))
+    assert fleet.replicas[0].state is ReplicaState.DEAD
+    assert fleet.metrics.failovers > 0
+    assert [list(r.output) for r in reqs] == golden
+    assert fleet.metrics.released == len(PROMPTS)
+
+
+def test_heartbeat_timeout_declares_paused_replica_dead(smollm_fleet):
+    _, _, fleet = smollm_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.NONE)]
+    reqs = _serve(fleet, PROMPTS, Policy.NONE,
+                  mid_run=lambda f: f.pause_replica(0))
+    assert any("heartbeat timeout" in e for e in fleet.supervisor.events)
+    assert [list(r.output) for r in reqs] == golden
+
+
+# ---------------------------------------------------------------------------
+# weight-SEU recovery: quarantine → checkpoint reload → re-verify → readmit
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_weights(fleet, key=jax.random.key(11)):
+    victim = fleet.replicas[0]
+    victim.engine.params = fi.inject_pytree_with(
+        victim.engine.params, key, fi.flip_one_bit)
+
+
+def test_abft_scrub_recovers_weight_seu(smollm_fleet):
+    cfg, params, fleet = smollm_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.ABFT)]
+    assert fleet.metrics.detections == 0          # clean pass: no false alarms
+
+    reqs = _serve(fleet, PROMPTS, Policy.ABFT,
+                  mid_run=lambda f: _corrupt_weights(f))
+    assert fleet.metrics.detections >= 1
+    assert fleet.metrics.recoveries == 1
+    assert fleet.replicas[0].state is ReplicaState.HEALTHY   # readmitted
+    assert fleet.replicas[0].scrub() == []                   # re-verified
+    assert [list(r.output) for r in reqs] == golden          # zero SDC
+    assert fleet.metrics.released == len(PROMPTS)
+
+
+def test_dmr_detects_transient_decode_fault(smollm_fleet):
+    cfg, params, fleet = smollm_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.DMR)]
+    assert fleet.metrics.detections == 0
+
+    def strike(f):
+        v = f.replicas[0]
+        v.engine.tokens = v.engine.tokens ^ 1     # flip every active token
+
+    reqs = _serve(fleet, PROMPTS, Policy.DMR, mid_run=strike)
+    assert fleet.metrics.detections >= 1
+    assert fleet.metrics.recoveries == 0          # transient: weights clean
+    assert [list(r.output) for r in reqs] == golden
+    assert fleet.metrics.released == len(PROMPTS)
+
+
+# ---------------------------------------------------------------------------
+# metrics export
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_json_round_trip(smollm_fleet, tmp_path):
+    _, _, fleet = smollm_fleet
+    _serve(fleet, PROMPTS, Policy.ABFT)
+    m = fleet.metrics.to_json()
+    for k in ("released", "p50_latency_ticks", "p99_latency_ticks",
+              "tokens_per_tick", "recoveries", "failovers",
+              "lost_work_bound_tokens", "scrubs"):
+        assert k in m, k
+    assert m["released"] == len(PROMPTS)
+    assert m["p50_latency_ticks"] <= m["p99_latency_ticks"]
+    p = fleet.metrics.dump(tmp_path / "fleet.json")
+    assert json.loads(p.read_text())["released"] == len(PROMPTS)
+    report = fleet.report()
+    assert len(report["replicas"]) == 3
+    json.dumps(report)                            # fully serializable
+
+
+# ---------------------------------------------------------------------------
+# fleet campaign certification (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fleet_case():
+    from repro.campaign.runner import build_case
+    return build_case("fleet", 0)
+
+
+def test_fleet_campaign_abft_zero_sdc_none_nonzero_100_trials(fleet_case):
+    """≥100 seeded weight-SEU trials: ABFT scrub+failover ⇒ every trial
+    detected_corrected and fleet SDC = 0; NONE ⇒ nonzero SDC."""
+    case = fleet_case
+    fault = resolve_fault_model("single_bitflip")
+
+    spec_a = CampaignSpec("fleet", Policy.ABFT, "weights",
+                          "single_bitflip", trials=100, seed=0)
+    det, mis = case.run_trials(Policy.ABFT, "weights", fault.apply,
+                               trial_keys(spec_a))
+    counts = classify_counts(det, mis)
+    assert counts["sdc"] == 0
+    assert counts["detected_uncorrected"] == 0
+    assert counts["detected_corrected"] == 100    # every flip caught + healed
+
+    spec_n = CampaignSpec("fleet", Policy.NONE, "weights",
+                          "single_bitflip", trials=100, seed=0)
+    det, mis = case.run_trials(Policy.NONE, "weights", fault.apply,
+                               trial_keys(spec_n))
+    counts = classify_counts(det, mis)
+    assert not det.any()
+    assert counts["sdc"] > 0                      # undefended fleet corrupts
+
+
+def test_fleet_campaign_dmr_covers_transient_site(fleet_case):
+    case = fleet_case
+    fault = resolve_fault_model("single_bitflip")
+    spec = CampaignSpec("fleet", Policy.DMR, "accumulator",
+                        "single_bitflip", trials=40, seed=1)
+    det, mis = case.run_trials(Policy.DMR, "accumulator", fault.apply,
+                               trial_keys(spec))
+    counts = classify_counts(det, mis)
+    assert counts["sdc"] == 0
+    assert counts["detected_corrected"] > 0
+
+
+def test_fleet_abft_accumulator_combo_is_skipped():
+    """The weight scrub's contract is storage — campaigns must not claim
+    transient-site coverage for it."""
+    from repro.campaign import expand_grid, run_campaign
+    from repro.campaign.runner import SUPPORTED
+    specs = expand_grid(["fleet"], [Policy.ABFT], ["accumulator"],
+                        ["single_bitflip"], trials=2, seed=0,
+                        supported=SUPPORTED)
+    assert run_campaign(specs) == []

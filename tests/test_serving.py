@@ -71,6 +71,87 @@ def test_more_requests_than_capacity(served):
     assert all(len(r.output) == 3 for r in reqs)
     assert stats.tokens_out >= 5 * 2        # decode tokens counted
 
+def test_snapshot_restore_round_trips_stats_and_finished_requests(served):
+    """Regression: restore_snapshot must roll back tokens_out (not just
+    steps) and resurrect requests that finished after the snapshot, so
+    token accounting never inflates across a replay."""
+    cfg, params = served
+    prompts = [[5, 9, 2, 7], [3, 1]]
+
+    def fresh():
+        eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                     snapshot_every=2)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, (8, 3)))]
+        for r in reqs:
+            eng.submit(r)
+        return eng, reqs
+
+    eng, reqs = fresh()
+    clean_stats = eng.run()
+    golden = [list(r.output) for r in reqs]
+
+    eng, reqs = fresh()
+    eng.step()
+    eng.step()          # req 1 (max_new=3) finishes here, after the snapshot
+    assert reqs[1].finished_at > 0
+    eng.tokens = eng.tokens.at[0].set(123)        # SEU in decode state
+    eng.restore_snapshot()
+    # the finished request was resurrected — its post-snapshot tokens were
+    # produced after the corruption window and must be re-decoded
+    assert reqs[1].finished_at == 0.0
+    eng.run()
+    assert [list(r.output) for r in reqs] == golden
+    assert eng.stats.steps == clean_stats.steps
+    assert eng.stats.tokens_out == clean_stats.tokens_out
+    assert eng.stats.tokens_per_step() == clean_stats.tokens_per_step()
+    assert eng.stats.replays == 1
+
+
+def test_restore_requeues_requests_admitted_after_snapshot(served):
+    """A request admitted after the snapshot loses its prefill rows in the
+    cache rollback; restore must send it back to the queue, not strand it."""
+    cfg, params = served
+    prompts = [[5, 9, 2], [4, 4, 8, 1]]
+    golden = [greedy_reference(cfg, params, p, 3) for p in prompts]
+
+    eng = Engine(cfg, params, capacity=1, max_len=96, prefill_pad=8,
+                 snapshot_every=4)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()      # snapshot@0; req0 finishes; req1 admitted at step 2
+    assert reqs[0].finished_at > 0 and reqs[1].output is not None
+    eng.tokens = eng.tokens.at[0].set(77)
+    eng.restore_snapshot()
+    assert reqs[1] in eng.queue                   # requeued, prefill redone
+    eng.run()
+    assert [list(r.output) for r in reqs] == golden
+    assert eng.stats.replays == 1
+
+
+def test_cancelled_request_stays_cancelled_after_restore(served):
+    """cancel() must purge snapshot bookkeeping so a rollback cannot
+    resurrect (and silently serve) aborted work."""
+    cfg, params = served
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                 snapshot_every=2)
+    a = Request(uid=0, prompt=[5, 9, 2], max_new_tokens=6)
+    b = Request(uid=1, prompt=[3, 1, 4], max_new_tokens=6)
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()                      # snapshot@0 captures both as active
+    assert eng.cancel(b.uid)
+    out_b = list(b.output)
+    eng.restore_snapshot()
+    eng.run()
+    assert b.output == out_b        # never decoded further
+    assert all(r.uid != b.uid for r in eng.active.values())
+    assert a.output == greedy_reference(cfg, params, a.prompt, 6)
+
+
 def test_snapshot_rollback_replays_identically(served):
     """Device-fault drill: corrupt decode state, roll back, tokens identical."""
     cfg, params = served
