@@ -3,7 +3,10 @@
 Measures the steady-state cost of each policy on the quantized matmul and
 conv primitives (the Safe-NEureka-style hybrid-redundancy comparison: how
 much throughput does each protection level buy its coverage with), plus the
-campaign engine's own trial rate.
+campaign engine's own trial rate, across the execution backends
+(``--backends jnp,pallas`` benchmarks the FPGA/VPU-style same-workload
+cross-backend comparison; the pallas numbers are interpreter wall-clock off
+TPU, so only the jnp rows are throughput claims there).
 
     PYTHONPATH=src python -m benchmarks.campaign_bench [--fast]
 
@@ -33,7 +36,7 @@ def _time(f, *args, reps: int = 20):
     return (time.perf_counter() - t0) / reps
 
 
-def bench_policy_overhead(m=256, k=512, n=256, reps=20):
+def bench_policy_overhead(m=256, k=512, n=256, reps=20, backends=("jnp",)):
     print(f"\n=== policy overhead: qmatmul ({m}x{k}x{n} int8) ===")
     rng = np.random.default_rng(0)
     x_q = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int32), jnp.int8)
@@ -42,21 +45,24 @@ def bench_policy_overhead(m=256, k=512, n=256, reps=20):
     scale = jnp.full((n,), 1e-3, jnp.float32)
     zp = jnp.int32(0)
 
-    base = None
     rows = []
-    for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
-        f = jax.jit(lambda xq, wq, p=policy: dependable_qmatmul(
-            p, xq, zp, wq, bias, scale, zp)[0])
-        t = _time(f, x_q, w_q, reps=reps)
-        base = base or t
-        gmacs = m * k * n / t / 1e9
-        rows.append((policy.value, t, t / base, gmacs))
-        print(f"campaign_bench,qmatmul_policy={policy.value},"
-              f"ms={t * 1e3:.3f},overhead_x={t / base:.2f},gmacs={gmacs:.2f}")
+    for backend in backends:
+        base = None
+        for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
+            f = jax.jit(lambda xq, wq, p=policy, be=backend: dependable_qmatmul(
+                p, xq, zp, wq, bias, scale, zp, backend=be)[0])
+            t = _time(f, x_q, w_q, reps=reps)
+            base = base or t
+            gmacs = m * k * n / t / 1e9
+            rows.append((backend, policy.value, t, t / base, gmacs))
+            print(f"campaign_bench,qmatmul_policy={policy.value},"
+                  f"backend={backend},ms={t * 1e3:.3f},"
+                  f"overhead_x={t / base:.2f},gmacs={gmacs:.2f}")
     return rows
 
 
-def bench_conv_policy_overhead(h=32, w=32, cin=32, cout=32, reps=10):
+def bench_conv_policy_overhead(h=32, w=32, cin=32, cout=32, reps=10,
+                               backends=("jnp",)):
     print(f"\n=== policy overhead: qconv2d ({h}x{w}x{cin}->{cout} 3x3) ===")
     rng = np.random.default_rng(1)
     x_q = jnp.asarray(rng.integers(-128, 128, (1, h, w, cin), dtype=np.int32), jnp.int8)
@@ -65,16 +71,18 @@ def bench_conv_policy_overhead(h=32, w=32, cin=32, cout=32, reps=10):
     scale = jnp.full((cout,), 1e-3, jnp.float32)
     zp = jnp.int32(0)
 
-    base = None
     rows = []
-    for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
-        f = jax.jit(lambda xq, wq, p=policy: dependable_qconv2d(
-            p, xq, zp, wq, bias, scale, zp)[0])
-        t = _time(f, x_q, w_q, reps=reps)
-        base = base or t
-        rows.append((policy.value, t, t / base))
-        print(f"campaign_bench,qconv2d_policy={policy.value},"
-              f"ms={t * 1e3:.3f},overhead_x={t / base:.2f}")
+    for backend in backends:
+        base = None
+        for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
+            f = jax.jit(lambda xq, wq, p=policy, be=backend: dependable_qconv2d(
+                p, xq, zp, wq, bias, scale, zp, backend=be)[0])
+            t = _time(f, x_q, w_q, reps=reps)
+            base = base or t
+            rows.append((backend, policy.value, t, t / base))
+            print(f"campaign_bench,qconv2d_policy={policy.value},"
+                  f"backend={backend},ms={t * 1e3:.3f},"
+                  f"overhead_x={t / base:.2f}")
     return rows
 
 
@@ -96,10 +104,14 @@ def bench_trial_rate(trials=200):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backends", default="jnp",
+                    help="comma list of execution backends to compare "
+                         "(jnp, ref, pallas)")
     args = ap.parse_args(argv)
+    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
     reps = 5 if args.fast else 20
-    bench_policy_overhead(reps=reps)
-    bench_conv_policy_overhead(reps=max(reps // 2, 3))
+    bench_policy_overhead(reps=reps, backends=backends)
+    bench_conv_policy_overhead(reps=max(reps // 2, 3), backends=backends)
     bench_trial_rate(trials=50 if args.fast else 200)
 
 

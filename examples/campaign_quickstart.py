@@ -43,6 +43,19 @@ def main():
           f"(ABFT zero-false-negative claim: detection == trials)")
     assert detected.all() and not mismatch.any()
 
+    # 3. The same drill on the Pallas kernel path (docs/backends.md): the
+    #    check vector is fused into the kernel as a second output, and the
+    #    zero-false-negative claim must hold there too.
+    pspec = CampaignSpec("qmatmul", Policy.ABFT, "accumulator",
+                         "single_bitflip", trials=50, seed=42,
+                         backend="pallas")
+    pcase = build_case(pspec.workload, pspec.seed, pspec.backend)
+    detected, mismatch = pcase.run_trials(pspec.policy, pspec.site,
+                                          fault.apply, trial_keys(pspec))
+    print(f"pallas-backend drill: {detected.sum()}/{pspec.trials} detected, "
+          f"{mismatch.sum()} corrupted outputs")
+    assert detected.all() and not mismatch.any()
+
 
 if __name__ == "__main__":
     jax.config.update("jax_platform_name", "cpu")

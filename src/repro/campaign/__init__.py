@@ -8,11 +8,14 @@ coverage report.  See docs/dependability.md for how to read one.
 from repro.campaign.faultload import (
     FAULT_MODELS, CampaignSpec, expand_grid, resolve_fault_model, trial_keys)
 from repro.campaign.report import (
-    ConfigResult, classify_counts, load_report, to_markdown, write_report)
-from repro.campaign.runner import CASES, build_case, run_campaign
+    BitCoverageRow, ConfigResult, classify_counts, load_report, to_markdown,
+    write_report)
+from repro.campaign.runner import (
+    CASES, build_case, run_bit_sweep, run_campaign)
 
 __all__ = [
     "FAULT_MODELS", "CampaignSpec", "expand_grid", "resolve_fault_model",
-    "trial_keys", "ConfigResult", "classify_counts", "load_report",
-    "to_markdown", "write_report", "CASES", "build_case", "run_campaign",
+    "trial_keys", "BitCoverageRow", "ConfigResult", "classify_counts",
+    "load_report", "to_markdown", "write_report", "CASES", "build_case",
+    "run_bit_sweep", "run_campaign",
 ]

@@ -2,10 +2,14 @@
 DAVOS-style coverage report.
 
     PYTHONPATH=src python -m repro.campaign.cli \
-        --workload qmatmul --policies none,abft,tmr --trials 200 --seed 0
+        --workload qmatmul --policies none,abft,tmr --trials 200 --seed 0 \
+        --backend pallas
 
 Writes <out>/campaign.json and <out>/campaign.md and prints the coverage
-table.  Everything is deterministic in --seed.
+table.  Everything is deterministic in --seed.  ``--backend`` sweeps the
+execution-backend axis (jnp | ref | pallas — see docs/backends.md); kernel
+workloads additionally get a per-bit-position accumulator coverage table
+(``--bit-trials 0`` to skip).
 """
 from __future__ import annotations
 
@@ -39,6 +43,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="comma list (multi_bitflip@<rate> for custom rates)")
     p.add_argument("--trials", type=int, default=200,
                    help="seeded trials per configuration")
+    p.add_argument("--backend", "--backends", dest="backend", default="jnp",
+                   help="comma list of execution backends (jnp, ref, pallas)")
+    p.add_argument("--bit-trials", type=int, default=8,
+                   help="per-bit accumulator sweep trials for kernel "
+                        "workloads (0 disables the bit-coverage table)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default="reports/campaign",
                    help="output directory for campaign.json / campaign.md")
@@ -58,18 +67,36 @@ def main(argv=None) -> int:
     policies = [Policy(p) for p in _csv(args.policies)]
     sites = list(fl.SITES) if args.sites == "all" else _csv(args.sites)
     fault_models = _csv(args.fault_models)
+    backends = _csv(args.backend)
 
     specs = fl.expand_grid(workloads, policies, sites, fault_models,
                            trials=args.trials, seed=args.seed,
-                           supported=runner.SUPPORTED)
+                           supported=runner.SUPPORTED, backends=backends)
     if not specs:
         print("no runnable configurations for this sweep", file=sys.stderr)
         return 2
 
     log(f"campaign: {len(specs)} configurations × {args.trials} trials "
-        f"(seed {args.seed})")
+        f"(seed {args.seed}, backends {','.join(backends)})")
     t0 = time.time()
-    results = runner.run_campaign(specs, log=log)
+    case_cache = {}
+    results = runner.run_campaign(specs, log=log, cache=case_cache)
+
+    bit_rows = []
+    if args.bit_trials > 0 and "accumulator" in sites:
+        for be in backends:
+            for w in workloads:
+                if not isinstance(runner.CASES.get(w), type) or not issubclass(
+                        runner.CASES[w], runner._KernelCase):
+                    continue
+                case_policies = [p for p in policies
+                                 if p in runner.CASES[w].policies]
+                log(f"bit sweep: {w} [{be}] × "
+                    f"{','.join(p.value for p in case_policies)}")
+                bit_rows.extend(runner.run_bit_sweep(
+                    w, case_policies, trials_per_bit=args.bit_trials,
+                    seed=args.seed, backend=be,
+                    case=case_cache.get((w, args.seed, be))))
     elapsed = time.time() - t0
 
     meta = {
@@ -77,13 +104,16 @@ def main(argv=None) -> int:
         "policies": ",".join(p.value for p in policies),
         "sites": ",".join(sites),
         "fault_models": ",".join(fault_models),
+        "backends": ",".join(backends),
         "trials_per_config": args.trials,
+        "bit_trials": args.bit_trials,
         "seed": args.seed,
         "configurations": len(results),
         "elapsed_seconds": round(elapsed, 2),
     }
-    jpath, mpath = report_mod.write_report(results, args.out, meta)
-    print(report_mod.to_markdown(results, meta))
+    jpath, mpath = report_mod.write_report(results, args.out, meta,
+                                           bit_coverage=bit_rows)
+    print(report_mod.to_markdown(results, meta, bit_coverage=bit_rows))
     print(f"wrote {jpath} and {mpath} ({elapsed:.1f}s)")
     return 0
 

@@ -77,10 +77,14 @@ class CampaignSpec:
     fault_model: str
     trials: int
     seed: int = 0
+    backend: str = "jnp"        # execution backend (core/backend.py registry)
 
     def label(self) -> str:
-        return (f"{self.workload}/{self.policy.value}/{self.site}/"
+        base = (f"{self.workload}/{self.policy.value}/{self.site}/"
                 f"{self.fault_model}")
+        # the default backend keeps its historical label so existing seeded
+        # campaigns (and their key streams, below) replay bit-for-bit
+        return base if self.backend == "jnp" else f"{base}/{self.backend}"
 
 
 def trial_keys(spec: CampaignSpec) -> jax.Array:
@@ -100,24 +104,32 @@ def expand_grid(
     trials: int,
     seed: int = 0,
     supported: dict | None = None,
+    backends: Sequence[str] = ("jnp",),
 ) -> List[CampaignSpec]:
     """Cartesian sweep, filtered to combinations the workload supports.
 
     ``supported`` maps workload -> (sites, policies); unsupported combos are
     dropped (e.g. ABFT on the float transformer has no checksum to check).
+    ``backends`` adds the execution-backend axis (validated against the
+    registry) so one sweep certifies e.g. jnp *and* pallas side by side.
     """
+    from repro.core import backend as backend_mod
+    for be in backends:
+        backend_mod.get_backend(be)                  # fail fast on typos
     specs = []
     for w in workloads:
         if supported is not None and w not in supported:
             raise KeyError(f"unknown workload {w!r}; known: {sorted(supported)}")
         ok_sites, ok_policies = (supported or {}).get(w, (SITES, tuple(Policy)))
-        for p in policies:
-            if p not in ok_policies:
-                continue
-            for s in sites:
-                if s not in ok_sites:
+        for be in backends:
+            for p in policies:
+                if p not in ok_policies:
                     continue
-                for fm in fault_models:
-                    resolve_fault_model(fm)          # fail fast on typos
-                    specs.append(CampaignSpec(w, p, s, fm, trials, seed))
+                for s in sites:
+                    if s not in ok_sites:
+                        continue
+                    for fm in fault_models:
+                        resolve_fault_model(fm)      # fail fast on typos
+                        specs.append(
+                            CampaignSpec(w, p, s, fm, trials, seed, backend=be))
     return specs

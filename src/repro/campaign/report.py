@@ -49,6 +49,7 @@ class ConfigResult:
     detected_corrected: int
     detected_uncorrected: int
     sdc: int
+    backend: str = "jnp"       # execution backend the trials ran on
 
     @property
     def detection_rate(self) -> float:
@@ -75,13 +76,63 @@ class ConfigResult:
         return ConfigResult(**{k: v for k, v in d.items() if k in fields})
 
 
-def to_json_dict(results: Sequence[ConfigResult], meta: dict | None = None) -> dict:
-    return {"meta": dict(meta or {}),
-            "results": [r.to_dict() for r in results]}
+@dataclasses.dataclass(frozen=True)
+class BitCoverageRow:
+    """Per-bit-position accumulator coverage: ``trials`` flips targeted at
+    int32 bit ``bit`` of the accumulator, classified like any campaign
+    trial.  Low-bit rows are where requantization masks (the fp32 rescale
+    rounds ±2^bit to the same int8); high-bit rows are where only the
+    policy stands between the flip and SDC."""
+    workload: str
+    policy: str
+    backend: str
+    bit: int
+    trials: int
+    masked: int
+    detected_corrected: int
+    detected_uncorrected: int
+    sdc: int
+
+    @property
+    def detection_rate(self) -> float:
+        return (self.detected_corrected + self.detected_uncorrected) / max(self.trials, 1)
+
+    @property
+    def masked_rate(self) -> float:
+        return self.masked / max(self.trials, 1)
+
+    @property
+    def sdc_rate(self) -> float:
+        return self.sdc / max(self.trials, 1)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["detection_rate"] = self.detection_rate
+        d["masked_rate"] = self.masked_rate
+        d["sdc_rate"] = self.sdc_rate
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "BitCoverageRow":
+        fields = {f.name for f in dataclasses.fields(BitCoverageRow)}
+        return BitCoverageRow(**{k: v for k, v in d.items() if k in fields})
+
+
+def to_json_dict(results: Sequence[ConfigResult], meta: dict | None = None,
+                 bit_coverage: Sequence[BitCoverageRow] | None = None) -> dict:
+    out = {"meta": dict(meta or {}),
+           "results": [r.to_dict() for r in results]}
+    if bit_coverage:
+        out["bit_coverage"] = [r.to_dict() for r in bit_coverage]
+    return out
 
 
 def from_json_dict(d: dict) -> Tuple[dict, List[ConfigResult]]:
     return d.get("meta", {}), [ConfigResult.from_dict(r) for r in d["results"]]
+
+
+def bit_coverage_from_json_dict(d: dict) -> List[BitCoverageRow]:
+    return [BitCoverageRow.from_dict(r) for r in d.get("bit_coverage", [])]
 
 
 def load_report(path) -> Tuple[dict, List[ConfigResult]]:
@@ -89,36 +140,59 @@ def load_report(path) -> Tuple[dict, List[ConfigResult]]:
         return from_json_dict(json.load(f))
 
 
-def to_markdown(results: Sequence[ConfigResult], meta: dict | None = None) -> str:
+def to_markdown(results: Sequence[ConfigResult], meta: dict | None = None,
+                bit_coverage: Sequence[BitCoverageRow] | None = None) -> str:
     lines = ["# SEU fault-injection campaign report", ""]
     for k, v in (meta or {}).items():
         lines.append(f"- **{k}**: {v}")
     if meta:
         lines.append("")
     lines += [
-        "| workload | policy | site | fault model | trials | masked "
+        "| workload | backend | policy | site | fault model | trials | masked "
         "| det-corr | det-unc | SDC | det. rate | SDC rate | coverage |",
-        "|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|",
+        "|---|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|",
     ]
     for r in results:
         lines.append(
-            f"| {r.workload} | {r.policy} | {r.site} | {r.fault_model} "
+            f"| {r.workload} | {r.backend} | {r.policy} | {r.site} "
+            f"| {r.fault_model} "
             f"| {r.trials} | {r.masked} | {r.detected_corrected} "
             f"| {r.detected_uncorrected} | {r.sdc} "
             f"| {r.detection_rate:.3f} | {r.sdc_rate:.3f} | {r.coverage:.3f} |")
     lines.append("")
+    if bit_coverage:
+        lines += [
+            "## Accumulator bit-position coverage",
+            "",
+            "Which int32 accumulator bits the requantization rescale masks"
+            " (flip never reaches the int8 output) vs. which the policy"
+            " detects:",
+            "",
+            "| workload | backend | policy | bit | trials | masked "
+            "| det-corr | det-unc | SDC | masked rate | det. rate |",
+            "|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|",
+        ]
+        for r in bit_coverage:
+            lines.append(
+                f"| {r.workload} | {r.backend} | {r.policy} | {r.bit} "
+                f"| {r.trials} | {r.masked} | {r.detected_corrected} "
+                f"| {r.detected_uncorrected} | {r.sdc} "
+                f"| {r.masked_rate:.3f} | {r.detection_rate:.3f} |")
+        lines.append("")
     return "\n".join(lines)
 
 
 def write_report(results: Sequence[ConfigResult], out_dir,
                  meta: dict | None = None,
-                 basename: str = "campaign") -> Tuple[pathlib.Path, pathlib.Path]:
+                 basename: str = "campaign",
+                 bit_coverage: Sequence[BitCoverageRow] | None = None,
+                 ) -> Tuple[pathlib.Path, pathlib.Path]:
     """Write <out_dir>/<basename>.json and .md; returns both paths."""
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     jpath = out / f"{basename}.json"
     mpath = out / f"{basename}.md"
     with open(jpath, "w") as f:
-        json.dump(to_json_dict(results, meta), f, indent=2)
-    mpath.write_text(to_markdown(results, meta))
+        json.dump(to_json_dict(results, meta, bit_coverage), f, indent=2)
+    mpath.write_text(to_markdown(results, meta, bit_coverage))
     return jpath, mpath

@@ -36,13 +36,16 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Sequence, Tuple
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.campaign import faultload as fl
-from repro.campaign.report import ConfigResult, classify_counts
+from repro.campaign.report import BitCoverageRow, ConfigResult, classify_counts
 from repro.core import abft as abft_mod
+from repro.core import fault_injection as fi
 from repro.core import redundancy
 from repro.core.dependability import (
     Policy, dependable_qconv2d, dependable_qmatmul)
@@ -83,10 +86,16 @@ def _dmr_check(faulty, clean) -> Tuple[jax.Array, jax.Array]:
 class _KernelCase:
     """Shared trial machinery for the pure-JAX op cases: subclasses build the
     quantized operands in __init__ and implement ``_op`` (the dependable op
-    call); site dispatch, TMR voting, and the vmapped trial loop live here."""
+    call); site dispatch, TMR voting, and the vmapped trial loop live here.
+
+    ``backend`` selects the execution engine (core/backend.py) every trial
+    runs on — the axis that lets one campaign certify the jnp path and the
+    Pallas kernel path side by side."""
 
     sites = ("accumulator", "weights", "activations")
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR)
+
+    backend = "jnp"
 
     def _op(self, policy: Policy, x_q, w_q, inject, w_check):
         raise NotImplementedError
@@ -100,18 +109,23 @@ class _KernelCase:
         else:
             inject = lambda acc: fault(acc, key)
 
-        base = Policy.NONE if policy in (Policy.TMR, Policy.DMR) else policy
-        y, st = self._op(base, x_q, w_q, inject,
+        if policy in (Policy.TMR, Policy.DMR) and site != "accumulator":
+            # spatial redundancy: the SEU hit one replica's *operand copy*,
+            # so the clean replicas and the vote live at the campaign level
+            y, _ = self._op(Policy.NONE, x_q, w_q, inject, None)
+            y_clean, _ = self._op(Policy.NONE, self.x_q, self.w_q, None, None)
+            check = _tmr_vote if policy == Policy.TMR else _dmr_check
+            return check(y, y_clean)
+
+        # accumulator faults (and every NONE/ABFT trial) drive the dependable
+        # op itself — its stats are the detection verdict, so TMR correction
+        # counts and ABFT checksum hits surface exactly as deployed code
+        # would report them
+        y, st = self._op(policy, x_q, w_q, inject,
                          self.w_check if policy == Policy.ABFT else None)
-        if policy == Policy.TMR:
-            y_clean, _ = self._op(Policy.NONE, self.x_q, self.w_q, None, None)
-            return _tmr_vote(y, y_clean)
-        if policy == Policy.DMR:
-            y_clean, _ = self._op(Policy.NONE, self.x_q, self.w_q, None, None)
-            return _dmr_check(y, y_clean)
-        if policy == Policy.ABFT:
-            return y, st["faults_detected"] > 0
-        return y, jnp.asarray(False)
+        if policy == Policy.NONE:
+            return y, jnp.asarray(False)
+        return y, st["faults_detected"] > 0
 
     def run_trials(self, policy, site, fault, keys):
         golden, _ = self._one(policy, site, _IDENTITY, keys[0])
@@ -129,7 +143,9 @@ class QMatmulCase(_KernelCase):
 
     name = "qmatmul"
 
-    def __init__(self, key: jax.Array, m: int = 32, k: int = 64, n: int = 48):
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 m: int = 32, k: int = 64, n: int = 48):
+        self.backend = backend
         kx, kw, kb = jax.random.split(key, 3)
         self.x_q = jax.random.randint(kx, (m, k), -128, 128).astype(jnp.int8)
         self.w_q = jax.random.randint(kw, (k, n), -127, 128).astype(jnp.int8)
@@ -143,7 +159,7 @@ class QMatmulCase(_KernelCase):
     def _op(self, policy, x_q, w_q, inject, w_check):
         return dependable_qmatmul(
             policy, x_q, self.x_zp, w_q, self.bias, self.scale, self.out_zp,
-            inject=inject, w_check=w_check)
+            inject=inject, w_check=w_check, backend=self.backend)
 
 
 class QConv2dCase(_KernelCase):
@@ -151,8 +167,9 @@ class QConv2dCase(_KernelCase):
 
     name = "qconv2d"
 
-    def __init__(self, key: jax.Array, h: int = 12, w: int = 12,
-                 cin: int = 8, cout: int = 8):
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 h: int = 12, w: int = 12, cin: int = 8, cout: int = 8):
+        self.backend = backend
         kx, kw, kb = jax.random.split(key, 3)
         self.x_q = jax.random.randint(kx, (1, h, w, cin), -128, 128).astype(jnp.int8)
         self.w_q = jax.random.randint(kw, (3, 3, cin, cout), -127, 128).astype(jnp.int8)
@@ -165,7 +182,7 @@ class QConv2dCase(_KernelCase):
     def _op(self, policy, x_q, w_q, inject, w_check):
         return dependable_qconv2d(
             policy, x_q, self.x_zp, w_q, self.bias, self.scale, self.out_zp,
-            inject=inject, w_check=w_check)
+            inject=inject, w_check=w_check, backend=self.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -181,9 +198,10 @@ class ShipdetCase:
     sites = ("accumulator", "weights", "activations")
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR)
 
-    def __init__(self, key: jax.Array):
+    def __init__(self, key: jax.Array, backend: str = "jnp"):
         from repro.models import shipdet
         self._shipdet = shipdet
+        self.backend = backend
         kp, kx = jax.random.split(key)
         self.specs = shipdet.reduced_specs()
         self.params = shipdet.init_params(self.specs, kp)
@@ -203,7 +221,7 @@ class ShipdetCase:
 
         def fwd(params, x, inject=None):
             out, st = sd.forward(self.specs, params, x, policy=base,
-                                 inject=inject)
+                                 inject=inject, backend=self.backend)
             return out, st["faults_detected"] > 0
 
         detected_l, mismatch_l = [], []
@@ -256,13 +274,14 @@ class TransformerCase:
     sites = ("weights", "activations")
     policies = (Policy.NONE, Policy.DMR, Policy.TMR)
 
-    def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 arch: str = "smollm-135m"):
         from repro.configs import registry
         from repro.models import api as model_api
         from repro.models.config import reduced
         self._api = model_api
         kp, kt = jax.random.split(key)
-        self.cfg = reduced(registry.get(arch))
+        self.cfg = model_api.with_backend(reduced(registry.get(arch)), backend)
         self.params = model_api.init_params(self.cfg, kp)
         self.tokens = jax.random.randint(kt, (2, 16), 0, self.cfg.vocab_size)
 
@@ -319,7 +338,8 @@ class ServingCase:
     sites = ("weights",)
     policies = (Policy.NONE, Policy.DMR, Policy.TMR)
 
-    def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 arch: str = "smollm-135m"):
         from repro.configs import registry
         from repro.models import api as model_api
         from repro.models.config import reduced
@@ -328,7 +348,7 @@ class ServingCase:
         self.cfg = reduced(registry.get(arch))
         self.params = model_api.init_params(self.cfg, key)
         self.engine = Engine(self.cfg, self.params, capacity=2, max_len=64,
-                             prefill_pad=8)
+                             prefill_pad=8, backend=backend)
         self.prompts = [[5, 9, 2], [3, 1, 4, 1]]
 
     def _run_engine(self, params) -> Tuple[Tuple[int, ...], ...]:
@@ -402,7 +422,8 @@ class FleetCase:
     sites = ("weights", "accumulator")
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR)
 
-    def __init__(self, key: jax.Array, arch: str = "smollm-135m"):
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 arch: str = "smollm-135m"):
         from repro.configs import registry
         from repro.fleet.fleet import Fleet
         from repro.models import api as model_api
@@ -413,7 +434,7 @@ class FleetCase:
         self.params = model_api.init_params(self.cfg, key)
         self.fleet = Fleet(self.cfg, self.params, n_replicas=2,
                            policy=Policy.NONE, capacity=2, max_len=64,
-                           prefill_pad=8, scrub_every=3)
+                           prefill_pad=8, scrub_every=3, backend=backend)
         self.prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7]]
 
     @staticmethod
@@ -468,28 +489,33 @@ CASES: Dict[str, type] = {
 SUPPORTED = {name: (cls.sites, cls.policies) for name, cls in CASES.items()}
 
 
-def build_case(workload: str, seed: int = 0):
+def build_case(workload: str, seed: int = 0, backend: str = "jnp"):
     if workload not in CASES:
         raise KeyError(f"unknown workload {workload!r}; known: {sorted(CASES)}")
-    return CASES[workload](jax.random.key(seed))
+    return CASES[workload](jax.random.key(seed), backend)
 
 
 def run_campaign(specs: Sequence[fl.CampaignSpec],
-                 log: Callable[[str], None] = lambda s: None
+                 log: Callable[[str], None] = lambda s: None,
+                 cache: Dict[Tuple[str, int, str], object] | None = None,
                  ) -> List[ConfigResult]:
     """Execute every configuration; returns one ConfigResult per spec.
 
     Deterministic: results depend only on (specs, their seeds).  Workload
-    cases are cached per (workload, seed) so all configurations of one
-    workload share data, params, and compiled functions.
+    cases are cached per (workload, seed, backend) so all configurations of
+    one workload share data, params, and compiled functions; pass ``cache``
+    (a dict, populated in place) to reuse the built cases afterwards, e.g.
+    for a ``run_bit_sweep`` over the same workloads.
     """
-    cache: Dict[Tuple[str, int], object] = {}
+    if cache is None:
+        cache = {}
     results: List[ConfigResult] = []
     for spec in specs:
-        case = cache.get((spec.workload, spec.seed))
+        cache_key = (spec.workload, spec.seed, spec.backend)
+        case = cache.get(cache_key)
         if case is None:
-            case = build_case(spec.workload, spec.seed)
-            cache[(spec.workload, spec.seed)] = case
+            case = build_case(spec.workload, spec.seed, spec.backend)
+            cache[cache_key] = case
         supported = (spec.site in case.sites and spec.policy in case.policies)
         if supported and hasattr(case, "supports"):
             supported = case.supports(spec.policy, spec.site)
@@ -503,8 +529,62 @@ def run_campaign(specs: Sequence[fl.CampaignSpec],
         counts = classify_counts(detected, mismatch)
         res = ConfigResult(
             workload=spec.workload, policy=spec.policy.value, site=spec.site,
-            fault_model=spec.fault_model, trials=spec.trials, **counts)
+            fault_model=spec.fault_model, trials=spec.trials,
+            backend=spec.backend, **counts)
         log(f"{spec.label()}: det={res.detection_rate:.3f} "
             f"sdc={res.sdc_rate:.3f} cov={res.coverage:.3f}")
         results.append(res)
     return results
+
+
+# ---------------------------------------------------------------------------
+# Per-bit-position accumulator coverage
+# ---------------------------------------------------------------------------
+
+ACC_BITS = 32          # the accumulator site is int32
+
+
+def run_bit_sweep(workload: str, policies: Sequence[Policy],
+                  trials_per_bit: int = 8, seed: int = 0,
+                  backend: str = "jnp", case=None) -> List[BitCoverageRow]:
+    """Targeted accumulator sweep: for every int32 bit position, inject
+    ``trials_per_bit`` flips at that exact bit (random element each time)
+    and classify.  The resulting table separates the two masking regimes —
+    low bits the requantization rescale rounds away (``masked``) from high
+    bits that corrupt the output — and shows which of those a policy
+    detects.  Kernel-shaped workloads only (the sweep vmaps over (bit,
+    trial) in one compile, ~``ACC_BITS × trials_per_bit`` trials per
+    policy).
+    """
+    if case is None:
+        case = build_case(workload, seed, backend)
+    if not isinstance(case, _KernelCase):
+        raise ValueError(f"bit sweep needs a kernel-shaped workload "
+                         f"(vmappable accumulator hook); {workload!r} is not")
+    rows: List[BitCoverageRow] = []
+    base = jax.random.key(seed)
+    for policy in policies:
+        if policy not in case.policies:
+            continue
+        disc = zlib.crc32(
+            f"bitsweep/{workload}/{policy.value}/{backend}".encode())
+        keys = jax.random.split(jax.random.fold_in(base, disc),
+                                ACC_BITS * trials_per_bit)
+        keys = keys.reshape(ACC_BITS, trials_per_bit)
+        golden, _ = case._one(policy, "accumulator", _IDENTITY, keys[0, 0])
+
+        def trial(bit, key):
+            fault = lambda x, k: fi.flip_bit_at(x, k, bit)
+            y, det = case._one(policy, "accumulator", fault, key)
+            return det, _bitwise_mismatch(y, golden)
+
+        det, mis = jax.jit(jax.vmap(jax.vmap(trial, in_axes=(None, 0)),
+                                    in_axes=(0, 0)))(
+            jnp.arange(ACC_BITS), keys)
+        det, mis = np.asarray(det), np.asarray(mis)
+        for b in range(ACC_BITS):
+            counts = classify_counts(det[b], mis[b])
+            rows.append(BitCoverageRow(
+                workload=workload, policy=policy.value, backend=backend,
+                bit=b, trials=trials_per_bit, **counts))
+    return rows

@@ -19,6 +19,12 @@ where roundoff forces tolerance windows.  This is a genuine dependability
 
 Detection granularity is per output row; recovery recomputes the affected
 block (faults are rare, so `lax.cond` makes the recompute cost ~0 amortized).
+
+The accumulator and check vector both come from the pluggable execution
+backend (``core.backend`` / ``kernels.dispatch``): on ``backend="pallas"``
+the check vector is fused into the kernel itself — one extra block-row
+matvec per K step — so detection covers the paper's actual co-processor
+path with no separate checksum pass (see docs/backends.md).
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import backend as backend_mod
 
 
 class AbftResult(NamedTuple):
@@ -44,6 +52,17 @@ def checksum_vector(w_q: jax.Array) -> jax.Array:
     return jnp.sum(w_q.astype(jnp.int32), axis=1)
 
 
+def zp_bias_correct(acc_dot: jax.Array, x_zp: jax.Array, w_q: jax.Array,
+                    bias: jax.Array) -> jax.Array:
+    """The matmul dequant algebra, in exactly one place: the zero-point
+    correction hoisted out of the inner product plus the bias,
+    acc = X·W - zp·colsum(W) + bias.  Shared by the ABFT path here and by
+    every non-ABFT policy in core/dependability.py, so the epilogue cannot
+    drift between them."""
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    return acc_dot - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
+
+
 def verify_rows(x_q: jax.Array, acc_dot: jax.Array, w_check: jax.Array) -> jax.Array:
     """Per-row fault mask for acc_dot = X·W. True == row is clean (mod 2^32)."""
     got = jnp.sum(acc_dot, axis=1)                       # rowsum, wraps mod 2^32
@@ -59,11 +78,13 @@ def abft_qmatmul(
     *,
     inject=None,             # optional fn(acc)->acc used by tests to corrupt
     w_check=None,            # precomputed checksum_vector(w) from *deploy time*
+    backend: backend_mod.BackendLike = None,
 ) -> AbftResult:
     """Checksummed quantized matmul accumulator with detect + recompute-recover.
 
     Overhead: one (M,K)×(K,1) matvec + one row reduction ≈ 1/N of the matmul
-    FLOPs (0.8 % for N=128).
+    FLOPs (0.8 % for N=128); on ``backend="pallas"`` the matvec is fused into
+    the kernel itself (one extra block-row per K step, no second pass over X).
 
     ``w_check`` lets the caller supply the check vector computed from a known-
     good weight copy (e.g. at checkpoint load).  With it, ABFT also catches
@@ -71,27 +92,25 @@ def abft_qmatmul(
     checksum.  Without it the checksum is derived from the (possibly already
     corrupted) live weights, so only compute-path faults are covered.
     """
+    be = backend_mod.resolve(backend)
     if w_check is None:
         w_check = checksum_vector(w_q)
-    acc_dot = _dot_i32(x_q, w_q)
+    acc_dot, want = be.matmul_acc_checksum(x_q, w_q, w_check)
     if inject is not None:
         acc_dot = inject(acc_dot)
 
-    row_ok = verify_rows(x_q, acc_dot, w_check)
+    row_ok = jnp.sum(acc_dot, axis=1) == want        # rowsum wraps mod 2^32
     faults = jnp.sum(~row_ok).astype(jnp.int32)
 
     def recover(acc):
         # Recompute the full product (fault rate is tiny; the recompute branch
         # is taken ~never, so its cost does not affect steady-state throughput).
-        fresh = _dot_i32(x_q, w_q)
+        fresh = be.matmul_acc(x_q, w_q)
         return jnp.where(row_ok[:, None], acc, fresh)
 
     acc_dot = jax.lax.cond(faults > 0, recover, lambda a: a, acc_dot)
-    ok = jnp.all(verify_rows(x_q, acc_dot, w_check))
-
-    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
-    acc = acc_dot - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
-    return AbftResult(acc, ok, faults)
+    ok = jnp.all(jnp.sum(acc_dot, axis=1) == want)
+    return AbftResult(zp_bias_correct(acc_dot, x_zp, w_q, bias), ok, faults)
 
 
 # ---------------------------------------------------------------------------
@@ -142,32 +161,27 @@ def conv_checksum_weight(w_q: jax.Array) -> jax.Array:
 def abft_qconv2d(
     x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
     stride=(1, 1), padding="SAME", *, inject=None, w_check=None,
+    backend: backend_mod.BackendLike = None,
 ) -> AbftResult:
     """Checksummed quantized conv accumulator (detection per output pixel).
 
     ``w_check`` — optional precomputed ``conv_checksum_weight`` from a known-
     good weight copy; see ``abft_qmatmul``.
     """
-    x = x_q.astype(jnp.int32) - x_zp.astype(jnp.int32)
-
-    def conv(w):
-        return jax.lax.conv_general_dilated(
-            x, w, stride, padding, dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            preferred_element_type=jnp.int32)
-
-    acc_dot = conv(w_q.astype(jnp.int32))
+    be = backend_mod.resolve(backend)
+    if w_check is None:
+        w_check = conv_checksum_weight(w_q)
+    acc_dot, want = be.conv_acc_checksum(x_q, x_zp, w_q, w_check, stride,
+                                         padding)
     if inject is not None:
         acc_dot = inject(acc_dot)
 
-    if w_check is None:
-        w_check = conv_checksum_weight(w_q)
-    want = conv(w_check)[..., 0]                         # (N, OH, OW)
     got = jnp.sum(acc_dot, axis=3)
-    pix_ok = got == want
+    pix_ok = got == want                                 # (N, OH, OW)
     faults = jnp.sum(~pix_ok).astype(jnp.int32)
 
     def recover(acc):
-        fresh = conv(w_q.astype(jnp.int32))
+        fresh = be.conv_acc(x_q, x_zp, w_q, stride, padding)
         return jnp.where(pix_ok[..., None], acc, fresh)
 
     acc_dot = jax.lax.cond(faults > 0, recover, lambda a: a, acc_dot)

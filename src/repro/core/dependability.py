@@ -20,6 +20,14 @@ ask for a ``qlinear``; the policy decides how it is executed:
 Policies are data (config enums), so a deployment can mix them per layer —
 matching how the paper reserves the rad-hard HPDP for the convolution hot
 path while the RTG4 handles orchestration.
+
+*Where* the accumulator is computed is equally data: every policy is built
+around a pluggable execution backend (``core.backend``), so the same
+NONE/ABFT/DMR/TMR algebra runs unchanged on the jnp path, the independent
+ref oracle, or the Pallas kernels — the swappable-co-processor property the
+paper claims for the HPDP.  The zero-point/bias dequant algebra lives in
+one shared helper (``abft.zp_bias_correct``), used by every backend and
+policy, so the epilogue cannot drift between paths.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import abft as abft_mod
+from repro.core import backend as backend_mod
 from repro.core import redundancy
 from repro.core.quant import requantize
 
@@ -42,17 +51,32 @@ class Policy(str, enum.Enum):
 
 
 class DependabilityStats:
-    """Host-side counters exported by dependable ops (pytree of scalars)."""
+    """Host-side counters exported by dependable ops (pytree of scalars).
+
+    ``faults_detected``  checks that flagged a divergence (ABFT checksum
+                         mismatch, DMR/TMR replica disagreement).
+    ``faults_corrected`` detected faults the op also healed in-place (ABFT
+                         recompute-recovery that re-verified clean, TMR
+                         majority votes that out-voted the bad replica).
+                         DMR never corrects — its count stays 0 and the gap
+                         vs ``faults_detected`` is exactly the failover
+                         layer's workload.
+    ``checks_run``       how many verification opportunities executed.
+    """
 
     @staticmethod
     def zero():
         return {"faults_detected": jnp.zeros((), jnp.int32),
+                "faults_corrected": jnp.zeros((), jnp.int32),
                 "checks_run": jnp.zeros((), jnp.int32)}
 
     @staticmethod
     def merge(a: dict, b: dict) -> dict:
-        """Elementwise sum of two stats pytrees (campaign / engine rollups)."""
-        return {k: a[k] + b[k] for k in a}
+        """Keywise sum over the union of two stats pytrees (campaign /
+        engine rollups; tolerant of older dicts missing newer counters)."""
+        zero = jnp.zeros((), jnp.int32)
+        return {k: a.get(k, zero) + b.get(k, zero)
+                for k in {*a, *b}}
 
     @staticmethod
     def to_host(stats: dict) -> dict:
@@ -60,68 +84,74 @@ class DependabilityStats:
         return {k: int(v) for k, v in stats.items()}
 
 
+def _bump(stats: dict, detected, corrected) -> dict:
+    """One verification round folded into the running counters."""
+    return {
+        "faults_detected": stats["faults_detected"]
+        + jnp.asarray(detected).astype(jnp.int32),
+        "faults_corrected": stats.get("faults_corrected", jnp.int32(0))
+        + jnp.asarray(corrected).astype(jnp.int32),
+        "checks_run": stats["checks_run"] + 1,
+    }
+
+
 def dependable_qmatmul(
     policy: Policy,
     x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
     scale: jax.Array, out_zp: jax.Array,
     *, inject=None, stats: Optional[dict] = None, w_check=None,
+    backend: backend_mod.BackendLike = None,
 ):
     """Quantized matmul + requant executed under a dependability policy.
 
     ``inject`` corrupts the int32 accumulator (the campaign engine's
     accumulator injection site); ``w_check`` is the optional deploy-time
-    checksum vector (see ``abft.abft_qmatmul``).  Returns (y_q int8, stats).
+    checksum vector (see ``abft.abft_qmatmul``); ``backend`` picks the
+    execution engine (per-call > per-layer > global, see core/backend.py).
+    Returns (y_q int8, stats).
     """
     if stats is None:
         stats = DependabilityStats.zero()
+    be = backend_mod.resolve(backend)
+
+    def finish(acc_dot):
+        # shared dequant epilogue (abft.zp_bias_correct is the same algebra
+        # the ABFT path applies), then requant
+        return requantize(abft_mod.zp_bias_correct(acc_dot, x_zp, w_q, bias),
+                          scale, out_zp)
 
     if policy == Policy.ABFT:
         res = abft_mod.abft_qmatmul(x_q, x_zp, w_q, bias, inject=inject,
-                                    w_check=w_check)
+                                    w_check=w_check, backend=be)
         y = requantize(res.acc, scale, out_zp)
-        stats = {
-            "faults_detected": stats["faults_detected"] + res.faults_detected,
-            "checks_run": stats["checks_run"] + 1,
-        }
-        return y, stats
+        corrected = res.faults_detected * res.ok.astype(jnp.int32)
+        return y, _bump(stats, res.faults_detected, corrected)
 
-    if policy in (Policy.TMR, Policy.DMR):
+    def run(inj):
         # inject corrupts replica 0's accumulator — the same site as the
         # ABFT/NONE paths, so policy sweeps compare like for like
-        def run(inj):
-            acc = jax.lax.dot_general(
-                x_q, w_q, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            if inj is not None:
-                acc = inj(acc)
-            colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
-            acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
-            return requantize(acc, scale, out_zp)
+        acc = be.matmul_acc(x_q, w_q)
+        if inj is not None:
+            acc = inj(acc)
+        return finish(acc)
 
-        if policy == Policy.DMR:
-            # detect-only: replica 0 (possibly faulted) is returned as-is;
-            # disagreement with the clean re-execution raises the alarm
-            y = run(inject)
-            detected = ~redundancy.agree([y, run(None)])
-            stats = {
-                "faults_detected": stats["faults_detected"]
-                + detected.astype(jnp.int32),
-                "checks_run": stats["checks_run"] + 1,
-            }
-            return y, stats
+    if policy == Policy.DMR:
+        # detect-only: replica 0 (possibly faulted) is returned as-is;
+        # disagreement with the clean re-execution raises the alarm
+        y = run(inject)
+        detected = ~redundancy.agree([y, run(None)])
+        return y, _bump(stats, detected, False)
 
-        y = redundancy.vote([run(inject), run(None), run(None)])
-        stats = {**stats, "checks_run": stats["checks_run"] + 1}
-        return y, stats
+    if policy == Policy.TMR:
+        r0, r1 = run(inject), run(None)
+        # replicas 1–2 are clean, so r0-vs-r1 disagreement is exactly the
+        # set of faults the majority vote is about to mask — count them
+        disagreed = ~redundancy.agree([r0, r1])
+        y = redundancy.vote([r0, r1, run(None)])
+        return y, _bump(stats, disagreed, disagreed)
 
     # Policy.NONE — plain path
-    acc = jax.lax.dot_general(
-        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
-    if inject is not None:
-        acc = inject(acc)
-    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
-    acc = acc - x_zp.astype(jnp.int32) * colsum[None, :] + bias[None, :]
-    return requantize(acc, scale, out_zp), stats
+    return run(inject), stats
 
 
 def dependable_qconv2d(
@@ -130,6 +160,7 @@ def dependable_qconv2d(
     scale: jax.Array, out_zp: jax.Array,
     *, stride=(1, 1), padding="SAME",
     inject=None, stats: Optional[dict] = None, w_check=None,
+    backend: backend_mod.BackendLike = None,
 ):
     """Quantized NHWC conv + requant under a dependability policy — the conv
     twin of ``dependable_qmatmul`` so every campaign injection site drives
@@ -139,47 +170,34 @@ def dependable_qconv2d(
     """
     if stats is None:
         stats = DependabilityStats.zero()
+    be = backend_mod.resolve(backend)
 
-    def plain_acc():
-        x = x_q.astype(jnp.int32) - x_zp.astype(jnp.int32)
-        return jax.lax.conv_general_dilated(
-            x, w_q.astype(jnp.int32), stride, padding,
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            preferred_element_type=jnp.int32)
+    def finish(acc):
+        return requantize(acc + bias[None, None, None, :], scale, out_zp)
 
     if policy == Policy.ABFT:
         res = abft_mod.abft_qconv2d(x_q, x_zp, w_q, bias, stride=stride,
                                     padding=padding, inject=inject,
-                                    w_check=w_check)
+                                    w_check=w_check, backend=be)
         y = requantize(res.acc, scale, out_zp)
-        stats = {
-            "faults_detected": stats["faults_detected"] + res.faults_detected,
-            "checks_run": stats["checks_run"] + 1,
-        }
-        return y, stats
+        corrected = res.faults_detected * res.ok.astype(jnp.int32)
+        return y, _bump(stats, res.faults_detected, corrected)
 
-    if policy in (Policy.TMR, Policy.DMR):
-        def run(inj):
-            acc = plain_acc()
-            if inj is not None:
-                acc = inj(acc)
-            return requantize(acc + bias[None, None, None, :], scale, out_zp)
+    def run(inj):
+        acc = be.conv_acc(x_q, x_zp, w_q, stride, padding)
+        if inj is not None:
+            acc = inj(acc)
+        return finish(acc)
 
-        if policy == Policy.DMR:
-            y = run(inject)
-            detected = ~redundancy.agree([y, run(None)])
-            stats = {
-                "faults_detected": stats["faults_detected"]
-                + detected.astype(jnp.int32),
-                "checks_run": stats["checks_run"] + 1,
-            }
-            return y, stats
+    if policy == Policy.DMR:
+        y = run(inject)
+        detected = ~redundancy.agree([y, run(None)])
+        return y, _bump(stats, detected, False)
 
-        y = redundancy.vote([run(inject), run(None), run(None)])
-        stats = {**stats, "checks_run": stats["checks_run"] + 1}
-        return y, stats
+    if policy == Policy.TMR:
+        r0, r1 = run(inject), run(None)
+        disagreed = ~redundancy.agree([r0, r1])
+        y = redundancy.vote([r0, r1, run(None)])
+        return y, _bump(stats, disagreed, disagreed)
 
-    acc = plain_acc()
-    if inject is not None:
-        acc = inject(acc)
-    return requantize(acc + bias[None, None, None, :], scale, out_zp), stats
+    return run(inject), stats

@@ -48,6 +48,22 @@ def flip_one_bit(x: jax.Array, key: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(flat.reshape(x.shape), x.dtype)
 
 
+def flip_bit_at(x: jax.Array, key: jax.Array, bit) -> jax.Array:
+    """Flip the given bit position of one uniformly-random element.
+
+    The targeted cousin of ``flip_one_bit``: campaigns sweep ``bit`` over
+    the word to map per-bit-position coverage (which accumulator bits
+    requantization masks vs. which a policy detects).  ``bit`` may be a
+    traced value, so a whole bit sweep vmaps in one compile.
+    """
+    bits, u = _as_bits(x)
+    flat = bits.reshape(-1)
+    idx = jax.random.randint(key, (), 0, flat.shape[0])
+    mask = (jnp.ones((), u) << jnp.asarray(bit, u)).astype(u)
+    flat = flat.at[idx].set(flat[idx] ^ mask)
+    return jax.lax.bitcast_convert_type(flat.reshape(x.shape), x.dtype)
+
+
 def flip_bits_at_rate(x: jax.Array, key: jax.Array, rate: float) -> jax.Array:
     """Flip each bit independently with probability ``rate`` (fleet-scale SEU model)."""
     bits, u = _as_bits(x)

@@ -53,6 +53,9 @@ def build_parser() -> argparse.ArgumentParser:
                         "serving, or its decode-state buffer mid-serve")
     p.add_argument("--kill", type=int, default=-1, metavar="RID",
                    help="kill replica RID mid-serve (failover drill)")
+    p.add_argument("--backend", default=None,
+                   help="execution backend for every replica's quantized "
+                        "hot paths (jnp | ref | pallas; default: cfg's)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default="reports/fleet",
                    help="output directory for fleet.json")
@@ -112,7 +115,7 @@ def main(argv=None) -> int:
     fleet = Fleet(cfg, params, n_replicas=args.replicas,
                   policy=Policy(args.policy), router=args.router,
                   scrub_every=args.scrub_every, capacity=args.capacity,
-                  max_len=96, prefill_pad=8)
+                  max_len=96, prefill_pad=8, backend=args.backend)
 
     log(f"fleet: {args.replicas}×{cfg.name} replicas, policy={args.policy}, "
         f"router={args.router}")

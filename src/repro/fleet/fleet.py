@@ -91,7 +91,8 @@ class Fleet:
                  admit_limit: Optional[int] = None, scrub_every: int = 4,
                  capacity: int = 4, max_len: int = 128, prefill_pad: int = 8,
                  snapshot_every: int = 16, eos_id: int = -1,
-                 heartbeat_timeout: float = 25.0, ckpt_dir: Optional[str] = None):
+                 heartbeat_timeout: float = 25.0, ckpt_dir: Optional[str] = None,
+                 backend: Optional[str] = None):
         if policy not in FLEET_POLICIES:
             raise ValueError(
                 f"fleet policy must be one of {[p.value for p in FLEET_POLICIES]}"
@@ -109,14 +110,17 @@ class Fleet:
         self.ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix="fleet-golden-")
         ckpt_mod.save(self.ckpt_dir, 0, params)
 
+        # every replica serves on the same execution backend: bit-identical
+        # failover (the fleet's core guarantee) holds *across* backends too,
+        # but certify-before-release compares like for like within a fleet
         first = Replica(0, cfg, params, capacity=capacity, max_len=max_len,
                         prefill_pad=prefill_pad, snapshot_every=snapshot_every,
-                        eos_id=eos_id)
+                        eos_id=eos_id, backend=backend)
         self.replicas: List[Replica] = [first] + [
             Replica(i, cfg, params, capacity=capacity, max_len=max_len,
                     prefill_pad=prefill_pad, snapshot_every=snapshot_every,
                     eos_id=eos_id, golden=first.golden,
-                    compiled=first.engine.compiled)
+                    compiled=first.engine.compiled, backend=backend)
             for i in range(1, n_replicas)]
         self.router = Router(router, admit_limit)
         self.supervisor = Supervisor(n_replicas, scrub_every=scrub_every,

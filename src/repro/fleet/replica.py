@@ -45,12 +45,12 @@ class Replica:
     def __init__(self, rid: int, cfg: ArchConfig, params, *,
                  capacity: int = 4, max_len: int = 128, prefill_pad: int = 8,
                  snapshot_every: int = 16, eos_id: int = -1,
-                 golden=None, compiled=None):
+                 golden=None, compiled=None, backend: Optional[str] = None):
         self.rid = rid
         self.engine = Engine(cfg, params, capacity=capacity, max_len=max_len,
                              prefill_pad=prefill_pad,
                              snapshot_every=snapshot_every, eos_id=eos_id,
-                             compiled=compiled)
+                             compiled=compiled, backend=backend)
         self.state = ReplicaState.HEALTHY
         self.paused = False          # test hook: stop heartbeating (looks dead)
         self.golden = golden if golden is not None else _checksums_jit(params)

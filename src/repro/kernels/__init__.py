@@ -1,3 +1,32 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom compute kernels (Pallas TPU) + the execution-backend dispatch.
+
+Three kernel families, each a (kernel.py, ops.py, ref.py) triple:
+
+  qmatmul    int8 matmul + int32 accumulate + fused requant — the paper's
+             hot-path primitive, transformer-shaped
+  qconv2d    int8 NHWC conv + fused requant — the HPDP's Table-1 op
+  flashattn  fused attention fwd/bwd (scores never hit HBM)
+
+``dispatch`` registers the ref / jnp / pallas implementations of the
+accumulator-level quantized entries into the ``core.backend`` registry;
+everything above the kernels (dependability policies, campaigns, serving,
+fleets) selects among them by name.  See docs/backends.md.
+"""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import (
+    conv_acc, conv_acc_checksum, matmul_acc, matmul_acc_checksum)
+from repro.kernels.flashattn.ops import flash_attn, flash_attn_model
+from repro.kernels.qconv2d.ops import (
+    QConvParams, make_qconv_params, qconv2d_op, qconv_act)
+from repro.kernels.qmatmul.ops import (
+    QLinearParams, make_qlinear_params, qlinear_act, qlinear_int8_bf16out,
+    qmatmul_op)
+
+__all__ = [
+    "dispatch",
+    "matmul_acc", "matmul_acc_checksum", "conv_acc", "conv_acc_checksum",
+    "qmatmul_op", "qlinear_act", "qlinear_int8_bf16out",
+    "QLinearParams", "make_qlinear_params",
+    "qconv2d_op", "qconv_act", "QConvParams", "make_qconv_params",
+    "flash_attn", "flash_attn_model",
+]

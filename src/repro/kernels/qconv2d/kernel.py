@@ -41,21 +41,8 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 def _qconv2d_kernel(x_ref, w_ref, colsum_ref, bias_ref, scale_ref, zps_ref,
                     out_ref, *, stride, oh, ow):
     kh, kw, cin, _ = w_ref.shape
-    sh, sw = stride
     x = x_ref[0]                      # (Hp, Wp, Cin) int8
-    acc = jnp.zeros((oh * ow, out_ref.shape[-1]), jnp.int32)
-    for i in range(kh):
-        for j in range(kw):
-            # shifted strided window for tap (i, j): (OH, OW, Cin)
-            patch = jax.lax.slice(
-                x, (i, j, 0), (i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1, cin),
-                (sh, sw, 1),
-            )
-            acc += jax.lax.dot_general(
-                patch.reshape(oh * ow, cin), w_ref[i, j],
-                dimension_numbers=(((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32,
-            )
+    acc = _tap_acc(x, w_ref, oh, ow, stride, cin, out_ref.shape[-1])
     x_zp = zps_ref[0]
     out_zp = zps_ref[1]
     acc = acc - x_zp * colsum_ref[...][None, :] + bias_ref[...][None, :]
@@ -63,6 +50,159 @@ def _qconv2d_kernel(x_ref, w_ref, colsum_ref, bias_ref, scale_ref, zps_ref,
     y = jnp.round(y) + out_zp.astype(jnp.float32)
     out_ref[0] = jnp.clip(y, -128.0, 127.0).astype(jnp.int8).reshape(
         oh, ow, out_ref.shape[-1])
+
+
+def _tap_acc(x, w_ref, oh, ow, stride, cin, cout, dtype=None):
+    """Shifted-window tap loop: the shared direct-conv inner pattern."""
+    sh, sw = stride
+    kh, kw = w_ref.shape[0], w_ref.shape[1]
+    acc = jnp.zeros((oh * ow, cout), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x, (i, j, 0), (i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1, cin),
+                (sh, sw, 1),
+            )
+            lhs = patch.reshape(oh * ow, cin)
+            rhs = w_ref[i, j]
+            if dtype is not None:
+                lhs = lhs.astype(dtype)
+            acc += jax.lax.dot_general(
+                lhs, rhs,
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    return acc
+
+
+def _qconv2d_acc_kernel(x_ref, w_ref, colsum_ref, zp_ref, out_ref,
+                        *, stride, oh, ow):
+    kh, kw, cin, _ = w_ref.shape
+    cout = out_ref.shape[-1]
+    x = x_ref[0]                      # (Hp, Wp, Cin) int8, zp-padded
+    acc = _tap_acc(x, w_ref, oh, ow, stride, cin, cout)
+    # conv(x_p - zp, w) == conv(x_p, w) - zp * sum(w): every output pixel
+    # covers all kh·kw·cin taps because x is pre-padded with the zero point
+    acc = acc - zp_ref[0] * colsum_ref[...][None, :]
+    out_ref[0] = acc.reshape(oh, ow, cout)
+
+
+def _qconv2d_acc_checksum_kernel(x_ref, w_ref, colsum_ref, wcheck_ref,
+                                 zp_ref, out_ref, check_ref, *, stride, oh, ow):
+    """Accumulator kernel with the ABFT check channel fused in: one extra
+    Cout=1 tap matvec per step emits want = conv(x - zp, w_check) as a
+    second output, so per-pixel detection needs no separate conv pass."""
+    c = pl.program_id(1)
+    kh, kw, cin, _ = w_ref.shape
+    cout = out_ref.shape[-1]
+    x = x_ref[0]
+    acc = _tap_acc(x, w_ref, oh, ow, stride, cin, cout)
+    acc = acc - zp_ref[0] * colsum_ref[...][None, :]
+    out_ref[0] = acc.reshape(oh, ow, cout)
+
+    # the check channel is Cout-block-independent: emit it once per image
+    @pl.when(c == 0)
+    def _check():
+        want = _tap_acc(x, wcheck_ref, oh, ow, stride, cin, 1,
+                        dtype=jnp.int32)
+        # conv(x_p - zp, w_check) == conv(x_p, w_check) - zp * sum(w_check);
+        # w_check is fully resident, so its tap sum is computed in-kernel
+        want = want - zp_ref[0] * jnp.sum(wcheck_ref[...])
+        check_ref[0] = want.reshape(oh, ow)
+
+
+def _conv_geometry(x_q, w_q, stride, block_cout):
+    n, hp, wp, cin = x_q.shape
+    kh, kw, cin2, cout = w_q.shape
+    assert cin == cin2, (x_q.shape, w_q.shape)
+    sh, sw = stride
+    oh = (hp - kh) // sh + 1
+    ow = (wp - kw) // sw + 1
+    block_cout = min(block_cout, cout)
+    return n, hp, wp, cin, kh, kw, cout, oh, ow, block_cout
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "block_cout", "interpret")
+)
+def qconv2d_acc(
+    x_q: jax.Array,          # (N, Hp, Wp, Cin) int8 — already zp-padded
+    w_q: jax.Array,          # (KH, KW, Cin, Cout) int8
+    colsum: jax.Array,       # (Cout,) int32 — sum over (KH, KW, Cin)
+    zp: jax.Array,           # (1,) int32 — input zero point
+    *,
+    stride: tuple = (1, 1),
+    block_cout: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw int32 conv accumulator conv(x - zp, w) — backend-registry entry."""
+    n, hp, wp, cin, kh, kw, cout, oh, ow, block_cout = _conv_geometry(
+        x_q, w_q, stride, block_cout)
+    kernel = functools.partial(_qconv2d_acc_kernel, stride=stride, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, pl.cdiv(cout, block_cout)),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda b, c: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, block_cout), lambda b, c: (0, 0, 0, c)),
+            pl.BlockSpec((block_cout,), lambda b, c: (c,)),
+            pl.BlockSpec((1,), lambda b, c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, block_cout), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x_q, w_q, colsum, zp)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "block_cout", "interpret")
+)
+def qconv2d_acc_checksum(
+    x_q: jax.Array,          # (N, Hp, Wp, Cin) int8 — already zp-padded
+    w_q: jax.Array,          # (KH, KW, Cin, Cout) int8
+    colsum: jax.Array,       # (Cout,) int32
+    w_check: jax.Array,      # (KH, KW, Cin, 1) int32 — conv_checksum_weight(w)
+    zp: jax.Array,           # (1,) int32
+    *,
+    stride: tuple = (1, 1),
+    block_cout: int = 128,
+    interpret: bool = False,
+):
+    """(acc, want): conv accumulator plus the fused per-pixel ABFT channel.
+
+    want (N, OH, OW) i32 equals the Cout-sum of acc mod 2^32 on a fault-free
+    pass; see core/abft.abft_qconv2d."""
+    n, hp, wp, cin, kh, kw, cout, oh, ow, block_cout = _conv_geometry(
+        x_q, w_q, stride, block_cout)
+    kernel = functools.partial(_qconv2d_acc_checksum_kernel, stride=stride,
+                               oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, pl.cdiv(cout, block_cout)),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda b, c: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, block_cout), lambda b, c: (0, 0, 0, c)),
+            pl.BlockSpec((block_cout,), lambda b, c: (c,)),
+            pl.BlockSpec((kh, kw, cin, 1), lambda b, c: (0, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda b, c: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, oh, ow, block_cout), lambda b, c: (b, 0, 0, c)),
+            # revisited across cout blocks → c must be "arbitrary" below
+            pl.BlockSpec((1, oh, ow), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, oh, ow, cout), jnp.int32),
+            jax.ShapeDtypeStruct((n, oh, ow), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, w_q, colsum, w_check, zp)
 
 
 @functools.partial(

@@ -43,13 +43,7 @@ def _qmatmul_kernel(x_ref, w_ref, colsum_ref, bias_ref, scale_ref, zps_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = w_ref[...]
-    block_k = w.shape[0]
-    if k_total % block_k != 0:
-        # K-tail: out-of-bounds rows of the padded block are undefined — mask
-        # them to zero so they don't pollute the reduction.
-        row = k * block_k + jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
-        w = jnp.where(row < k_total, w, 0)
+    w = _mask_k_tail(w_ref[...], k, k_total)
 
     # int8 × int8 → int32 on the MXU
     acc_ref[...] += jax.lax.dot_general(
@@ -67,6 +61,161 @@ def _qmatmul_kernel(x_ref, w_ref, colsum_ref, bias_ref, scale_ref, zps_ref,
         y = acc.astype(jnp.float32) * scale_ref[...][None, :]
         y = jnp.round(y) + out_zp.astype(jnp.float32)
         out_ref[...] = jnp.clip(y, -128.0, 127.0).astype(jnp.int8)
+
+
+def _mask_k_tail(block: jax.Array, k: jax.Array, k_total: int) -> jax.Array:
+    """Zero the out-of-bounds rows of a padded K-tail block (undefined data
+    must not pollute the reduction)."""
+    block_k = block.shape[0]
+    if k_total % block_k == 0:
+        return block
+    row = k * block_k + jax.lax.broadcasted_iota(jnp.int32, block.shape, 0)
+    return jnp.where(row < k_total, block, 0)
+
+
+def _qmatmul_acc_kernel(x_ref, w_ref, out_ref, *, k_total: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = _mask_k_tail(w_ref[...], k, k_total)
+    out_ref[...] += jax.lax.dot_general(
+        x_ref[...], w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _qmatmul_acc_checksum_kernel(x_ref, w_ref, wcheck_ref, out_ref, check_ref,
+                                 *, k_total: int):
+    """Accumulator kernel with the ABFT check vector fused in: alongside each
+    (block_m, block_k) × (block_k, block_n) MXU step, one extra block-row
+    matvec accumulates want = X · w_check into a second output — detection
+    costs ~1/block_n extra work inside the kernel instead of a separate
+    matvec pass over X."""
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when((k == 0) & (n == 0))
+    def _init_check():
+        check_ref[...] = jnp.zeros_like(check_ref)
+
+    w = _mask_k_tail(w_ref[...], k, k_total)
+    out_ref[...] += jax.lax.dot_general(
+        x_ref[...], w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    # the check column is N-independent: accumulate it once per (m, k) tile
+    @pl.when(n == 0)
+    def _check():
+        wc = _mask_k_tail(wcheck_ref[...], k, k_total)
+        check_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.int32), wc,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+
+def _acc_grid(M, N, K, block_m, block_n, block_k):
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    grid = (pl.cdiv(M, block_m), pl.cdiv(N, block_n), pl.cdiv(K, block_k))
+    return grid, block_m, block_n, block_k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def qmatmul_acc(
+    x_q: jax.Array,          # (M, K) int8
+    w_q: jax.Array,          # (K, N) int8
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw int32 accumulator X·W — the backend-registry entry point.
+
+    Unlike ``qmatmul`` the accumulator leaves the kernel, so the
+    dependability layer can inject faults into it, checksum it, and share
+    the zero-point/bias/requant epilogue across every backend."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    grid, block_m, block_n, block_k = _acc_grid(M, N, K, block_m, block_n,
+                                                block_k)
+    return pl.pallas_call(
+        functools.partial(_qmatmul_acc_kernel, k_total=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, w_q)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def qmatmul_acc_checksum(
+    x_q: jax.Array,          # (M, K) int8
+    w_q: jax.Array,          # (K, N) int8
+    w_check: jax.Array,      # (K,) int32 — deploy-time checksum_vector(w)
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """(acc, want): accumulator plus the fused ABFT check vector.
+
+    Returns acc (M, N) i32 and want (M,) i32 with want == rowsum(acc) mod
+    2^32 on a fault-free pass; any single accumulator bit-flip breaks the
+    identity exactly (see core/abft.py)."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    grid, block_m, block_n, block_k = _acc_grid(M, N, K, block_m, block_n,
+                                                block_k)
+    acc, want = pl.pallas_call(
+        functools.partial(_qmatmul_acc_checksum_kernel, k_total=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+            pl.BlockSpec((block_k, 1), lambda m, n, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+            # revisited across n and k → n must be "arbitrary" below
+            pl.BlockSpec((block_m, 1), lambda m, n, k: (m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.int32),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, w_q, w_check.reshape(-1, 1))
+    return acc, want[:, 0]
 
 
 @functools.partial(

@@ -2,13 +2,32 @@
 
 Every launcher / test / benchmark talks to models through these five
 functions; the family field of the ArchConfig picks the implementation.
+
+The quantized hot paths inside every family (W8A8 FFN matmuls, the CNN's
+qconv layers) are built on the pluggable execution-backend registry
+(core/backend.py): ``cfg.backend`` is the per-layer selection rung, so an
+engine or fleet swaps the whole model zoo between the jnp path and the
+Pallas kernel path with ``with_backend(cfg, "pallas")`` — no model code
+changes, exactly the paper's "no hardware-specific coding" property.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 from repro.models.config import ArchConfig
 from repro.models import transformer, rwkv6, griffin
+
+
+def with_backend(cfg: ArchConfig, backend: Optional[str]) -> ArchConfig:
+    """The config with its quantized-primitive execution backend pinned
+    (validated against the registry); None leaves the config untouched —
+    an unpinned config (cfg.backend is None) follows the global default."""
+    if backend is None or backend == cfg.backend:
+        return cfg
+    from repro.core import backend as backend_mod
+    backend_mod.get_backend(backend)
+    return dataclasses.replace(cfg, backend=backend)
 
 
 def _mod(cfg: ArchConfig):

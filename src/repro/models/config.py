@@ -85,6 +85,15 @@ class ArchConfig:
     attn_impl: str = "chunked"              # "chunked" (jnp online-softmax)
                                             # | "flash" (Pallas fwd+bwd
                                             # kernels; scores never in HBM)
+    backend: Optional[str] = None           # execution backend for the
+                                            # quantized primitives ("jnp" |
+                                            # "ref" | "pallas" — the
+                                            # core/backend.py registry); the
+                                            # per-layer rung of the selection
+                                            # ladder.  None (default) defers
+                                            # to the global default, so
+                                            # use_backend scopes still reach
+                                            # models that never pinned one
     notes: str = ""
 
     @property

@@ -95,16 +95,31 @@ def init_params(specs: List[ConvSpec], key: jax.Array) -> List[Dict[str, Any]]:
 
 def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
             *, policy: Policy = Policy.NONE, use_kernel: bool = False,
-            interpret: bool = False, inject=None) -> Tuple[jax.Array, Dict]:
-    """x: (N, H, W, 3) float in [0,1]. Returns (det map, dependability stats)."""
+            interpret: bool = False, inject=None,
+            backend=None) -> Tuple[jax.Array, Dict]:
+    """x: (N, H, W, 3) float in [0,1]. Returns (det map, dependability stats).
+
+    ``backend`` selects the quantized-conv execution engine (core/backend
+    registry): a single name applies network-wide, a sequence applies
+    per-layer — the software rendition of the paper reserving the rad-hard
+    HPDP for the convolution trunk while other layers run elsewhere.
+    """
     stats = DependabilityStats.zero()
+    if backend is None or isinstance(backend, str):
+        layer_backends = [backend] * len(specs)
+    else:
+        layer_backends = list(backend)
+        assert len(layer_backends) == len(specs), \
+            (len(layer_backends), len(specs))
     for i, (s, p) in enumerate(zip(specs, params)):
         stride = (s.stride, s.stride)
+        layer_be = layer_backends[i]
         # uniform accumulator injection site: the mid-layer int32 accumulator
         # is reachable under every policy, so fault-injection campaigns
         # measure all policies on the same hook
         layer_inject = inject if i == len(specs) // 2 else None
-        if policy == Policy.ABFT or layer_inject is not None:
+        if policy != Policy.NONE or layer_inject is not None \
+                or layer_be is not None:
             x_q = quant.quantize(x, p["in_scale"], p["in_zp"])
             bias_i32 = jnp.round(
                 p["qconv"].bias_f / (p["in_scale"] * p["qconv"].w_scale)
@@ -114,7 +129,8 @@ def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
             y_q, lstats = dependable_qconv2d(
                 policy if policy == Policy.ABFT else Policy.NONE,
                 x_q, p["in_zp"], p["qconv"].w_q, bias_i32, rq, p["out_zp"],
-                stride=stride, padding="SAME", inject=layer_inject)
+                stride=stride, padding="SAME", inject=layer_inject,
+                backend=layer_be)
             x = (y_q.astype(jnp.float32) - p["out_zp"]) * p["out_scale"]
             stats = DependabilityStats.merge(stats, lstats)
         else:

@@ -137,13 +137,20 @@ def _quantize_act(x):
 
 
 def _qdot(cfg: ArchConfig, x, bp, name):
-    """x @ W[name], W8A8 when quantized params are present."""
+    """x @ W[name], W8A8 when quantized params are present.
+
+    The int8 accumulator comes from the execution-backend registry
+    (``cfg.backend``): jnp dot_general by default, the Pallas qmatmul
+    kernel when the config asks for the co-processor path.  Bit-identical
+    either way (integer accumulation, exact mod 2^32)."""
     if name + "_q" in bp:
+        from repro.kernels import dispatch
         x_q, x_s = _quantize_act(x)
-        acc = jax.lax.dot_general(
-            x_q, bp[name + "_q"],
-            (((x_q.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
+        w_q = bp[name + "_q"]
+        lead = x_q.shape[:-1]
+        acc = dispatch.matmul_acc(x_q.reshape(-1, x_q.shape[-1]), w_q,
+                                  backend=cfg.backend)
+        acc = acc.reshape(*lead, w_q.shape[-1])
         y = acc.astype(jnp.float32) * x_s * bp[name + "_s"]
         return y.astype(x.dtype)
     return x @ _w(cfg, bp[name])

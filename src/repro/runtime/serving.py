@@ -68,7 +68,11 @@ class Engine:
     def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
                  max_len: int = 512, prefill_pad: int = 64,
                  snapshot_every: int = 32, eos_id: int = -1,
-                 compiled=None):
+                 compiled=None, backend: Optional[str] = None):
+        # engine-level execution-backend override for the quantized hot
+        # paths (core/backend registry); baked into cfg so the jitted
+        # decode/prefill pair and any compiled-pair sharing stay consistent
+        cfg = model_api.with_backend(cfg, backend)
         self.cfg = cfg
         self.params = params
         self.capacity = capacity

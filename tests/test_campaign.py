@@ -175,21 +175,73 @@ def test_stuck_at_intrinsic_masking_in_campaign():
 
 
 # ---------------------------------------------------------------------------
+# per-bit-position accumulator coverage
+# ---------------------------------------------------------------------------
+
+
+def test_bit_sweep_separates_masked_and_detected_bits():
+    """The bit table's two regimes: requantization (scale 1e-3) rounds away
+    low accumulator bits, the sign bit always corrupts silently under NONE,
+    and ABFT detects the targeted flip at *every* bit position."""
+    from repro.campaign.runner import ACC_BITS, run_bit_sweep
+    rows = run_bit_sweep("qmatmul", [Policy.NONE, Policy.ABFT],
+                         trials_per_bit=4, seed=0)
+    assert len(rows) == 2 * ACC_BITS
+    none = {r.bit: r for r in rows if r.policy == "none"}
+    abft = {r.bit: r for r in rows if r.policy == "abft"}
+    assert none[0].masked == 4 and none[0].sdc == 0      # ±1 rounds away
+    assert none[31].sdc == 4                             # sign flip: SDC
+    assert all(r.detection_rate == 1.0 for r in abft.values())
+    assert all(r.sdc == 0 for r in abft.values())
+
+
+def test_bit_sweep_rejects_model_workloads():
+    from repro.campaign.runner import run_bit_sweep
+    with pytest.raises(ValueError, match="kernel-shaped"):
+        run_bit_sweep("transformer", [Policy.NONE], trials_per_bit=1)
+
+
+def test_backend_axis_in_grid_and_report(tmp_path):
+    """One sweep over two backends: rows carry the backend, labels (and so
+    the trial key streams) stay unchanged for the default backend."""
+    specs = expand_grid(["qmatmul"], [Policy.ABFT], ["accumulator"],
+                        ["single_bitflip"], trials=8, seed=0,
+                        supported=SUPPORTED, backends=["jnp", "pallas"])
+    assert [s.backend for s in specs] == ["jnp", "pallas"]
+    assert specs[0].label() == "qmatmul/abft/accumulator/single_bitflip"
+    assert specs[1].label().endswith("/pallas")
+    results = run_campaign(specs)
+    assert {r.backend for r in results} == {"jnp", "pallas"}
+    assert all(r.detection_rate == 1.0 for r in results)
+    jpath, _ = write_report(results, tmp_path, {"seed": 0})
+    _, rt = load_report(jpath)
+    assert [r.backend for r in rt] == ["jnp", "pallas"]
+
+
+# ---------------------------------------------------------------------------
 # CLI end-to-end
 # ---------------------------------------------------------------------------
 
 
 def test_cli_writes_reports(tmp_path, capsys):
+    import json
+
     from repro.campaign import cli
     rc = cli.main([
         "--workload", "qmatmul", "--policies", "none,abft",
         "--sites", "accumulator", "--fault-models", "single_bitflip",
-        "--trials", "32", "--seed", "0", "--out", str(tmp_path), "--quiet"])
+        "--trials", "32", "--bit-trials", "2", "--seed", "0",
+        "--out", str(tmp_path), "--quiet"])
     assert rc == 0
     meta, results = load_report(tmp_path / "campaign.json")
     assert meta["configurations"] == 2
+    assert meta["backends"] == "jnp"
     abft = [r for r in results if r.policy == "abft"][0]
     none = [r for r in results if r.policy == "none"][0]
     assert abft.detection_rate == 1.0
     assert none.sdc_rate > 0.0
-    assert (tmp_path / "campaign.md").exists()
+    md = (tmp_path / "campaign.md").read_text()
+    assert "Accumulator bit-position coverage" in md
+    bits = json.loads((tmp_path / "campaign.json").read_text())["bit_coverage"]
+    assert len(bits) == 2 * 32            # two policies × 32 int32 bits
+    assert {b["policy"] for b in bits} == {"none", "abft"}
