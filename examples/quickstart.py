@@ -11,9 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import kernels
 from repro.core import quant
-from repro.kernels.qconv2d import ops as qconv_ops
-from repro.kernels.qmatmul import ops as qmatmul_ops
 
 print("=" * 70)
 print("1. Paper's op: int8 conv + fused requantization (one compiled config,")
@@ -26,7 +25,7 @@ x = jnp.asarray(rng.standard_normal((1, 24, 24, 24)), jnp.float32) * 0.5
 w = jnp.asarray(rng.standard_normal((3, 3, 24, 24)), jnp.float32) * 0.2
 b = jnp.asarray(rng.standard_normal((24,)), jnp.float32) * 0.1
 
-params = qconv_ops.make_qconv_params(w, b)          # int8 weights + colsum
+params = kernels.make_qconv_params(w, b)          # int8 weights + colsum
 y_float = jax.lax.conv_general_dilated(
     x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
 
@@ -35,7 +34,7 @@ x_scale, x_zp = quant.affine_qparams(float(x.min()), float(x.max()))
 out_scale, out_zp = quant.affine_qparams(float(y_float.min()),
                                          float(y_float.max()))
 
-y = qconv_ops.qconv_act(x, params, x_scale, x_zp, out_scale, out_zp,
+y = kernels.qconv_act(x, params, x_scale, x_zp, out_scale, out_zp,
                         use_kernel=True, interpret=True)
 err = float(jnp.abs(y - y_float).max())
 print(f"conv out {y.shape}, max |int8 path − float path| = {err:.4f} "
@@ -44,8 +43,8 @@ assert err < 6 * float(out_scale)
 
 # same compiled configuration, NEW layer parameters — no recompilation
 w2 = jnp.asarray(rng.standard_normal((3, 3, 24, 24)), jnp.float32) * 0.3
-params2 = qconv_ops.make_qconv_params(w2, b)
-y2 = qconv_ops.qconv_act(x, params2, x_scale, x_zp, out_scale, out_zp,
+params2 = kernels.make_qconv_params(w2, b)
+y2 = kernels.qconv_act(x, params2, x_scale, x_zp, out_scale, out_zp,
                          use_kernel=True, interpret=True)
 print(f"second layer through the SAME kernel config: out {y2.shape} ✓")
 
@@ -55,10 +54,10 @@ print("2. Transformer-shaped rendition: int8 qlinear with fused requant")
 print("=" * 70)
 xt = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
 wt = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32) * 0.1
-lp = qmatmul_ops.make_qlinear_params(wt)
+lp = kernels.make_qlinear_params(wt)
 xs, xzp = quant.affine_qparams(float(xt.min()), float(xt.max()))
 os_, ozp = quant.affine_qparams(-8.0, 8.0)
-yt = qmatmul_ops.qlinear_act(xt, lp, xs, xzp, os_, ozp,
+yt = kernels.qlinear_act(xt, lp, xs, xzp, os_, ozp,
                              use_kernel=True, interpret=True)
 yt_ref = xt @ wt
 rel = float(jnp.linalg.norm(yt - yt_ref) / jnp.linalg.norm(yt_ref))

@@ -35,7 +35,7 @@ def build_parser() -> argparse.ArgumentParser:
         description="Statistical SEU fault-injection campaign engine")
     p.add_argument("--workload", default="qmatmul",
                    help=f"comma list or 'all'; known: {sorted(runner.CASES)}")
-    p.add_argument("--policies", default="none,abft,dmr,tmr",
+    p.add_argument("--policies", default="none,abft,dmr,tmr,ckpt",
                    help="comma list of dependability policies")
     p.add_argument("--sites", default="all",
                    help=f"comma list or 'all'; known: {list(fl.SITES)}")

@@ -27,7 +27,7 @@ from repro.core.dependability import Policy
 
 DEFAULT_MULTI_RATE = 1e-4
 
-SITES = ("accumulator", "weights", "activations")
+SITES = ("accumulator", "weights", "activations", "kv_cache", "decode_state")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -39,7 +39,15 @@ def classify_counts(detected: np.ndarray, mismatch: np.ndarray) -> Dict[str, int
 
 @dataclasses.dataclass(frozen=True)
 class ConfigResult:
-    """One row of the coverage report: a configuration and its trial tallies."""
+    """One row of the coverage report: a configuration and its trial tallies.
+
+    The recovery columns quantify the restart half of the dependability
+    loop: ``faults_recovered`` counts rollback recoveries (CKPT op
+    re-executions, engine snapshot restores, fleet incremental restores /
+    drains) and the latency columns carry their measured wall-clock cost —
+    host-side recoveries only; in-graph rollbacks (kernel workloads) are
+    part of the op's own runtime and report latency 0.
+    """
     workload: str
     policy: str
     site: str
@@ -50,6 +58,9 @@ class ConfigResult:
     detected_uncorrected: int
     sdc: int
     backend: str = "jnp"       # execution backend the trials ran on
+    faults_recovered: int = 0  # rollback/restart recoveries across trials
+    recovery_ms_mean: float = 0.0
+    recovery_ms_max: float = 0.0
 
     @property
     def detection_rate(self) -> float:
@@ -149,16 +160,20 @@ def to_markdown(results: Sequence[ConfigResult], meta: dict | None = None,
         lines.append("")
     lines += [
         "| workload | backend | policy | site | fault model | trials | masked "
-        "| det-corr | det-unc | SDC | det. rate | SDC rate | coverage |",
-        "|---|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|",
+        "| det-corr | det-unc | SDC | det. rate | SDC rate | coverage "
+        "| recovered | rec. mean ms |",
+        "|---|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:"
+        "|---:|---:|",
     ]
     for r in results:
+        rec_ms = f"{r.recovery_ms_mean:.2f}" if r.faults_recovered else "—"
         lines.append(
             f"| {r.workload} | {r.backend} | {r.policy} | {r.site} "
             f"| {r.fault_model} "
             f"| {r.trials} | {r.masked} | {r.detected_corrected} "
             f"| {r.detected_uncorrected} | {r.sdc} "
-            f"| {r.detection_rate:.3f} | {r.sdc_rate:.3f} | {r.coverage:.3f} |")
+            f"| {r.detection_rate:.3f} | {r.sdc_rate:.3f} | {r.coverage:.3f} "
+            f"| {r.faults_recovered} | {rec_ms} |")
     lines.append("")
     if bit_coverage:
         lines += [

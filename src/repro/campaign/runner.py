@@ -15,10 +15,22 @@ Injection-site semantics per policy:
                 hook (compute-path SEU — what ABFT's checksum covers)
   weights       fault the stored quantized weights before execution
                 (memory SEU — ABFT detects it only with a deploy-time
-                checksum; recompute-recovery cannot fix it)
+                checksum; recompute-recovery cannot fix it, CKPT's
+                golden-checkpoint rollback can)
   activations   fault the layer input (upstream data SEU — outside any
                 single layer's ABFT contract; TMR still corrects it when
                 only one replica's copy is hit)
+  kv_cache      fault the live KV cache / recurrent state of a serving
+                engine mid-decode (transient state SEU — covered by the
+                decode-state scrub, runtime/serving.py, docs/recovery.md)
+  decode_state  fault the engine's sampled-token buffer mid-decode (the
+                other transient decode-state tensor; same scrub)
+
+CKPT (checkpoint/restart) classifies through the same machinery: detection
+comes from the op/engine's own checksum verdicts, recovery is rollback —
+re-execution from golden state — and every recovered trial lands
+``detected_corrected`` with its measured recovery latency rolled into the
+report's recovery columns.
 
 TMR is evaluated at the campaign level with explicit replica voting
 (``redundancy.vote``/``agree``): replica 0 executes with the fault, replicas
@@ -78,6 +90,24 @@ def _dmr_check(faulty, clean) -> Tuple[jax.Array, jax.Array]:
     return faulty, ~redundancy.agree([faulty, clean])
 
 
+class _RecoveryLog:
+    """Host-side recovery accounting shared by the engine/fleet cases:
+    accumulates rollback counts + wall-clock latencies during run_trials,
+    drained into the report's recovery columns by the campaign runner."""
+
+    def __init__(self):
+        self.count = 0
+        self.seconds: List[float] = []
+
+    def drain(self) -> dict:
+        secs = self.seconds
+        out = {"faults_recovered": self.count,
+               "recovery_ms_mean": float(np.mean(secs) * 1e3) if secs else 0.0,
+               "recovery_ms_max": float(np.max(secs) * 1e3) if secs else 0.0}
+        self.count, self.seconds = 0, []
+        return out
+
+
 # ---------------------------------------------------------------------------
 # Kernel-shaped cases: fully vmappable
 # ---------------------------------------------------------------------------
@@ -93,7 +123,7 @@ class _KernelCase:
     Pallas kernel path side by side."""
 
     sites = ("accumulator", "weights", "activations")
-    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR)
+    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR, Policy.CKPT)
 
     backend = "jnp"
 
@@ -117,12 +147,13 @@ class _KernelCase:
             check = _tmr_vote if policy == Policy.TMR else _dmr_check
             return check(y, y_clean)
 
-        # accumulator faults (and every NONE/ABFT trial) drive the dependable
-        # op itself — its stats are the detection verdict, so TMR correction
-        # counts and ABFT checksum hits surface exactly as deployed code
-        # would report them
+        # accumulator faults (and every NONE/ABFT/CKPT trial) drive the
+        # dependable op itself — its stats are the detection verdict, so TMR
+        # correction counts, ABFT checksum hits, and CKPT rollbacks surface
+        # exactly as deployed code would report them
         y, st = self._op(policy, x_q, w_q, inject,
-                         self.w_check if policy == Policy.ABFT else None)
+                         self.w_check if policy in (Policy.ABFT, Policy.CKPT)
+                         else None)
         if policy == Policy.NONE:
             return y, jnp.asarray(False)
         return y, st["faults_detected"] > 0
@@ -157,9 +188,13 @@ class QMatmulCase(_KernelCase):
         self.w_check = abft_mod.checksum_vector(self.w_q)
 
     def _op(self, policy, x_q, w_q, inject, w_check):
+        # the case's pristine operands ARE the golden checkpoint CKPT rolls
+        # back to — healing weight-site SEUs the other in-op policies can
+        # only detect
+        ckpt = (self.x_q, self.w_q) if policy == Policy.CKPT else None
         return dependable_qmatmul(
             policy, x_q, self.x_zp, w_q, self.bias, self.scale, self.out_zp,
-            inject=inject, w_check=w_check, backend=self.backend)
+            inject=inject, w_check=w_check, ckpt=ckpt, backend=self.backend)
 
 
 class QConv2dCase(_KernelCase):
@@ -180,9 +215,10 @@ class QConv2dCase(_KernelCase):
         self.w_check = abft_mod.conv_checksum_weight(self.w_q)
 
     def _op(self, policy, x_q, w_q, inject, w_check):
+        ckpt = (self.x_q, self.w_q) if policy == Policy.CKPT else None
         return dependable_qconv2d(
             policy, x_q, self.x_zp, w_q, self.bias, self.scale, self.out_zp,
-            inject=inject, w_check=w_check, backend=self.backend)
+            inject=inject, w_check=w_check, ckpt=ckpt, backend=self.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +232,7 @@ class ShipdetCase:
 
     name = "shipdet"
     sites = ("accumulator", "weights", "activations")
-    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR)
+    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR, Policy.CKPT)
 
     def __init__(self, key: jax.Array, backend: str = "jnp"):
         from repro.models import shipdet
@@ -329,42 +365,128 @@ class TransformerCase:
 
 
 class ServingCase:
-    """End-to-end serving drill: SEUs strike the weight memory of a live
-    continuous-batching engine; classification compares full generated token
-    streams.  Detected faults are rolled into the engine's DependabilityStats
-    so the serving layer reports campaign results like any other counter."""
+    """End-to-end serving drill: SEUs strike a live continuous-batching
+    engine — its weight memory (``weights``) or its transient decode state
+    (``kv_cache`` / ``decode_state``) — and classification compares full
+    generated token streams.  Detected faults are rolled into the engine's
+    DependabilityStats so the serving layer reports campaign results like
+    any other counter.
+
+    Policy rendition at engine level:
+
+      NONE      undefended baseline (nonzero SDC is the point)
+      ABFT      detect-only scrubbing: weight sites are checked against
+                deploy-time storage checksums after the run, transient
+                sites by the engine's decode-state scrub in ``detect``
+                mode — alarms are raised but the corrupted stream ships
+                (``detected_uncorrected``; a fleet closes the loop)
+      CKPT      checkpoint/restart: the same detection, plus recovery —
+                transient faults roll the engine back to its verified
+                snapshot mid-run, weight faults restore the golden
+                parameters and re-execute — measured recovery latency,
+                stream bit-identical to golden (``detected_corrected``)
+      DMR/TMR   temporal redundancy judged on the replayed stream
+                (weights site, as before)
+    """
 
     name = "serving"
-    sites = ("weights",)
-    policies = (Policy.NONE, Policy.DMR, Policy.TMR)
+    sites = ("weights", "kv_cache", "decode_state")
+    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR, Policy.CKPT)
+
+    # the tick (engine step) after which mid-run state strikes land; >0 so
+    # prefill and at least one decode step have populated real state
+    STRIKE_STEP = 2
 
     def __init__(self, key: jax.Array, backend: str = "jnp",
                  arch: str = "smollm-135m"):
         from repro.configs import registry
+        from repro.core import abft as abft_api
         from repro.models import api as model_api
         from repro.models.config import reduced
         from repro.runtime.serving import Engine, Request
         self._Request = Request
+        self._abft = abft_api
         self.cfg = reduced(registry.get(arch))
         self.params = model_api.init_params(self.cfg, key)
         self.engine = Engine(self.cfg, self.params, capacity=2, max_len=64,
-                             prefill_pad=8, backend=backend)
+                             prefill_pad=8, snapshot_every=2, backend=backend)
+        # deploy-time storage checksums: the scrub baseline for weight sites
+        self.storage_checks = jax.jit(abft_api.storage_checksums)(self.params)
+        self._verify_storage = jax.jit(abft_api.verify_storage)
         self.prompts = [[5, 9, 2], [3, 1, 4, 1]]
+        self._recovery = _RecoveryLog()
 
-    def _run_engine(self, params) -> Tuple[Tuple[int, ...], ...]:
-        self.engine.reset(params=params)
-        reqs = [self._Request(uid=i, prompt=p, max_new_tokens=4)
+    @staticmethod
+    def supports(policy: Policy, site: str) -> bool:
+        # DMR/TMR here are stream-replay drills over persistent faults; the
+        # transient sites belong to the scrubbing policies (ABFT detects,
+        # CKPT recovers) and the NONE baseline
+        if policy in (Policy.DMR, Policy.TMR):
+            return site == "weights"
+        return True
+
+    def _run_engine(self, params, scrub_mode: str = "off",
+                    state_site: str = None, fault=None, key=None,
+                    ) -> Tuple[Tuple[int, ...], ...]:
+        eng = self.engine
+        eng.state_scrub = scrub_mode
+        eng.reset(params=params)
+        reqs = [self._Request(uid=i, prompt=list(p), max_new_tokens=4)
                 for i, p in enumerate(self.prompts)]
         for r in reqs:
-            self.engine.submit(r)
-        self.engine.run()
+            eng.submit(r)
+        steps = 0
+        while (eng.queue or eng.active) and steps < 1000:
+            eng.step()
+            steps += 1
+            if steps == self.STRIKE_STEP and state_site is not None:
+                if state_site == "kv_cache":
+                    eng.cache = fl.inject_pytree_with(eng.cache, key, fault)
+                else:                               # decode_state
+                    eng.tokens = fault(eng.tokens, key)
         return tuple(tuple(r.output) for r in reqs)
 
+    def _weight_scrub_failed(self) -> bool:
+        ok = self._verify_storage(self.engine.params, self.storage_checks)
+        return not all(bool(x) for x in jax.tree_util.tree_leaves(ok))
+
     def run_trials(self, policy, site, fault, keys):
+        import time as _time
+        scrub_mode = {Policy.ABFT: "detect", Policy.CKPT: "rollback"}.get(
+            policy, "off")
+        state_site = site if site in ("kv_cache", "decode_state") else None
+
+        def serve(params, key):
+            return self._run_engine(params, scrub_mode=scrub_mode,
+                                    state_site=state_site,
+                                    fault=fault, key=key)
+
         golden = self._run_engine(self.params)
         detected_l, mismatch_l = [], []
         for k in keys:
-            out = self._run_engine(fl.inject_pytree_with(self.params, k, fault))
+            params = self.params if state_site is not None \
+                else fl.inject_pytree_with(self.params, k, fault)
+            out = serve(params, k)
+            events = self.engine.drain_state_events()
+            detected = len(events) > 0
+            self._recovery.count += sum(1 for e in events if e["recovered"])
+            self._recovery.seconds += [e["seconds"] for e in events
+                                       if e["recovered"]]
+            if site == "weights" and policy in (Policy.ABFT, Policy.CKPT):
+                # post-run storage scrub against deploy-time checksums
+                bad = self._weight_scrub_failed()
+                self.engine.record_dependability({
+                    "faults_detected": jnp.int32(1 if bad else 0),
+                    "checks_run": jnp.int32(1)})
+                detected = detected or bad
+                if bad and policy == Policy.CKPT:
+                    # rollback-and-reexecute from the golden checkpoint
+                    t0 = _time.perf_counter()
+                    out = self._run_engine(self.params)
+                    self._recovery.seconds.append(_time.perf_counter() - t0)
+                    self._recovery.count += 1
+                    self.engine.record_dependability({
+                        "faults_recovered": jnp.int32(1)})
             differs = out != golden
             if policy == Policy.TMR:
                 # temporal TMR: clean replicas replay deterministically, so a
@@ -386,10 +508,16 @@ class ServingCase:
                     self.engine.record_dependability({
                         "faults_detected": jnp.int32(1),
                         "checks_run": jnp.int32(1)})
-            else:
+            elif policy == Policy.NONE:
                 detected_l.append(False)
                 mismatch_l.append(differs)
+            else:                                   # ABFT / CKPT
+                detected_l.append(bool(detected))
+                mismatch_l.append(differs)
         return np.asarray(detected_l), np.asarray(mismatch_l)
+
+    def drain_recovery_stats(self) -> dict:
+        return self._recovery.drain()
 
 
 class FleetCase:
@@ -398,19 +526,22 @@ class FleetCase:
     the *released output stream* — the paper's actual system property.
 
     Sites:
-      weights      persistent storage SEU in replica 0's parameters.  The
-                   ABFT fleet policy scrubs against deploy-time storage
-                   checksums, quarantines, reloads from the golden
-                   checkpoint, re-verifies, readmits, and replays recalled
-                   requests — trials end ``detected_corrected``.
-      accumulator  transient SEU in replica 0's live decode-state (the
-                   sampled-token buffer) mid-flight.  DMR pair-serving
-                   detects the divergence, scrub-attribution clears the
-                   weights, and the replayed request restores the golden
-                   stream.  The weight scrub cannot see this site, so
-                   ABFT×accumulator is an unsupported combination
-                   (``supports``) — the blind spot is the contract
-                   boundary, not a bug (see docs/fleet.md).
+      weights       persistent storage SEU in replica 0's parameters.  The
+                    scrub-gated policies (ABFT, CKPT) verify against
+                    deploy-time storage checksums, quarantine, restore from
+                    the golden checkpoint (*incrementally* — only the
+                    corrupted leaves are re-read), re-verify, readmit, and
+                    replay recalled requests — trials end
+                    ``detected_corrected`` with a measured recovery time.
+      kv_cache      transient SEU in replica 0's live KV cache / recurrent
+                    state mid-flight.
+      decode_state  transient SEU in replica 0's sampled-token buffer
+                    mid-flight.  Both transient sites are caught by the
+                    engine's decode-state scrub: a CKPT fleet rolls the
+                    engine back to its verified snapshot in place, an ABFT
+                    fleet detects and drains + fails over, and DMR
+                    pair-serving detects by stream divergence — three
+                    recovery strategies, one certified outcome (SDC = 0).
 
     Under NONE the fleet releases whatever the corrupted replica produced:
     nonzero SDC, the baseline every dependable policy is judged against.
@@ -419,8 +550,8 @@ class FleetCase:
     """
 
     name = "fleet"
-    sites = ("weights", "accumulator")
-    policies = (Policy.NONE, Policy.ABFT, Policy.DMR)
+    sites = ("weights", "kv_cache", "decode_state")
+    policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.CKPT)
 
     def __init__(self, key: jax.Array, backend: str = "jnp",
                  arch: str = "smollm-135m"):
@@ -434,12 +565,18 @@ class FleetCase:
         self.params = model_api.init_params(self.cfg, key)
         self.fleet = Fleet(self.cfg, self.params, n_replicas=2,
                            policy=Policy.NONE, capacity=2, max_len=64,
-                           prefill_pad=8, scrub_every=3, backend=backend)
+                           prefill_pad=8, scrub_every=3, snapshot_every=2,
+                           backend=backend)
         self.prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7]]
+        self._recovery = _RecoveryLog()
 
     @staticmethod
     def supports(policy: Policy, site: str) -> bool:
-        return not (policy == Policy.ABFT and site == "accumulator")
+        # DMR pair-serving judges output streams, so a cache strike that
+        # never manifests in tokens is invisible to it — the pair agrees
+        # and the (clean) stream releases.  That is masked, not SDC, so
+        # the combination stays supported; every policy covers every site.
+        return True
 
     def _serve(self, policy: Policy, site: str, fault, key):
         fleet = self.fleet
@@ -452,25 +589,38 @@ class FleetCase:
         if site == "weights":
             victim.engine.params = fl.inject_pytree_with(
                 victim.engine.params, key, fault)
-        else:   # accumulator: strike live decode state two ticks in
+        else:   # transient sites: strike live decode state two ticks in
             fleet.tick()
             fleet.tick()
-            victim.engine.tokens = fault(victim.engine.tokens, key)
+            if site == "kv_cache":
+                victim.engine.cache = fl.inject_pytree_with(
+                    victim.engine.cache, key, fault)
+            else:                                    # decode_state
+                victim.engine.tokens = fault(victim.engine.tokens, key)
         fleet.run()
         outs = tuple(
             tuple(fleet.released[r.uid].output) if r.uid in fleet.released
             else None
             for r in reqs)
-        return outs, fleet.metrics.detections > 0
+        m = fleet.metrics
+        self._recovery.count += m.recoveries + m.state_rollbacks \
+            + m.state_drains
+        self._recovery.seconds += list(m.recovery_seconds)
+        return outs, m.detections > 0
 
     def run_trials(self, policy, site, fault, keys):
         golden, _ = self._serve(policy, site, _IDENTITY, keys[0])
+        # the golden pass must not contribute recovery accounting
+        self._recovery.drain()
         detected_l, mismatch_l = [], []
         for k in keys:
             out, det = self._serve(policy, site, fault, k)
             detected_l.append(bool(det))
             mismatch_l.append(out != golden)
         return np.asarray(detected_l), np.asarray(mismatch_l)
+
+    def drain_recovery_stats(self) -> dict:
+        return self._recovery.drain()
 
 
 # ---------------------------------------------------------------------------
@@ -527,12 +677,21 @@ def run_campaign(specs: Sequence[fl.CampaignSpec],
         detected, mismatch = case.run_trials(spec.policy, spec.site,
                                              fault.apply, keys)
         counts = classify_counts(detected, mismatch)
+        if hasattr(case, "drain_recovery_stats"):
+            recovery = case.drain_recovery_stats()
+        elif spec.policy == Policy.CKPT:
+            # in-graph rollback (kernel/shipdet workloads): every corrected
+            # trial was a rollback re-execution; latency is in-op, not host
+            recovery = {"faults_recovered": counts["detected_corrected"]}
+        else:
+            recovery = {}
         res = ConfigResult(
             workload=spec.workload, policy=spec.policy.value, site=spec.site,
             fault_model=spec.fault_model, trials=spec.trials,
-            backend=spec.backend, **counts)
+            backend=spec.backend, **counts, **recovery)
         log(f"{spec.label()}: det={res.detection_rate:.3f} "
-            f"sdc={res.sdc_rate:.3f} cov={res.coverage:.3f}")
+            f"sdc={res.sdc_rate:.3f} cov={res.coverage:.3f}"
+            + (f" rec={res.faults_recovered}" if res.faults_recovered else ""))
         results.append(res)
     return results
 

@@ -16,6 +16,15 @@ ask for a ``qlinear``; the policy decides how it is executed:
   TMR   — triple execution + bitwise majority vote (3× cost; for the few
           layers whose corruption is mission-fatal, e.g. the final
           classification head of the ship detector).
+  CKPT  — checkpoint/restart: detect via the same exact mod-2^32 checksum
+          ABFT uses, but recover by *rolling back to the golden
+          checkpointed operands and re-executing the whole op* instead of
+          ABFT's selective row recompute.  With a golden operand checkpoint
+          (``ckpt=``) the rollback also heals weight-memory SEUs — the one
+          storage fault class ABFT can detect but never repair in place.
+          Detection cost is ABFT's ~1/N; recovery cost is one full
+          re-execution, paid only on (rare) detection.  See
+          docs/recovery.md.
 
 Policies are data (config enums), so a deployment can mix them per layer —
 matching how the paper reserves the rad-hard HPDP for the convolution hot
@@ -48,6 +57,7 @@ class Policy(str, enum.Enum):
     ABFT = "abft"
     DMR = "dmr"
     TMR = "tmr"
+    CKPT = "ckpt"
 
 
 class DependabilityStats:
@@ -61,6 +71,12 @@ class DependabilityStats:
                          DMR never corrects — its count stays 0 and the gap
                          vs ``faults_detected`` is exactly the failover
                          layer's workload.
+    ``faults_recovered`` detected faults healed by *rollback* — checkpoint/
+                         restart re-execution from golden state (CKPT ops,
+                         engine snapshot restores, fleet incremental
+                         restores).  Disjoint accounting from
+                         ``faults_corrected`` so reports can separate
+                         in-place correction from restart recovery.
     ``checks_run``       how many verification opportunities executed.
     """
 
@@ -68,6 +84,7 @@ class DependabilityStats:
     def zero():
         return {"faults_detected": jnp.zeros((), jnp.int32),
                 "faults_corrected": jnp.zeros((), jnp.int32),
+                "faults_recovered": jnp.zeros((), jnp.int32),
                 "checks_run": jnp.zeros((), jnp.int32)}
 
     @staticmethod
@@ -84,13 +101,15 @@ class DependabilityStats:
         return {k: int(v) for k, v in stats.items()}
 
 
-def _bump(stats: dict, detected, corrected) -> dict:
+def _bump(stats: dict, detected, corrected, recovered=False) -> dict:
     """One verification round folded into the running counters."""
     return {
         "faults_detected": stats["faults_detected"]
         + jnp.asarray(detected).astype(jnp.int32),
         "faults_corrected": stats.get("faults_corrected", jnp.int32(0))
         + jnp.asarray(corrected).astype(jnp.int32),
+        "faults_recovered": stats.get("faults_recovered", jnp.int32(0))
+        + jnp.asarray(recovered).astype(jnp.int32),
         "checks_run": stats["checks_run"] + 1,
     }
 
@@ -100,15 +119,17 @@ def dependable_qmatmul(
     x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,
     scale: jax.Array, out_zp: jax.Array,
     *, inject=None, stats: Optional[dict] = None, w_check=None,
-    backend: backend_mod.BackendLike = None,
+    ckpt=None, backend: backend_mod.BackendLike = None,
 ):
     """Quantized matmul + requant executed under a dependability policy.
 
     ``inject`` corrupts the int32 accumulator (the campaign engine's
     accumulator injection site); ``w_check`` is the optional deploy-time
-    checksum vector (see ``abft.abft_qmatmul``); ``backend`` picks the
-    execution engine (per-call > per-layer > global, see core/backend.py).
-    Returns (y_q int8, stats).
+    checksum vector (see ``abft.abft_qmatmul``); ``ckpt`` is the optional
+    golden operand checkpoint ``(x_q, w_q)`` the CKPT policy rolls back to
+    (defaults to the live operands — transient coverage only); ``backend``
+    picks the execution engine (per-call > per-layer > global, see
+    core/backend.py).  Returns (y_q int8, stats).
     """
     if stats is None:
         stats = DependabilityStats.zero()
@@ -126,6 +147,28 @@ def dependable_qmatmul(
         y = requantize(res.acc, scale, out_zp)
         corrected = res.faults_detected * res.ok.astype(jnp.int32)
         return y, _bump(stats, res.faults_detected, corrected)
+
+    if policy == Policy.CKPT:
+        # checkpoint/restart: checksum-detect, then roll back to the golden
+        # operand checkpoint and re-execute everything (epilogue included —
+        # a corrupted w_q must not leak through zp/colsum algebra)
+        ck_x, ck_w = (x_q, w_q) if ckpt is None else ckpt
+        wc = w_check if w_check is not None else abft_mod.checksum_vector(ck_w)
+        acc_dot, want = be.matmul_acc_checksum(x_q, w_q, wc)
+        if inject is not None:
+            acc_dot = inject(acc_dot)
+        detected = jnp.any(jnp.sum(acc_dot, axis=1) != want)
+
+        def rollback(_):
+            return be.matmul_acc(ck_x, ck_w), ck_w
+
+        acc_dot, w_eff = jax.lax.cond(
+            detected, rollback, lambda a: (a, w_q), acc_dot)
+        # re-verify the restart: clean ⇒ the fault did not recur
+        recovered = detected & jnp.all(jnp.sum(acc_dot, axis=1) == want)
+        y = requantize(abft_mod.zp_bias_correct(acc_dot, x_zp, w_eff, bias),
+                       scale, out_zp)
+        return y, _bump(stats, detected, False, recovered)
 
     def run(inj):
         # inject corrupts replica 0's accumulator — the same site as the
@@ -160,7 +203,7 @@ def dependable_qconv2d(
     scale: jax.Array, out_zp: jax.Array,
     *, stride=(1, 1), padding="SAME",
     inject=None, stats: Optional[dict] = None, w_check=None,
-    backend: backend_mod.BackendLike = None,
+    ckpt=None, backend: backend_mod.BackendLike = None,
 ):
     """Quantized NHWC conv + requant under a dependability policy — the conv
     twin of ``dependable_qmatmul`` so every campaign injection site drives
@@ -182,6 +225,24 @@ def dependable_qconv2d(
         y = requantize(res.acc, scale, out_zp)
         corrected = res.faults_detected * res.ok.astype(jnp.int32)
         return y, _bump(stats, res.faults_detected, corrected)
+
+    if policy == Policy.CKPT:
+        ck_x, ck_w = (x_q, w_q) if ckpt is None else ckpt
+        wc = w_check if w_check is not None \
+            else abft_mod.conv_checksum_weight(ck_w)
+        acc_dot, want = be.conv_acc_checksum(x_q, x_zp, w_q, wc, stride,
+                                             padding)
+        if inject is not None:
+            acc_dot = inject(acc_dot)
+        detected = jnp.any(jnp.sum(acc_dot, axis=3) != want)
+
+        def rollback(_):
+            return be.conv_acc(ck_x, x_zp, ck_w, stride, padding)
+
+        acc_dot = jax.lax.cond(detected, rollback, lambda a: a, acc_dot)
+        recovered = detected & jnp.all(jnp.sum(acc_dot, axis=3) == want)
+        y = finish(acc_dot)
+        return y, _bump(stats, detected, False, recovered)
 
     def run(inj):
         acc = be.conv_acc(x_q, x_zp, w_q, stride, padding)

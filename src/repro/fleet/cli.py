@@ -11,7 +11,12 @@ reference) and once under the requested fault.  The exit code is the
 dependability verdict: 0 when every released token stream matches the
 golden run, 1 when the fault silently corrupted the released output —
 so ``--policy none --inject weights`` is *expected* to exit 1 on
-manifesting faults, and abft/dmr must always exit 0.
+manifesting faults, and abft/dmr/ckpt must always exit 0.
+
+``--inject kv_cache`` / ``--inject decode_state`` strike a replica's live
+transient state mid-serve: DMR catches the divergence by pair-comparison,
+ABFT by the decode-state scrub (drain + failover), and CKPT by the scrub
+with an in-place engine snapshot rollback (docs/recovery.md).
 """
 from __future__ import annotations
 
@@ -29,7 +34,7 @@ from repro.fleet.fleet import FLEET_POLICIES, Fleet
 from repro.fleet.router import POLICIES as ROUTER_POLICIES
 from repro.runtime.serving import Request
 
-INJECT_SITES = ("none", "weights", "accumulator")
+INJECT_SITES = ("none", "weights", "kv_cache", "decode_state")
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -74,12 +79,15 @@ def _serve(fleet: Fleet, prompts, max_new_tokens: int, *,
         victim = fleet.replicas[0]
         victim.engine.params = fi.inject_pytree_with(
             victim.engine.params, key, fi.flip_one_bit)
-    mid_drill = inject == "accumulator" or kill >= 0
+    mid_drill = inject in ("kv_cache", "decode_state") or kill >= 0
     if mid_drill:
         for _ in range(2):
             fleet.tick()
-        if inject == "accumulator":
-            victim = fleet.replicas[0]
+        victim = fleet.replicas[0]
+        if inject == "kv_cache":
+            victim.engine.cache = fi.inject_pytree_with(
+                victim.engine.cache, key, fi.flip_one_bit)
+        elif inject == "decode_state":
             victim.engine.tokens = fi.flip_one_bit(victim.engine.tokens, key)
         if kill >= 0:
             fleet.kill_replica(kill)
@@ -94,12 +102,6 @@ def _serve(fleet: Fleet, prompts, max_new_tokens: int, *,
 def main(argv=None) -> int:
     parser = build_parser()
     args = parser.parse_args(argv)
-    if args.policy == "abft" and args.inject == "accumulator":
-        # same contract boundary the campaign enforces (FleetCase.supports):
-        # the weight scrub cannot see transient decode-state corruption
-        parser.error("--policy abft does not cover --inject accumulator "
-                     "(weight scrubs verify storage, not live decode state); "
-                     "use --policy dmr for transient-site drills")
     from repro.configs import registry
     from repro.models import api as model_api
     from repro.models.config import reduced

@@ -32,6 +32,18 @@ it is clean —
     (corrupted one recovers via checkpoint reload), and the request replays
     on a clean replica.  Catches *transient* compute/state faults the
     weight scrub cannot see, at 2× decode cost.
+  * ``Policy.CKPT``  checkpoint/restart as the primary strategy: ABFT's
+    certify-before-release weight scrubs, plus decode-state scrubbing with
+    engine snapshot *rollback* — a transient SEU in the KV cache or token
+    buffer is detected by checksum and healed by replaying at most
+    ``snapshot_every`` steps in place, no failover needed.  ABFT fleets
+    run the same decode-state scrub in detect-only mode (transient-site
+    coverage the ROADMAP called for) and recover by drain + failover.
+
+Quarantine-recovery (any policy) is *incremental first*: the scrub verdict
+names the corrupted tensors and the supervisor restores exactly those
+leaves from the golden checkpoint, timing every recovery into the metrics
+(``recovery_mean_seconds``, ``incremental_restores`` vs ``full_reloads``).
 
 Failover is deterministic: greedy decode is a pure function of (params,
 prompt) and the engine's continuous batching is composition-independent, so
@@ -59,7 +71,22 @@ from repro.models.config import ArchConfig
 from repro.runtime.serving import Request
 from repro.train import checkpoint as ckpt_mod
 
-FLEET_POLICIES = (Policy.NONE, Policy.ABFT, Policy.DMR)
+FLEET_POLICIES = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.CKPT)
+
+# policies whose release gate is the weight-scrub certification loop
+_SCRUB_GATED = (Policy.ABFT, Policy.CKPT)
+
+
+def _state_scrub_mode(policy: Policy) -> str:
+    """Engine decode-state scrub mode per fleet policy: CKPT rolls back in
+    place (engine-local checkpoint/restart), ABFT detects and lets the
+    fleet drain + fail over, NONE/DMR leave the scrub off (DMR's pair
+    comparison is its transient detector)."""
+    if policy == Policy.CKPT:
+        return "rollback"
+    if policy == Policy.ABFT:
+        return "detect"
+    return "off"
 
 
 @dataclasses.dataclass
@@ -113,14 +140,17 @@ class Fleet:
         # every replica serves on the same execution backend: bit-identical
         # failover (the fleet's core guarantee) holds *across* backends too,
         # but certify-before-release compares like for like within a fleet
+        scrub_mode = _state_scrub_mode(policy)
         first = Replica(0, cfg, params, capacity=capacity, max_len=max_len,
                         prefill_pad=prefill_pad, snapshot_every=snapshot_every,
-                        eos_id=eos_id, backend=backend)
+                        eos_id=eos_id, backend=backend,
+                        state_scrub=scrub_mode)
         self.replicas: List[Replica] = [first] + [
             Replica(i, cfg, params, capacity=capacity, max_len=max_len,
                     prefill_pad=prefill_pad, snapshot_every=snapshot_every,
                     eos_id=eos_id, golden=first.golden,
-                    compiled=first.engine.compiled, backend=backend)
+                    compiled=first.engine.compiled, backend=backend,
+                    state_scrub=scrub_mode)
             for i in range(1, n_replicas)]
         self.router = Router(router, admit_limit)
         self.supervisor = Supervisor(n_replicas, scrub_every=scrub_every,
@@ -186,6 +216,7 @@ class Fleet:
                                       time.perf_counter() - t0, self.tick_no)
             for req in finished:
                 self._on_finished(r, req)
+            self._settle_state_events(r)
         self.supervisor.stragglers()      # straggler log (advisory in-process)
 
         for rid in self.supervisor.newly_dead(self.tick_no):
@@ -194,13 +225,45 @@ class Fleet:
                 self._fail_replica(r, reason="heartbeat timeout",
                                    recover=False)
 
-        if self.policy == Policy.ABFT and self.supervisor.due_for_scrub(
+        if self.policy in _SCRUB_GATED and self.supervisor.due_for_scrub(
                 self.tick_no):
             for r in self.replicas:
                 if r.state is ReplicaState.HEALTHY:
                     self._scrub_and_settle(r)
 
         self._expire_deadlines()
+
+    # ------------------------------------------------- decode-state scrubs
+    def _settle_state_events(self, replica: Replica):
+        """Fold the engine's decode-state scrub verdicts into fleet metrics
+        and finish the recovery the engine could not do alone: a CKPT
+        engine already rolled back (we only account it); a detect-only
+        (ABFT) engine — or a rollback that found its snapshot corrupted —
+        needs the fleet to drain the replica's work, clear its decode
+        state, and replay on verified replicas."""
+        for ev in replica.engine.drain_state_events():
+            self.metrics.detections += 1
+            self.metrics.state_scrub_detections += 1
+            action = (f"rolled back {ev['steps_replayed']} steps"
+                      if ev["recovered"] else "drain + replay")
+            self.supervisor.events.append(
+                f"tick {self.tick_no}: replica {replica.rid} decode-state "
+                f"scrub detected corruption ({action})")
+            if ev["recovered"]:
+                self.metrics.observe_recovery(ev["seconds"], rollback=True)
+                continue
+            t0 = time.perf_counter()
+            drained = replica.in_flight() + replica.uncertified
+            replica.uncertified = []
+            # weights are untouched by a state SEU: a run-state reset (not a
+            # quarantine) makes the replica clean again
+            replica.engine.reset()
+            self.metrics.recovery_seconds.append(time.perf_counter() - t0)
+            self.metrics.state_drains += 1
+            for req in drained:
+                rec = self.records.get(req.uid)
+                if rec is not None and not rec.terminal:
+                    self._replay(rec)
 
     def run(self, max_ticks: int = 100_000) -> FleetMetrics:
         """Serve until every submitted request reaches a terminal state
@@ -221,7 +284,7 @@ class Fleet:
         is_primary = req is rec.req
         if not is_primary and req is not rec.shadow:
             return                                   # stale pre-replay copy
-        if self.policy == Policy.ABFT:
+        if self.policy in _SCRUB_GATED:
             if is_primary:
                 replica.uncertified.append(req)
             return
@@ -384,7 +447,7 @@ class Fleet:
         """End-of-stream settlement: scrub every replica still holding
         uncertified output so the tail of the stream is certified (or
         recalled) even when the tick count never hits the scrub cadence."""
-        if self.policy == Policy.ABFT:
+        if self.policy in _SCRUB_GATED:
             for r in self.replicas:
                 if r.state is ReplicaState.HEALTHY and r.uncertified:
                     self._scrub_and_settle(r)
@@ -414,7 +477,9 @@ class Fleet:
                 raise ValueError(f"fleet policy must be one of "
                                  f"{[p.value for p in FLEET_POLICIES]}")
             self.policy = policy
+        scrub_mode = _state_scrub_mode(self.policy)
         for r in self.replicas:
+            r.engine.state_scrub = scrub_mode
             r.reset(params=self._params0)
         self.supervisor.reset()
         self.metrics = FleetMetrics(

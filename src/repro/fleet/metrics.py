@@ -37,14 +37,24 @@ class FleetMetrics:
 
     # dependability counters
     scrubs: int = 0
-    detections: int = 0              # scrub mismatches + DMR disagreements
-    recoveries: int = 0              # quarantine→reload→re-verify→readmit cycles
+    detections: int = 0              # scrub mismatches + DMR disagreements + state-scrub hits
+    recoveries: int = 0              # quarantine→restore→re-verify→readmit cycles
     failovers: int = 0               # requests replayed on another replica
     replicas_lost: int = 0           # replicas that ended DEAD
     lost_tokens: int = 0             # tokens discarded and re-decoded (actual lost work)
 
+    # recovery accounting (checkpoint/restart as a measured subsystem)
+    incremental_restores: int = 0    # quarantine recoveries served by partial restore
+    full_reloads: int = 0            # recoveries that needed the whole checkpoint
+    leaves_restored: int = 0         # tensors re-read across incremental restores
+    state_scrub_detections: int = 0  # decode-state checksum mismatches (transient SEUs)
+    state_rollbacks: int = 0         # engine snapshot rollbacks (CKPT transient recovery)
+    state_drains: int = 0            # drain+replay transient recoveries (ABFT detect mode)
+
     # latency, in fleet ticks (submit → release)
     latencies: List[int] = dataclasses.field(default_factory=list)
+    # recovery latency, wall seconds (quarantine-restore + snapshot rollbacks)
+    recovery_seconds: List[float] = dataclasses.field(default_factory=list)
     started_at: float = dataclasses.field(default_factory=time.time)
 
     # ------------------------------------------------------------- derived
@@ -52,6 +62,29 @@ class FleetMetrics:
         self.released += 1
         self.tokens_out += n_tokens
         self.latencies.append(int(latency_ticks))
+
+    def observe_recovery(self, seconds: float, *, leaves: int = 0,
+                         incremental: bool = False, rollback: bool = False):
+        """One measured recovery action: a quarantine restore (incremental
+        or full-reload) or an engine decode-state snapshot rollback."""
+        self.recovery_seconds.append(float(seconds))
+        if rollback:
+            self.state_rollbacks += 1
+        elif incremental:
+            self.incremental_restores += 1
+            self.leaves_restored += leaves
+        else:
+            self.full_reloads += 1
+
+    def recovery_mean_seconds(self) -> float:
+        if not self.recovery_seconds:
+            return 0.0
+        return float(np.mean(self.recovery_seconds))
+
+    def recovery_max_seconds(self) -> float:
+        if not self.recovery_seconds:
+            return 0.0
+        return float(np.max(self.recovery_seconds))
 
     def latency_percentile(self, q: float) -> float:
         if not self.latencies:
@@ -73,8 +106,11 @@ class FleetMetrics:
     def to_json(self) -> dict:
         d = {f.name: getattr(self, f.name)
              for f in dataclasses.fields(self)
-             if f.name not in ("latencies", "started_at")}
+             if f.name not in ("latencies", "recovery_seconds", "started_at")}
         d.update(
+            recovery_count=len(self.recovery_seconds),
+            recovery_mean_seconds=round(self.recovery_mean_seconds(), 6),
+            recovery_max_seconds=round(self.recovery_max_seconds(), 6),
             p50_latency_ticks=self.p50_ticks,
             p99_latency_ticks=self.p99_ticks,
             tokens_per_tick=self.throughput_tokens_per_tick(),

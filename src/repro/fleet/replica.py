@@ -18,14 +18,16 @@ that guards the matmul accumulator, applied to the parameter store.
 from __future__ import annotations
 
 import enum
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import abft
 from repro.models.config import ArchConfig
 from repro.runtime.serving import Engine, Request
+from repro.train import checkpoint as ckpt_mod
 
 # jitted once per pytree structure, shared by all replicas
 _checksums_jit = jax.jit(abft.storage_checksums)
@@ -45,18 +47,21 @@ class Replica:
     def __init__(self, rid: int, cfg: ArchConfig, params, *,
                  capacity: int = 4, max_len: int = 128, prefill_pad: int = 8,
                  snapshot_every: int = 16, eos_id: int = -1,
-                 golden=None, compiled=None, backend: Optional[str] = None):
+                 golden=None, compiled=None, backend: Optional[str] = None,
+                 state_scrub: str = "off"):
         self.rid = rid
         self.engine = Engine(cfg, params, capacity=capacity, max_len=max_len,
                              prefill_pad=prefill_pad,
                              snapshot_every=snapshot_every, eos_id=eos_id,
-                             compiled=compiled, backend=backend)
+                             compiled=compiled, backend=backend,
+                             state_scrub=state_scrub)
         self.state = ReplicaState.HEALTHY
         self.paused = False          # test hook: stop heartbeating (looks dead)
         self.golden = golden if golden is not None else _checksums_jit(params)
         self.uncertified: List[Request] = []   # finished, awaiting clean scrub
         self.recoveries = 0
         self.last_clean_scrub_tick = 0
+        self.last_scrub_bad: List[str] = []    # verdict of the newest scrub
 
     # --------------------------------------------------------------- status
     @property
@@ -75,13 +80,17 @@ class Replica:
     # ---------------------------------------------------------------- scrub
     def scrub(self) -> List[str]:
         """Verify live weights against deploy-time checksums; returns the
-        paths of corrupted leaves ([] == clean)."""
+        paths of corrupted leaves ([] == clean).  Paths use the checkpoint
+        manifest's encoding (``train/checkpoint.path_str``), so a scrub
+        verdict is directly a ``restore_leaves`` read-list — the link that
+        makes quarantine-recovery incremental."""
         ok_tree = _verify_jit(self.engine.params, self.golden)
         flat, _ = jax.tree_util.tree_flatten_with_path(ok_tree)
         bad = []
         for path, ok in flat:
             if not bool(ok):
-                bad.append(jax.tree_util.keystr(path))
+                bad.append(ckpt_mod.path_str(path))
+        self.last_scrub_bad = bad
         return bad
 
     # ------------------------------------------------------------- recovery
@@ -90,6 +99,23 @@ class Replica:
         (the reload step of the recovery loop; compiled fns are kept)."""
         params = jax.tree_util.tree_map(jnp.asarray, params)
         self.engine.reset(params=params)
+        self.uncertified = []
+
+    def reload_leaves(self, leaves: Dict[str, np.ndarray]):
+        """Incremental reload: patch only the named leaves (checkpoint-
+        manifest paths → golden bytes) into the live params, then clear run
+        state.  The quarantine-recovery fast path — a replica with two
+        corrupted tensors re-reads two tensors, not the whole model."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            self.engine.params)
+        patched = []
+        for path, leaf in flat:
+            p = ckpt_mod.path_str(path)
+            if p in leaves:
+                leaf = jnp.asarray(leaves[p], dtype=leaf.dtype).reshape(
+                    leaf.shape)
+            patched.append(leaf)
+        self.engine.reset(params=jax.tree_util.tree_unflatten(treedef, patched))
         self.uncertified = []
 
     def reset(self, params=None):
@@ -101,3 +127,4 @@ class Replica:
         self.state = ReplicaState.HEALTHY
         self.paused = False
         self.last_clean_scrub_tick = 0
+        self.last_scrub_bad = []

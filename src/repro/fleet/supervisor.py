@@ -12,14 +12,20 @@ needs:
   * **scrub** — verify a replica's live weights against the deploy-time
     ABFT storage checksums (``core.abft.storage_checksums``); any mismatch
     is a detected weight-SEU.
-  * **recover** — drive the quarantine → checkpoint reload → re-verify →
-    readmit state machine for a replica whose scrub failed.  Reload comes
-    from the fleet's golden checkpoint (``train/checkpoint.py``, crc32-
-    verified on read); re-verification scrubs the reloaded weights before
-    the replica serves again.  A replica that cannot be re-verified is DEAD.
+  * **recover** — drive the quarantine → restore → re-verify → readmit
+    state machine for a replica whose scrub failed.  Recovery is
+    *incremental first*: the scrub verdict names exactly which tensors are
+    corrupted, so the supervisor re-reads only those leaves from the golden
+    checkpoint (``train/checkpoint.restore_leaves``, crc32-verified) and
+    patches them in — a full reload is the fallback, not the default.
+    Every recovery is wall-clock timed into ``FleetMetrics`` (the paper's
+    recovery-time argument needs a measured number, not a story).
+    Re-verification scrubs the restored weights before the replica serves
+    again; a replica that cannot be re-verified is DEAD.
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional
 
 from repro.fleet.metrics import FleetMetrics
@@ -77,36 +83,77 @@ class Supervisor:
         return True
 
     # ------------------------------------------------------------- recovery
+    def _full_reload(self, replica: Replica, ckpt_dir) -> None:
+        _, params = ckpt_mod.restore(ckpt_dir)       # crc32-verified read
+        replica.reload(params)
+
     def recover(self, replica: Replica, ckpt_dir, metrics: FleetMetrics,
                 tick: int) -> bool:
-        """quarantine → reload → re-verify → readmit.  Returns True when the
-        replica is HEALTHY again; on any failure it is left DEAD."""
+        """quarantine → restore → re-verify → readmit.  Returns True when
+        the replica is HEALTHY again; on any failure it is left DEAD.
+
+        The restore is incremental when the scrub verdict
+        (``replica.last_scrub_bad``) names the corrupted leaves: only those
+        are re-read from the golden checkpoint and patched in.  If the
+        partial restore cannot cover the verdict, or re-verification still
+        fails afterwards (e.g. the corruption moved while we restored), the
+        supervisor escalates to a full reload before giving up."""
+        t0 = time.perf_counter()
         replica.state = ReplicaState.QUARANTINED
         self.events.append(f"tick {tick}: replica {replica.rid} quarantined")
         replica.state = ReplicaState.RECOVERING
+        bad = list(replica.last_scrub_bad)
+        incremental = False
         try:
-            _, params = ckpt_mod.restore(ckpt_dir)   # crc32-verified read
+            if bad:
+                leaves = ckpt_mod.restore_leaves(ckpt_dir, bad)
+                if set(leaves) == set(bad):
+                    replica.reload_leaves(leaves)
+                    incremental = True
+            if not incremental:
+                self._full_reload(replica, ckpt_dir)
         except Exception as e:                        # noqa: BLE001
             replica.state = ReplicaState.DEAD
             metrics.replicas_lost += 1
             self.events.append(
                 f"tick {tick}: replica {replica.rid} DEAD "
-                f"(checkpoint reload failed: {e})")
+                f"(checkpoint restore failed: {e})")
             return False
-        replica.reload(params)
         still_bad = replica.scrub()
+        if still_bad and incremental:
+            # partial restore did not satisfy the re-verify — escalate
+            self.events.append(
+                f"tick {tick}: replica {replica.rid} incremental restore "
+                f"insufficient ({len(still_bad)} leaves still dirty); "
+                f"falling back to full reload")
+            incremental = False
+            try:
+                self._full_reload(replica, ckpt_dir)
+            except Exception as e:                    # noqa: BLE001
+                replica.state = ReplicaState.DEAD
+                metrics.replicas_lost += 1
+                self.events.append(
+                    f"tick {tick}: replica {replica.rid} DEAD "
+                    f"(fallback reload failed: {e})")
+                return False
+            still_bad = replica.scrub()
         if still_bad:
             replica.state = ReplicaState.DEAD
             metrics.replicas_lost += 1
             self.events.append(
                 f"tick {tick}: replica {replica.rid} DEAD "
-                f"(re-verify failed after reload)")
+                f"(re-verify failed after restore)")
             return False
+        seconds = time.perf_counter() - t0
         replica.state = ReplicaState.HEALTHY
         replica.last_clean_scrub_tick = tick
         replica.recoveries += 1
         metrics.recoveries += 1
+        metrics.observe_recovery(seconds, leaves=len(bad),
+                                 incremental=incremental)
+        how = (f"incremental restore of {len(bad)} leaves" if incremental
+               else "full reload")
         self.events.append(
             f"tick {tick}: replica {replica.rid} readmitted "
-            f"(checkpoint reload + re-verify ok)")
+            f"({how} + re-verify ok, {seconds * 1e3:.1f} ms)")
         return True

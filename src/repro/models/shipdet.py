@@ -126,8 +126,12 @@ def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
             ).astype(jnp.int32)
             rq = quant.requant_scale(p["in_scale"], p["qconv"].w_scale,
                                      p["out_scale"])
+            # ABFT and CKPT run inside the op (checksum detect; recompute-
+            # vs rollback-recover); NMR policies replicate at the network
+            # level, so their per-layer call is the plain path
             y_q, lstats = dependable_qconv2d(
-                policy if policy == Policy.ABFT else Policy.NONE,
+                policy if policy in (Policy.ABFT, Policy.CKPT)
+                else Policy.NONE,
                 x_q, p["in_zp"], p["qconv"].w_q, bias_i32, rq, p["out_zp"],
                 stride=stride, padding="SAME", inject=layer_inject,
                 backend=layer_be)

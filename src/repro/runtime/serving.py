@@ -14,6 +14,15 @@ The paper's runtime traits, mapped to a TPU serving engine:
   * **dependability hooks**: an optional dependability policy re-executes /
     checksums each step (core.dependability), and every N steps the engine
     snapshots decode state so a device fault replays at most N tokens.
+  * **decode-state scrubbing** (docs/recovery.md): the transient state a
+    weight scrub can never see — the KV cache / recurrent state and the
+    sampled-token buffer — carries a running mod-2^32 checksum, refreshed
+    after every legitimate mutation and re-verified before the next step
+    consumes it.  ``state_scrub="rollback"`` turns detection into
+    checkpoint/restart: the engine rolls back to its last (checksum-
+    verified) snapshot and replays, bounding lost work at
+    ``snapshot_every`` steps; ``"detect"`` only raises the alarm so a
+    fleet supervisor can drain + fail over instead.
 
 Single-process implementation (CPU or one TPU slice) with the same
 state-machine a multi-host engine needs; the scheduler is deliberately
@@ -30,9 +39,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import abft
 from repro.core.dependability import DependabilityStats
 from repro.models import api as model_api
 from repro.models.config import ArchConfig
+
+# decode-state checksums: the storage-scrub identity applied to the live
+# KV cache / recurrent state + token buffer; jitted once per cache structure
+_state_checksums = jax.jit(abft.storage_checksums)
+
+
+def _checks_equal(a, b) -> bool:
+    """Host verdict: does every leaf checksum match?"""
+    return all(bool(x) for x in jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda p, q: p == q, a, b)))
 
 
 @dataclasses.dataclass
@@ -68,7 +88,8 @@ class Engine:
     def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
                  max_len: int = 512, prefill_pad: int = 64,
                  snapshot_every: int = 32, eos_id: int = -1,
-                 compiled=None, backend: Optional[str] = None):
+                 compiled=None, backend: Optional[str] = None,
+                 state_scrub: str = "off"):
         # engine-level execution-backend override for the quantized hot
         # paths (core/backend registry); baked into cfg so the jitted
         # decode/prefill pair and any compiled-pair sharing stay consistent
@@ -109,6 +130,18 @@ class Engine:
         self._since_snapshot: List[Request] = []   # admitted after snapshot
         self.dependability = DependabilityStats.zero()
 
+        # decode-state scrubbing: "off" | "detect" | "rollback"
+        #   detect   — checksum-verify before each step; mismatches are
+        #              recorded as events for a supervisor to act on
+        #   rollback — additionally restore the last verified snapshot and
+        #              replay (engine-local checkpoint/restart)
+        if state_scrub not in ("off", "detect", "rollback"):
+            raise ValueError(f"state_scrub must be off|detect|rollback, "
+                             f"got {state_scrub!r}")
+        self.state_scrub = state_scrub
+        self._expected_check = None        # checksums after last mutation
+        self.state_events: List[dict] = []  # drained by fleets / campaigns
+
     @property
     def compiled(self):
         """The jitted (decode, prefill) pair, shareable with same-config
@@ -135,8 +168,66 @@ class Engine:
         self._snapshot = None
         self._snapshot_step = 0
         self._since_snapshot = []
+        self._expected_check = None
+        self.state_events = []
 
     # ------------------------------------------------------- dependability
+    def _device_state(self) -> dict:
+        """The device-resident decode state the scrub covers (the host-side
+        slot bookkeeping lives in ECC'd host memory in the deployment this
+        models, so it is outside the SEU threat surface)."""
+        return {"cache": self.cache, "tokens": self.tokens}
+
+    def _refresh_state_check(self):
+        """Re-checksum after a legitimate mutation — the running 'expected'
+        fingerprint every later scrub compares against."""
+        if self.state_scrub != "off":
+            self._expected_check = _state_checksums(self._device_state())
+
+    def scrub_decode_state(self) -> bool:
+        """Verify the live decode state against the post-mutation checksum;
+        True == clean.  A mismatch means an SEU struck the KV cache /
+        recurrent state or the token buffer *between* engine steps — the
+        transient site no weight scrub can see."""
+        if self._expected_check is None:
+            return True
+        fresh = _state_checksums(self._device_state())
+        clean = _checks_equal(fresh, self._expected_check)
+        self.record_dependability({
+            "faults_detected": jnp.int32(0 if clean else 1),
+            "checks_run": jnp.int32(1)})
+        return clean
+
+    def _scrub_and_recover(self):
+        """The per-step scrub: detect, and under ``rollback`` restore the
+        last verified snapshot (checkpoint/restart at decode granularity).
+        Appends one event per detection so fleets/campaigns can account
+        recoveries and measure recovery latency."""
+        if self.scrub_decode_state():
+            return
+        event = {"step": self.stats.steps, "recovered": False,
+                 "seconds": 0.0, "steps_replayed": 0}
+        if self.state_scrub == "rollback" and self._snapshot is not None:
+            t0 = time.perf_counter()
+            try:
+                event["steps_replayed"] = self.restore_snapshot()
+                event["recovered"] = True
+                event["seconds"] = time.perf_counter() - t0
+                self.record_dependability({"faults_recovered": jnp.int32(1)})
+            except RuntimeError:
+                # snapshot itself failed verification — leave recovered
+                # False; the supervisor's drain+replay is the fallback
+                pass
+        if not event["recovered"]:
+            # accept the corrupted fingerprint as the new baseline so one
+            # strike raises one alarm, not one per remaining step
+            self._refresh_state_check()
+        self.state_events.append(event)
+
+    def drain_state_events(self) -> List[dict]:
+        ev, self.state_events = self.state_events, []
+        return ev
+
     def record_dependability(self, stats: dict):
         """Fold a DependabilityStats pytree (from dependable ops or a
         campaign's detection verdicts) into the engine-lifetime counters."""
@@ -148,7 +239,9 @@ class Engine:
         out = DependabilityStats.to_host(self.dependability)
         out.update(steps=self.stats.steps, replays=self.stats.replays,
                    tokens_out=self.stats.tokens_out,
-                   snapshot_every=self.snapshot_every)
+                   snapshot_every=self.snapshot_every,
+                   state_scrub=self.state_scrub,
+                   state_events_pending=len(self.state_events))
         return out
 
     # ------------------------------------------------------------- admission
@@ -225,8 +318,15 @@ class Engine:
     def step(self) -> List[Request]:
         """One decode step for every active slot; returns requests that
         finished this step (admission-time finishes included)."""
+        # scrub BEFORE this step consumes the state (and before admission
+        # mutates it): anything that changed since the last legitimate
+        # mutation is an SEU, and under "rollback" we restart from the
+        # last verified snapshot instead of decoding from corrupted state
+        if self.state_scrub != "off" and self.active:
+            self._scrub_and_recover()
         finished = self._admit()
         if not self.active:
+            self._refresh_state_check()
             return finished
         if self.stats.steps % self.snapshot_every == 0:
             self._take_snapshot()
@@ -247,6 +347,7 @@ class Engine:
                 done_slots.append(slot)
         for slot in done_slots:
             finished.append(self.active.pop(slot))
+        self._refresh_state_check()
         return finished
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
@@ -266,6 +367,11 @@ class Engine:
             "outputs": {s: list(r.output) for s, r in self.active.items()},
             "steps": self.stats.steps,
             "tokens_out": self.stats.tokens_out,
+            # golden-snapshot integrity: checksummed at capture so a later
+            # restore can refuse a snapshot that was itself struck
+            "check": (_state_checksums(
+                {"cache": self.cache, "tokens": self.tokens})
+                if self.state_scrub != "off" else None),
         }
         self._snapshot_step = self.stats.steps
         self._since_snapshot = []
@@ -287,6 +393,14 @@ class Engine:
         if self._snapshot is None:
             raise RuntimeError("no snapshot taken yet")
         snap = self._snapshot
+        if snap["check"] is not None:
+            fresh = _state_checksums(
+                {"cache": snap["cache"], "tokens": snap["tokens"]})
+            if not _checks_equal(fresh, snap["check"]):
+                raise RuntimeError(
+                    "snapshot failed checksum verification (SEU struck the "
+                    "golden snapshot itself) — refusing to restore; escalate "
+                    "to drain + failover")
         self.cache = snap["cache"]
         self.tokens = snap["tokens"]
         self.slot_pos = snap["slot_pos"].copy()
@@ -308,6 +422,7 @@ class Engine:
         self.stats.steps = snap["steps"]
         self.stats.tokens_out = snap["tokens_out"]
         self.stats.replays += 1
+        self._refresh_state_check()
         return lost
 
 

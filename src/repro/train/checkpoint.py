@@ -17,15 +17,29 @@ the I/O layer is pluggable, the *protocol* is the contribution):
     applied to storage).
   * **Retention**: keep_n newest checkpoints are retained, old ones pruned
     only after the new write is durable.
+  * **Incremental + async** (``IncrementalCheckpointer``): dirty-chunk
+    tracking against mod-2^32 storage checksums — only chunks whose bits
+    changed since the last durable checkpoint are rewritten; unchanged
+    chunks are *referenced* from the step that last wrote them, so a
+    checkpoint of a mostly-static serving fleet is a few KB of manifest.
+    Writes run on a background thread with bounded staleness (the caller
+    blocks once ``max_pending`` snapshots are in flight), and each manifest
+    is published with the same tmp→fsync→rename barrier, so a crash at any
+    byte leaves the previous chain intact.  ``restore`` reassembles a
+    chained (format-2) checkpoint bit-identically to a full one;
+    ``restore_leaves`` pulls single leaves for the fleet's incremental
+    quarantine-recovery (see docs/recovery.md).
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
 import shutil
+import threading
 import zlib
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,12 +123,30 @@ def save(ckpt_dir: str | Path, step: int, state: Any,
     return final
 
 
+def _step_dir(ckpt_dir: Path, step: int) -> Path:
+    return ckpt_dir / f"step_{step:010d}"
+
+
 def _prune(ckpt_dir: Path, keep_n: int):
     steps = sorted(d for d in ckpt_dir.iterdir()
                    if d.is_dir() and d.name.startswith("step_")
                    and not d.name.endswith(".tmp"))
-    for d in steps[:-keep_n] if keep_n > 0 else []:
-        shutil.rmtree(d)
+    kept = steps[-keep_n:] if keep_n > 0 else steps
+    # incremental (format-2) manifests reference chunks in earlier step
+    # dirs — anything a kept manifest points at must survive the prune
+    referenced = set()
+    for d in kept:
+        mf = d / MANIFEST
+        if not mf.exists():
+            continue
+        manifest = json.loads(mf.read_text())
+        if manifest.get("format", 1) >= 2:
+            for leaf in manifest["leaves"]:
+                for c in leaf["chunks"]:
+                    referenced.add(_step_dir(ckpt_dir, c["step"]).name)
+    for d in steps:
+        if d not in kept and d.name not in referenced:
+            shutil.rmtree(d)
     # clear any orphaned tmp dirs from crashed writers
     for d in ckpt_dir.glob("step_*.tmp"):
         shutil.rmtree(d)
@@ -144,21 +176,23 @@ def restore(ckpt_dir: str | Path, step: Optional[int] = None,
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    d = ckpt_dir / f"step_{step:010d}"
+    d = _step_dir(ckpt_dir, step)
     manifest = json.loads((d / MANIFEST).read_text())
-    data = np.load(d / "shards.npz")
-
-    leaves = []
-    for e in manifest["entries"]:
-        arr = data[e["name"]]
-        if verify and zlib.crc32(arr.tobytes()) != e["crc32"]:
-            raise IOError(
-                f"checkpoint shard {e['path']} failed crc32 — corrupted data "
-                f"(SEU in storage path); refusing to restore")
-        leaves.append(arr)
 
     import pickle
     treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
+    if manifest.get("format", 1) >= 2:
+        leaves = _assemble_incremental(ckpt_dir, manifest, verify=verify)
+    else:
+        data = np.load(d / "shards.npz")
+        leaves = []
+        for e in manifest["entries"]:
+            arr = data[e["name"]]
+            if verify and zlib.crc32(arr.tobytes()) != e["crc32"]:
+                raise IOError(
+                    f"checkpoint shard {e['path']} failed crc32 — corrupted "
+                    f"data (SEU in storage path); refusing to restore")
+            leaves.append(arr)
     state = jax.tree_util.tree_unflatten(treedef, leaves)
 
     if mesh is not None and specs is not None:
@@ -171,3 +205,274 @@ def restore(ckpt_dir: str | Path, step: Optional[int] = None,
                   for x, s in zip(state_leaves, spec_leaves)]
         state = jax.tree_util.tree_unflatten(sdef, placed)
     return step, state
+
+
+# ---------------------------------------------------------------------------
+# Incremental + async checkpointing (format 2)
+#
+# Layout: every save publishes one step_<n>/ dir holding
+#   chunks.npz       only the chunks whose mod-2^32 checksum changed
+#   manifest.json    format=2: full tree structure + per-leaf chunk table,
+#                    each chunk tagged with the step whose chunks.npz holds
+#                    its bytes (== this step for dirty chunks, an earlier
+#                    step for clean ones)
+# so any manifest alone reconstructs the whole state, and the tmp→fsync→
+# rename barrier makes each manifest all-or-nothing.
+# ---------------------------------------------------------------------------
+
+
+def u32_checksum(arr: np.ndarray) -> int:
+    """Mod-2^32 sum over the array's raw bits — the storage-scrub identity
+    (core/abft.storage_checksums) computed host-side: a flipped bit b
+    changes the sum by ±2^b ≠ 0 (mod 2^32), dtype-uniform via the byte
+    view (any single-bit SEU still perturbs exactly one byte term)."""
+    b = np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.uint8)
+    return int(b.sum(dtype=np.uint64) & 0xFFFFFFFF)
+
+
+def path_str(path) -> str:
+    """Public name for the manifest's pytree-path encoding (fleet recovery
+    maps scrub verdicts onto manifest entries through this)."""
+    return _path_str(path)
+
+
+def _chunk_slices(n_elems: int, chunk_elems: int) -> List[Tuple[int, int]]:
+    if n_elems == 0:
+        return [(0, 0)]
+    return [(i, min(i + chunk_elems, n_elems))
+            for i in range(0, n_elems, chunk_elems)]
+
+
+def _assemble_leaf(ckpt_dir: Path, leaf: dict, npz_cache: Dict[int, Any],
+                   verify: bool = True) -> np.ndarray:
+    """Reassemble one leaf from its (possibly cross-step) chunk table."""
+    parts = []
+    for c in leaf["chunks"]:
+        src = c["step"]
+        if src not in npz_cache:
+            npz_cache[src] = np.load(_step_dir(ckpt_dir, src) / "chunks.npz")
+        arr = npz_cache[src][c["key"]]
+        if verify and zlib.crc32(arr.tobytes()) != c["crc32"]:
+            raise IOError(
+                f"incremental chunk {leaf['path']}[{c['key']}] failed crc32 "
+                f"(stored in step {src}) — refusing to restore")
+        parts.append(arr)
+    flat = parts[0] if len(parts) == 1 else np.concatenate(parts)
+    return flat.reshape(leaf["shape"]).astype(np.dtype(leaf["dtype"]), copy=False)
+
+
+def _assemble_incremental(ckpt_dir: Path, manifest: dict,
+                          verify: bool = True) -> List[np.ndarray]:
+    npz_cache: Dict[int, Any] = {}
+    return [_assemble_leaf(ckpt_dir, leaf, npz_cache, verify=verify)
+            for leaf in manifest["leaves"]]
+
+
+def restore_leaves(ckpt_dir: str | Path, paths: Sequence[str],
+                   step: Optional[int] = None,
+                   verify: bool = True) -> Dict[str, np.ndarray]:
+    """Partial restore: load only the named leaves (manifest ``path`` keys,
+    e.g. ``"params/w"``) from the newest (or given) checkpoint.
+
+    This is the fleet supervisor's incremental quarantine-recovery read —
+    a replica with two corrupted tensors re-reads two tensors, not the
+    whole model.  Works on both full (format-1) and incremental (format-2)
+    checkpoints; every byte read is crc32-verified.  Unknown paths are
+    simply absent from the result (caller decides whether to fall back to
+    a full reload).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = _step_dir(ckpt_dir, step)
+    manifest = json.loads((d / MANIFEST).read_text())
+    want = set(paths)
+    out: Dict[str, np.ndarray] = {}
+    if manifest.get("format", 1) >= 2:
+        npz_cache: Dict[int, Any] = {}
+        for leaf in manifest["leaves"]:
+            if leaf["path"] in want:
+                out[leaf["path"]] = _assemble_leaf(ckpt_dir, leaf, npz_cache,
+                                                   verify=verify)
+    else:
+        data = np.load(d / "shards.npz")
+        for e in manifest["entries"]:
+            if e["path"] in want:
+                arr = data[e["name"]]
+                if verify and zlib.crc32(arr.tobytes()) != e["crc32"]:
+                    raise IOError(f"checkpoint shard {e['path']} failed "
+                                  f"crc32 — refusing partial restore")
+                out[e["path"]] = arr
+    return out
+
+
+class IncrementalCheckpointer:
+    """Async, incremental, crash-consistent checkpointer.
+
+    ``save(step, state)`` snapshots the state to host memory immediately
+    (so the caller may keep mutating device state) and returns; a background
+    thread diffs per-chunk mod-2^32 checksums against the last durable
+    checkpoint and writes only dirty chunks.  Staleness is bounded: at most
+    ``max_pending`` snapshots may be in flight before ``save`` blocks, so
+    the durable state on disk never trails the train/serve loop by more
+    than ``max_pending`` save intervals.
+
+    ``full_every=k`` forces every k-th save to rewrite all chunks (a
+    rebase), bounding chain length and letting retention reclaim old dirs.
+    Writer-thread errors are re-raised on the next ``save``/``wait``/
+    ``close`` — a checkpointer that cannot persist must not fail silently.
+    """
+
+    def __init__(self, ckpt_dir: str | Path, *, keep_n: int = 3,
+                 chunk_bytes: int = 1 << 20, async_write: bool = True,
+                 max_pending: int = 2, full_every: int = 0):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.ckpt_dir.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self.chunk_bytes = int(chunk_bytes)
+        self.full_every = int(full_every)
+        self.async_write = async_write
+        # path -> list of (checksum, crc32, key, step) per chunk, for the
+        # last durable checkpoint — the dirty-diff baseline
+        self._baseline: Dict[str, List[dict]] = {}
+        self.stats = {"saves": 0, "chunks_total": 0, "chunks_written": 0,
+                      "bytes_written": 0}
+        self._err: Optional[BaseException] = None
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(max_pending)))
+        self._thread: Optional[threading.Thread] = None
+        if async_write:
+            self._thread = threading.Thread(
+                target=self._writer_loop, name="ckpt-writer", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------- frontend
+    def save(self, step: int, state: Any) -> None:
+        """Snapshot ``state`` to host and schedule (or perform) the write."""
+        self._raise_pending()
+        leaves, _ = _flat_with_paths(state)
+        # np.array(copy=True): a numpy leaf would otherwise alias the
+        # caller's buffer and the async writer would persist whatever the
+        # caller mutated it to *after* this call, not the snapshot
+        snap = [(path, np.array(jax.device_get(leaf)))
+                for path, leaf in leaves]
+        treedef = jax.tree_util.tree_structure(state)
+        if self._thread is not None:
+            self._q.put((step, snap, treedef))       # blocks at max_pending
+        else:
+            self._write(step, snap, treedef)
+
+    def wait(self) -> None:
+        """Block until every scheduled write is durable; re-raise errors."""
+        if self._thread is not None:
+            self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        self.wait()
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    # -------------------------------------------------------------- backend
+    def _writer_loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                self._write(*item)
+            except BaseException as e:               # noqa: BLE001
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, snap, treedef):
+        # rebase cadence counts *durable* saves, so a torn write retried
+        # later lands the rebase on the same durable save it would have
+        rebase = self.full_every > 0 and (
+            (self.stats["saves"] + 1) % self.full_every == 0)
+        tmp = self.ckpt_dir / f"step_{step:010d}.tmp"
+        final = _step_dir(self.ckpt_dir, step)
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+
+        leaves_meta, arrays = [], {}
+        new_baseline: Dict[str, List[dict]] = {}
+        n_chunks = n_written = bytes_written = 0
+        for i, (path, arr) in enumerate(snap):
+            pstr = _path_str(path)
+            flat = np.ascontiguousarray(arr).reshape(-1)
+            chunk_elems = max(1, self.chunk_bytes // max(arr.dtype.itemsize, 1))
+            old = self._baseline.get(pstr)
+            chunks = []
+            for ci, (lo, hi) in enumerate(_chunk_slices(flat.size, chunk_elems)):
+                piece = flat[lo:hi]
+                csum = u32_checksum(piece)
+                key = f"a{i:05d}_c{ci:04d}"
+                prev = old[ci] if old is not None and ci < len(old) else None
+                n_chunks += 1
+                if (not rebase and prev is not None
+                        and prev["checksum"] == csum
+                        and prev["shape"] == [int(hi - lo)]):
+                    # clean chunk: reference the step that last wrote it
+                    chunks.append({**prev, "key": prev["key"]})
+                else:
+                    crc = zlib.crc32(piece.tobytes())
+                    arrays[key] = piece
+                    chunks.append({"key": key, "step": step, "crc32": crc,
+                                   "checksum": csum, "shape": [int(hi - lo)]})
+                    n_written += 1
+                    bytes_written += int(piece.nbytes)
+            leaves_meta.append({
+                "path": pstr, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "chunk_elems": int(chunk_elems),
+                "chunks": chunks,
+            })
+            new_baseline[pstr] = chunks
+
+        np.savez(tmp / "chunks.npz", **arrays)
+        import pickle
+        manifest = {
+            "step": step, "format": 2,
+            "rebase": bool(rebase),
+            "treedef": pickle.dumps(treedef).hex(),
+            "leaves": leaves_meta,
+            "n_processes": jax.process_count(),
+        }
+        (tmp / MANIFEST).write_text(json.dumps(manifest))
+        with open(tmp / MANIFEST, "rb") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # only now — after the rename barrier — do the baseline and the
+        # accounting reflect this save; a crash before this point leaves the
+        # previous chain, stats, and rebase cadence fully intact
+        self._baseline = new_baseline
+        self.stats["saves"] += 1
+        self.stats["chunks_total"] += n_chunks
+        self.stats["chunks_written"] += n_written
+        self.stats["bytes_written"] += bytes_written
+        _prune(self.ckpt_dir, self.keep_n)
+
+    # ------------------------------------------------------------- utility
+    def dirty_fraction(self) -> float:
+        """Fraction of chunks actually rewritten over the checkpointer's
+        lifetime — the incremental win (1.0 == every save was a full write)."""
+        return self.stats["chunks_written"] / max(self.stats["chunks_total"], 1)

@@ -245,3 +245,76 @@ def test_cli_writes_reports(tmp_path, capsys):
     bits = json.loads((tmp_path / "campaign.json").read_text())["bit_coverage"]
     assert len(bits) == 2 * 32            # two policies × 32 int32 bits
     assert {b["policy"] for b in bits} == {"none", "abft"}
+
+
+# ---------------------------------------------------------------------------
+# (e) CKPT policy axis + recovery columns
+# ---------------------------------------------------------------------------
+
+
+def test_ckpt_detects_and_recovers_all_accumulator_bitflips():
+    spec = CampaignSpec("qmatmul", Policy.CKPT, "accumulator",
+                        "single_bitflip", trials=200, seed=0)
+    detected, mismatch = _run_spec(spec)
+    assert detected.all(), "CKPT checksum missed an accumulator bit flip"
+    assert not mismatch.any(), "CKPT rollback did not restore golden output"
+
+
+def test_ckpt_heals_weight_site_where_abft_cannot():
+    """The policy separation the recovery PR exists for: weight-memory SEUs
+    end detected_uncorrected under ABFT but detected_corrected under CKPT
+    (rollback to the golden operand checkpoint)."""
+    ck = classify_counts(*_run_spec(CampaignSpec(
+        "qmatmul", Policy.CKPT, "weights", "single_bitflip", 50, seed=0)))
+    ab = classify_counts(*_run_spec(CampaignSpec(
+        "qmatmul", Policy.ABFT, "weights", "single_bitflip", 50, seed=0)))
+    assert ck["sdc"] == 0 and ab["sdc"] == 0           # both covered
+    assert ck["detected_corrected"] == 50              # …but only CKPT heals
+    assert ab["detected_uncorrected"] == 50
+
+
+def test_ckpt_activations_blind_spot_is_honest():
+    """No checksum covers the op's input contract — CKPT inherits ABFT's
+    activations blind spot rather than claiming false coverage."""
+    counts = classify_counts(*_run_spec(CampaignSpec(
+        "qmatmul", Policy.CKPT, "activations", "single_bitflip", 50, seed=0)))
+    assert counts["detected_corrected"] == 0
+    assert counts["sdc"] > 0
+
+
+def test_recovery_columns_in_report(tmp_path):
+    specs = expand_grid(["qmatmul"], [Policy.CKPT], ["accumulator"],
+                        ["single_bitflip"], trials=16, seed=0,
+                        supported=SUPPORTED)
+    results = run_campaign(specs)
+    assert len(results) == 1
+    r = results[0]
+    assert r.faults_recovered == r.detected_corrected == 16
+    jpath, mpath = write_report(results, tmp_path, {"seed": 0})
+    _, rt = load_report(jpath)
+    assert rt[0].faults_recovered == 16
+    assert "recovered" in mpath.read_text()
+
+
+def test_serving_ckpt_zero_sdc_with_measured_recovery():
+    """Engine-level acceptance slice: CKPT serving trials end with zero SDC,
+    nonzero recoveries, and a populated recovery-latency column."""
+    specs = expand_grid(["serving"], [Policy.CKPT],
+                        ["weights", "decode_state"], ["single_bitflip"],
+                        trials=10, seed=0, supported=SUPPORTED)
+    results = run_campaign(specs)
+    assert len(results) == 2
+    for r in results:
+        assert r.sdc == 0
+        assert r.faults_recovered > 0
+        assert r.recovery_ms_mean > 0.0
+
+
+def test_expanded_sites_registry():
+    from repro.campaign import faultload as fl
+    assert "kv_cache" in fl.SITES and "decode_state" in fl.SITES
+    # kernel workloads silently skip the engine-only sites
+    specs = expand_grid(["qmatmul"], [Policy.CKPT], ["kv_cache"],
+                        ["single_bitflip"], trials=2, seed=0,
+                        supported=SUPPORTED)
+    assert run_campaign(specs) == []

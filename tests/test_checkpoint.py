@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import os
 import shutil
 from pathlib import Path
 
@@ -117,3 +118,174 @@ def test_checkpoint_roundtrip_property(depth, width, seed):
         jax.tree_util.tree_map(
             lambda a, b: np.testing.assert_array_equal(
                 np.asarray(a), np.asarray(b)), state, restored)
+
+
+# ------------------- incremental + async checkpointing ----------------------
+
+
+def _mutate(state, r=-1.0):
+    out = jax.tree_util.tree_map(lambda x: x, state)
+    out["params"]["w"] = state["params"]["w"].at[0, 0].set(r)
+    return out
+
+
+def test_incremental_restore_bit_identical_to_full(tmp_path):
+    """Acceptance: a chained incremental checkpoint restores bit-identically
+    to a full checkpoint of the same state."""
+    state = small_state()
+    state2 = _mutate(state)
+    inc_dir, full_dir = tmp_path / "inc", tmp_path / "full"
+    with ckpt.IncrementalCheckpointer(inc_dir, async_write=False) as c:
+        c.save(1, state)
+        c.save(2, state2)
+    ckpt.save(full_dir, 2, state2)
+    s_inc, r_inc = ckpt.restore(inc_dir)
+    s_full, r_full = ckpt.restore(full_dir)
+    assert s_inc == s_full == 2
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), r_inc, r_full)
+
+
+def test_incremental_writes_only_dirty_chunks(tmp_path):
+    state = small_state()
+    with ckpt.IncrementalCheckpointer(tmp_path, async_write=False,
+                                      chunk_bytes=128) as c:
+        c.save(1, state)
+        first = c.stats["chunks_written"]
+        c.save(2, _mutate(state))              # one element changed
+        assert c.stats["chunks_written"] == first + 1
+        c.save(3, _mutate(state))              # nothing changed since step 2
+        assert c.stats["chunks_written"] == first + 1
+        assert c.dirty_fraction() < 1.0
+
+
+def test_async_writer_bounded_staleness_and_durability(tmp_path):
+    state = small_state()
+    with ckpt.IncrementalCheckpointer(tmp_path, async_write=True,
+                                      max_pending=2) as c:
+        for s in range(1, 6):
+            c.save(s, _mutate(state, float(s)))
+        c.wait()
+        assert ckpt.latest_step(tmp_path) == 5
+    _, restored = ckpt.restore(tmp_path)
+    assert float(np.asarray(restored["params"]["w"])[0, 0]) == 5.0
+
+
+def test_crash_mid_write_restores_last_durable_manifest(tmp_path, monkeypatch):
+    """Kill the writer between the data write and the manifest publish: the
+    half-written step must be invisible and the previous chain bit-exact."""
+    state = small_state()
+    state2 = _mutate(state)
+    c = ckpt.IncrementalCheckpointer(tmp_path, async_write=False)
+    c.save(1, state)
+
+    real_rename = os.rename
+
+    def crash_rename(src, dst):
+        raise OSError("simulated power loss before publish")
+
+    monkeypatch.setattr(os, "rename", crash_rename)
+    with pytest.raises(OSError):
+        c.save(2, state2)
+    monkeypatch.setattr(os, "rename", real_rename)
+
+    # the torn write left a .tmp dir at most — never a manifest
+    assert ckpt.latest_step(tmp_path) == 1
+    step, restored = ckpt.restore(tmp_path)
+    assert step == 1
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), state, restored)
+
+    # the writer retries cleanly after the crash (baseline uncorrupted) and
+    # the orphaned tmp dir is swept by the successful publish
+    c.save(2, state2)
+    assert ckpt.latest_step(tmp_path) == 2
+    assert not list(Path(tmp_path).glob("*.tmp"))
+    _, r2 = ckpt.restore(tmp_path)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), state2, r2)
+
+
+def test_restore_leaves_partial_matches_full(tmp_path):
+    state = small_state()
+    ckpt.save(tmp_path / "full", 1, state)              # format 1
+    with ckpt.IncrementalCheckpointer(tmp_path / "inc",
+                                      async_write=False) as c:
+        c.save(1, state)
+        c.save(2, _mutate(state))                       # format 2, chained
+    for d, ref in ((tmp_path / "full", state),
+                   (tmp_path / "inc", _mutate(state))):
+        leaves = ckpt.restore_leaves(d, ["params/w", "opt/m"])
+        assert set(leaves) == {"params/w", "opt/m"}
+        np.testing.assert_array_equal(leaves["params/w"],
+                                      np.asarray(ref["params"]["w"]))
+        np.testing.assert_array_equal(leaves["opt/m"],
+                                      np.asarray(ref["opt"]["m"]))
+    # unknown paths are absent, not an error (caller falls back)
+    assert ckpt.restore_leaves(tmp_path / "inc", ["no/such"]) == {}
+
+
+def test_incremental_chunk_crc_detects_storage_seu(tmp_path):
+    """Same SEU-in-storage refusal as full checkpoints, per chunk."""
+    state = small_state()
+    with ckpt.IncrementalCheckpointer(tmp_path, async_write=False) as c:
+        c.save(1, state)
+    shards = Path(tmp_path) / "step_0000000001" / "chunks.npz"
+    raw = bytearray(shards.read_bytes())
+    raw[len(raw) // 2] ^= 0x40
+    shards.write_bytes(bytes(raw))
+    with pytest.raises((IOError, ValueError, Exception)):
+        ckpt.restore(tmp_path, 1)
+
+
+def test_retention_keeps_chain_referenced_dirs(tmp_path):
+    """keep_n pruning must never delete a step dir an alive manifest still
+    references for clean chunks."""
+    state = small_state()
+    with ckpt.IncrementalCheckpointer(tmp_path, async_write=False,
+                                      keep_n=2) as c:
+        for s in range(1, 7):
+            c.save(s, _mutate(state, float(s)))
+    # steps 5 and 6 are kept; both reference step 1 (the only writer of the
+    # never-dirtied leaves), so step 1 must survive
+    names = sorted(d.name for d in Path(tmp_path).iterdir())
+    assert "step_0000000006" in names and "step_0000000005" in names
+    assert "step_0000000001" in names
+    _, restored = ckpt.restore(tmp_path)
+    assert float(np.asarray(restored["params"]["w"])[0, 0]) == 6.0
+
+
+def test_async_save_snapshots_before_caller_mutates(tmp_path):
+    """save() must capture the state at call time: a numpy leaf mutated by
+    the caller after save() returns must not leak into the durable bytes."""
+    w = np.zeros((64, 64), np.float32)
+    with ckpt.IncrementalCheckpointer(tmp_path, async_write=True) as c:
+        c.save(1, {"w": w})
+        w[:] = 7.0                       # caller keeps training/serving
+        c.wait()
+    _, restored = ckpt.restore(tmp_path)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.zeros((64, 64), np.float32))
+
+
+def test_failed_write_does_not_corrupt_stats_or_rebase(tmp_path, monkeypatch):
+    state = small_state()
+    c = ckpt.IncrementalCheckpointer(tmp_path, async_write=False,
+                                     full_every=2)
+    c.save(1, state)
+    before = dict(c.stats)
+    real_rename = os.rename
+    monkeypatch.setattr(os, "rename",
+                        lambda s, d: (_ for _ in ()).throw(OSError("torn")))
+    with pytest.raises(OSError):
+        c.save(2, _mutate(state))
+    monkeypatch.setattr(os, "rename", real_rename)
+    assert c.stats == before             # nothing counted for the torn write
+    c.save(2, _mutate(state))            # durable save #2 → the rebase
+    assert c.stats["saves"] == 2
+    man = json.loads((Path(tmp_path) / "step_0000000002" /
+                      "manifest.json").read_text())
+    assert man["rebase"] is True

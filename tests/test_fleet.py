@@ -208,6 +208,95 @@ def test_dmr_detects_transient_decode_fault(smollm_fleet):
 
 
 # ---------------------------------------------------------------------------
+# CKPT fleet policy: incremental restore + decode-state rollback
+# ---------------------------------------------------------------------------
+
+
+def test_ckpt_weight_seu_incremental_restore(smollm_fleet):
+    """CKPT is scrub-gated like ABFT but recovers by restoring only the
+    corrupted leaves from the golden checkpoint — measured, incremental."""
+    cfg, params, fleet = smollm_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.CKPT)]
+    assert fleet.metrics.detections == 0          # clean pass: no false alarms
+
+    reqs = _serve(fleet, PROMPTS, Policy.CKPT,
+                  mid_run=lambda f: _corrupt_weights(f))
+    m = fleet.metrics
+    assert m.detections >= 1
+    assert m.recoveries == 1
+    assert m.incremental_restores == 1            # partial restore served it
+    assert m.full_reloads == 0
+    assert m.leaves_restored >= 1
+    assert len(m.recovery_seconds) == 1 and m.recovery_seconds[0] > 0
+    assert m.to_json()["recovery_mean_seconds"] > 0
+    assert fleet.replicas[0].state is ReplicaState.HEALTHY
+    assert [list(r.output) for r in reqs] == golden
+    assert m.released == len(PROMPTS)
+
+
+def test_ckpt_decode_state_seu_rolls_back_in_place(smollm_fleet):
+    """Transient SEU in the token buffer under CKPT: the engine's own
+    snapshot rollback heals it — no failover, stream golden."""
+    cfg, params, fleet = smollm_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.CKPT)]
+
+    def strike(f):
+        v = f.replicas[0]
+        v.engine.tokens = fi.flip_one_bit(v.engine.tokens, jax.random.key(5))
+
+    reqs = _serve(fleet, PROMPTS, Policy.CKPT, mid_run=strike)
+    m = fleet.metrics
+    assert m.state_scrub_detections >= 1
+    assert m.state_rollbacks >= 1                 # healed in place…
+    assert m.recoveries == 0                      # …not via quarantine
+    assert [list(r.output) for r in reqs] == golden
+    assert m.released == len(PROMPTS)
+
+
+def test_recovery_survives_crashed_checkpoint_writer(smollm_fleet):
+    """Crash-consistency at fleet level: an orphaned step_N.tmp (writer
+    killed mid-publish) in the golden checkpoint dir must be invisible —
+    quarantine-recovery restores from the durable manifest and the engine
+    state it rebuilds is bit-exact (same released stream)."""
+    from pathlib import Path
+    cfg, params, fleet = smollm_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.CKPT)]
+
+    orphan = Path(fleet.ckpt_dir) / "step_0000000099.tmp"
+    orphan.mkdir()
+    (orphan / "chunks.npz").write_bytes(b"torn write")
+    try:
+        reqs = _serve(fleet, PROMPTS, Policy.CKPT,
+                      mid_run=lambda f: _corrupt_weights(f))
+        assert fleet.metrics.recoveries == 1
+        assert fleet.replicas[0].scrub() == []         # bit-exact params
+        assert [list(r.output) for r in reqs] == golden
+    finally:
+        if orphan.exists():
+            import shutil
+            shutil.rmtree(orphan)
+
+
+def test_abft_decode_state_seu_drains_and_replays(smollm_fleet):
+    """The same strike under ABFT: detect-only scrub, fleet drains the
+    replica and replays on verified replicas — stream still golden."""
+    cfg, params, fleet = smollm_fleet
+    golden = [list(r.output) for r in _serve(fleet, PROMPTS, Policy.ABFT)]
+
+    def strike(f):
+        v = f.replicas[0]
+        v.engine.tokens = fi.flip_one_bit(v.engine.tokens, jax.random.key(5))
+
+    reqs = _serve(fleet, PROMPTS, Policy.ABFT, mid_run=strike)
+    m = fleet.metrics
+    assert m.state_scrub_detections >= 1
+    assert m.state_drains >= 1
+    assert m.state_rollbacks == 0
+    assert [list(r.output) for r in reqs] == golden
+    assert m.released == len(PROMPTS)
+
+
+# ---------------------------------------------------------------------------
 # metrics export
 # ---------------------------------------------------------------------------
 
@@ -267,21 +356,48 @@ def test_fleet_campaign_abft_zero_sdc_none_nonzero_100_trials(fleet_case):
 def test_fleet_campaign_dmr_covers_transient_site(fleet_case):
     case = fleet_case
     fault = resolve_fault_model("single_bitflip")
-    spec = CampaignSpec("fleet", Policy.DMR, "accumulator",
+    spec = CampaignSpec("fleet", Policy.DMR, "decode_state",
                         "single_bitflip", trials=40, seed=1)
-    det, mis = case.run_trials(Policy.DMR, "accumulator", fault.apply,
+    det, mis = case.run_trials(Policy.DMR, "decode_state", fault.apply,
                                trial_keys(spec))
     counts = classify_counts(det, mis)
     assert counts["sdc"] == 0
     assert counts["detected_corrected"] > 0
 
 
-def test_fleet_abft_accumulator_combo_is_skipped():
-    """The weight scrub's contract is storage — campaigns must not claim
-    transient-site coverage for it."""
-    from repro.campaign import expand_grid, run_campaign
-    from repro.campaign.runner import SUPPORTED
-    specs = expand_grid(["fleet"], [Policy.ABFT], ["accumulator"],
-                        ["single_bitflip"], trials=2, seed=0,
-                        supported=SUPPORTED)
-    assert run_campaign(specs) == []
+@pytest.mark.parametrize("policy", [Policy.ABFT, Policy.CKPT])
+@pytest.mark.parametrize("site", ["decode_state", "kv_cache"])
+def test_fleet_scrub_policies_cover_transient_sites(fleet_case, policy, site):
+    """The decode-state scrub closes the old ABFT blind spot: transient
+    SEUs in the KV cache / token buffer are detected by checksum and healed
+    — CKPT by in-place engine rollback, ABFT by drain + failover — with
+    zero SDC on the released stream."""
+    case = fleet_case
+    fault = resolve_fault_model("single_bitflip")
+    spec = CampaignSpec("fleet", policy, site, "single_bitflip",
+                        trials=20, seed=3)
+    det, mis = case.run_trials(policy, site, fault.apply, trial_keys(spec))
+    counts = classify_counts(det, mis)
+    assert counts["sdc"] == 0
+    assert counts["detected_corrected"] == 20      # detected AND healed
+    stats = case.drain_recovery_stats()
+    assert stats["faults_recovered"] >= 20
+    assert stats["recovery_ms_mean"] > 0.0
+
+
+def test_fleet_ckpt_weight_seu_recovers_incrementally(fleet_case):
+    """CKPT fleet trial: weight SEU → scrub detect → *incremental* restore
+    of only the corrupted leaves → released stream golden, recovery timed."""
+    case = fleet_case
+    fault = resolve_fault_model("single_bitflip")
+    spec = CampaignSpec("fleet", Policy.CKPT, "weights",
+                        "single_bitflip", trials=20, seed=4)
+    det, mis = case.run_trials(Policy.CKPT, "weights", fault.apply,
+                               trial_keys(spec))
+    counts = classify_counts(det, mis)
+    assert counts["sdc"] == 0
+    assert counts["detected_corrected"] == 20
+    m = case.fleet.metrics
+    assert m.incremental_restores >= 1             # partial restore, not reload
+    assert m.full_reloads == 0
+    assert m.leaves_restored >= 1

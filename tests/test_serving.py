@@ -170,3 +170,108 @@ def test_snapshot_rollback_replays_identically(served):
     assert lost >= 0
     eng.run()
     assert req.output == want
+
+
+# ----------------------- decode-state scrubbing -----------------------------
+
+
+from repro.core import fault_injection as fi
+
+
+def _serve_with_scrub(cfg, params, mode, strike=None, strike_at=2):
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                 snapshot_every=2, state_scrub=mode)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=6)
+            for i, p in enumerate([[5, 9, 2], [3, 1, 4, 1]])]
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while (eng.queue or eng.active) and steps < 200:
+        eng.step()
+        steps += 1
+        if steps == strike_at and strike is not None:
+            strike(eng)
+    return [tuple(r.output) for r in reqs], eng
+
+
+def _hit_tokens(eng):
+    eng.tokens = fi.flip_one_bit(eng.tokens, jax.random.key(3))
+
+
+def _hit_cache(eng):
+    eng.cache = fi.inject_pytree_with(eng.cache, jax.random.key(7),
+                                      fi.flip_one_bit)
+
+
+@pytest.mark.parametrize("strike", [_hit_tokens, _hit_cache],
+                         ids=["decode_state", "kv_cache"])
+def test_state_scrub_rollback_restores_golden_stream(served, strike):
+    """A transient SEU in live decode state under ``rollback`` mode: the
+    checksum scrub detects it before the next step consumes it, the engine
+    rolls back to its verified snapshot, and the final streams are
+    bit-identical to a fault-free run."""
+    cfg, params = served
+    golden, _ = _serve_with_scrub(cfg, params, "off")
+    out, eng = _serve_with_scrub(cfg, params, "rollback", strike)
+    assert out == golden
+    events = eng.drain_state_events()
+    assert len(events) == 1 and events[0]["recovered"]
+    assert events[0]["seconds"] > 0
+    assert int(eng.dependability["faults_detected"]) == 1
+    assert int(eng.dependability["faults_recovered"]) == 1
+    assert eng.stats.replays == 1
+
+
+def test_state_scrub_detect_mode_raises_alarm_only(served):
+    cfg, params = served
+    out, eng = _serve_with_scrub(cfg, params, "detect", _hit_tokens)
+    events = eng.drain_state_events()
+    assert len(events) == 1 and not events[0]["recovered"]
+    assert eng.stats.replays == 0
+    assert int(eng.dependability["faults_detected"]) == 1
+    assert int(eng.dependability["faults_recovered"]) == 0
+
+
+def test_state_scrub_clean_run_no_false_positives(served):
+    cfg, params = served
+    golden, _ = _serve_with_scrub(cfg, params, "off")
+    out, eng = _serve_with_scrub(cfg, params, "rollback")
+    assert out == golden
+    assert eng.drain_state_events() == []
+    assert int(eng.dependability["faults_detected"]) == 0
+    # the scrub did actually run every step
+    assert int(eng.dependability["checks_run"]) > 0
+
+
+def test_state_scrub_recurrent_family(served):
+    """Recurrent caches mutate in place each step (not append-only) — the
+    post-mutation re-checksum covers them identically."""
+    cfg = reduced(registry.get("rwkv6-1.6b"))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    golden, _ = _serve_with_scrub(cfg, params, "off")
+    out, eng = _serve_with_scrub(cfg, params, "rollback", _hit_cache)
+    assert out == golden
+    ev = eng.drain_state_events()
+    assert len(ev) == 1 and ev[0]["recovered"]
+
+
+def test_corrupted_snapshot_is_refused(served):
+    """If the SEU strikes the golden snapshot itself, restore must refuse
+    (checksum mismatch) rather than roll back to corrupted state."""
+    cfg, params = served
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                 snapshot_every=2, state_scrub="rollback")
+    eng.submit(Request(uid=0, prompt=[5, 9, 2], max_new_tokens=6))
+    eng.step()
+    eng.step()
+    assert eng._snapshot is not None
+    eng._snapshot["tokens"] = fi.flip_one_bit(eng._snapshot["tokens"],
+                                              jax.random.key(1))
+    with pytest.raises(RuntimeError, match="snapshot failed checksum"):
+        eng.restore_snapshot()
+
+
+def test_state_scrub_invalid_mode_rejected(served):
+    cfg, params = served
+    with pytest.raises(ValueError, match="state_scrub"):
+        Engine(cfg, params, state_scrub="sometimes")

@@ -1,0 +1,154 @@
+"""Docs-consistency check: execute the CLI commands documented in docs.
+
+Scans ``README.md`` and ``docs/*.md`` for fenced ```bash blocks, extracts
+every ``python`` invocation (continuation backslashes joined), rewrites it
+to smoke scale — trial counts shrunk, report output redirected to a temp
+dir — and runs it.  A documented command that no longer parses or exits
+nonzero fails CI, so quickstart sections cannot rot ahead of the code.
+
+    PYTHONPATH=src python tools/check_docs.py            # run everything
+    PYTHONPATH=src python tools/check_docs.py --list     # show the plan
+    PYTHONPATH=src python tools/check_docs.py --only fleet.md
+
+Rewrites applied (smoke mode, default):
+  --trials N      -> --trials 5
+  --bit-trials N  -> --bit-trials 2
+  --requests N    -> --requests 3
+  --out PATH      -> --out <tmpdir>/PATH   (also appended when a repro.*
+                                            CLI documents no --out)
+Commands that are not ``python …`` (or that run pytest — tier-1 has its
+own CI job) are skipped.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import shlex
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_GLOBS = ["README.md", "docs/*.md"]
+
+
+def fenced_bash_blocks(text: str):
+    """Yield the contents of ```bash fenced blocks."""
+    for m in re.finditer(r"```bash\n(.*?)```", text, re.DOTALL):
+        yield m.group(1)
+
+
+def commands_in_block(block: str):
+    """Join continuation lines and yield the shell commands."""
+    logical, pending = [], ""
+    for line in block.splitlines():
+        line = line.rstrip()
+        if not line or line.lstrip().startswith("#"):
+            continue
+        pending += line.rstrip("\\").rstrip() + " "
+        if not line.endswith("\\"):
+            logical.append(pending.strip())
+            pending = ""
+    if pending.strip():
+        logical.append(pending.strip())
+    return logical
+
+
+def runnable(cmd: str) -> bool:
+    return ("python" in cmd.split()[0] or cmd.startswith("PYTHONPATH")) \
+        and "pytest" not in cmd
+
+
+def smoke_rewrite(cmd: str, out_dir: Path, idx: int) -> str:
+    cmd = re.sub(r"--trials\s+\d+", "--trials 5", cmd)
+    cmd = re.sub(r"--bit-trials\s+\d+", "--bit-trials 2", cmd)
+    cmd = re.sub(r"--requests\s+\d+", "--requests 3", cmd)
+    if "--out" in cmd:
+        cmd = re.sub(r"--out\s+(\S+)",
+                     lambda m: f"--out {out_dir / Path(m.group(1)).name}", cmd)
+    elif re.search(r"-m repro\.(campaign|fleet)\.cli", cmd):
+        cmd += f" --out {out_dir / f'cmd{idx:02d}'}"
+    return cmd
+
+
+def collect(only: str | None):
+    plan, seen = [], set()
+    for g in DOC_GLOBS:
+        for doc in sorted(REPO.glob(g)):
+            if only and only not in doc.name:
+                continue
+            for block in fenced_bash_blocks(doc.read_text()):
+                for cmd in commands_in_block(block):
+                    # the same command documented in two places only needs
+                    # to prove itself once (attributed to the first doc)
+                    key = " ".join(cmd.split())
+                    if runnable(cmd) and key not in seen:
+                        seen.add(key)
+                        plan.append((doc.relative_to(REPO), cmd))
+    return plan
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="print the rewritten commands without running")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on the doc filename")
+    ap.add_argument("--timeout", type=int, default=900,
+                    help="per-command timeout, seconds")
+    args = ap.parse_args(argv)
+
+    plan = collect(args.only)
+    if not plan:
+        print("no documented commands found", file=sys.stderr)
+        return 2
+
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = str(REPO / "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+
+    failures = 0
+    with tempfile.TemporaryDirectory(prefix="docs-check-") as td:
+        for i, (doc, cmd) in enumerate(plan):
+            # the docs spell the env assignment inline; we provide it via env
+            bare = re.sub(r"^PYTHONPATH=\S+\s+", "", cmd)
+            run = smoke_rewrite(bare, Path(td), i)
+            print(f"[{i + 1}/{len(plan)}] {doc}: {run}", flush=True)
+            if args.list:
+                continue
+            t0 = time.time()
+            try:
+                proc = subprocess.run(
+                    shlex.split(run), cwd=REPO, env=env,
+                    timeout=args.timeout, capture_output=True, text=True)
+            except subprocess.TimeoutExpired:
+                print(f"  TIMEOUT after {args.timeout}s", flush=True)
+                failures += 1
+                continue
+            dt = time.time() - t0
+            # fleet CLI uses exit 1 as the *documented* SDC verdict for
+            # --policy none drills; that is correct behavior, not rot
+            expected_fail = ("--policy none" in run and "repro.fleet.cli" in run
+                            and ("--inject" in run or "--kill" in run))
+            ok = proc.returncode == 0 or (expected_fail and proc.returncode == 1)
+            print(f"  {'ok' if ok else 'FAIL rc=' + str(proc.returncode)} "
+                  f"({dt:.1f}s)", flush=True)
+            if not ok:
+                sys.stdout.write(proc.stdout[-2000:])
+                sys.stderr.write(proc.stderr[-2000:])
+                failures += 1
+    if failures:
+        print(f"{failures} documented command(s) failed", file=sys.stderr)
+        return 1
+    print(f"all {len(plan)} documented commands "
+          f"{'listed' if args.list else 'ran clean'}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
