@@ -228,7 +228,14 @@ class QConv2dCase(_KernelCase):
 
 class ShipdetCase:
     """The paper's ship-detection CNN (reduced geometry), full-network
-    forward under a per-layer dependability policy."""
+    forward under a per-layer dependability policy.
+
+    Deploy-time weight integrity (``shipdet.deploy_checks``) makes the
+    ``weights`` site a *covered* site at model level: ABFT layers verify the
+    live weights against the shipped checksums (detect), CKPT layers roll
+    back to the shipped golden weights and re-execute (heal) — the same
+    contract the serving fleet's storage scrub provides, pushed into the op.
+    """
 
     name = "shipdet"
     sites = ("accumulator", "weights", "activations")
@@ -243,6 +250,10 @@ class ShipdetCase:
         self.params = shipdet.init_params(self.specs, kp)
         s0 = self.specs[0]
         self.x = jax.random.uniform(kx, (1, s0.h, s0.w, 3))
+        # deploy-time golden state: checksums for ABFT scrubs, weights for
+        # CKPT rollback (computed once, from the known-good parameters)
+        self.w_checks = shipdet.deploy_checks(self.params)
+        self.golden_wq = shipdet.golden_weights(self.params)
 
     def _wq_pytree(self, params) -> List[jax.Array]:
         return [p["qconv"].w_q for p in params]
@@ -254,10 +265,14 @@ class ShipdetCase:
     def run_trials(self, policy, site, fault, keys):
         sd = self._shipdet
         base = Policy.NONE if policy in (Policy.TMR, Policy.DMR) else policy
+        deploy = base in (Policy.ABFT, Policy.CKPT)
 
         def fwd(params, x, inject=None):
-            out, st = sd.forward(self.specs, params, x, policy=base,
-                                 inject=inject, backend=self.backend)
+            out, st = sd.forward(
+                self.specs, params, x, policy=base,
+                inject=inject, backend=self.backend,
+                w_checks=self.w_checks if deploy else None,
+                golden_wq=self.golden_wq if base == Policy.CKPT else None)
             return out, st["faults_detected"] > 0
 
         detected_l, mismatch_l = [], []
@@ -440,10 +455,9 @@ class ServingCase:
             eng.step()
             steps += 1
             if steps == self.STRIKE_STEP and state_site is not None:
-                if state_site == "kv_cache":
-                    eng.cache = fl.inject_pytree_with(eng.cache, key, fault)
-                else:                               # decode_state
-                    eng.tokens = fault(eng.tokens, key)
+                # per-stage injection: the decode stage owns both transient
+                # sites (runtime/dataflow.py, StreamingExecutor.strike)
+                eng.strike(state_site, fault, key)
         return tuple(tuple(r.output) for r in reqs)
 
     def _weight_scrub_failed(self) -> bool:
@@ -587,16 +601,12 @@ class FleetCase:
             fleet.submit(r)
         victim = fleet.replicas[0]
         if site == "weights":
-            victim.engine.params = fl.inject_pytree_with(
-                victim.engine.params, key, fault)
-        else:   # transient sites: strike live decode state two ticks in
+            # strike the parameter store before serving (deploy-window SEU)
+            victim.engine.strike("weights", fault, key)
+        else:   # transient sites: strike the live decode stage two ticks in
             fleet.tick()
             fleet.tick()
-            if site == "kv_cache":
-                victim.engine.cache = fl.inject_pytree_with(
-                    victim.engine.cache, key, fault)
-            else:                                    # decode_state
-                victim.engine.tokens = fault(victim.engine.tokens, key)
+            victim.engine.strike(site, fault, key)
         fleet.run()
         outs = tuple(
             tuple(fleet.released[r.uid].output) if r.uid in fleet.released

@@ -12,15 +12,15 @@ all implemented here:
     global batch (``process_index``-strided rows), matching how
     multi-host pjit expects per-host addressable shards.
   * **Prefetch**: a double-buffered iterator overlaps host batch synthesis
-    with device compute (the Klepsydra "streaming, lock-free" idea at the
-    host boundary).
+    with device compute — the Klepsydra "streaming, lock-free" idea at the
+    host boundary, built on the same ``Channel``/``Stage`` primitives as the
+    serving pipeline (``runtime/dataflow.py``), just under the threaded
+    driver instead of the deterministic cooperative one.
   * Sources: synthetic LM stream (zipf-ish token marginals so losses are
     non-degenerate), or a memory-mapped corpus of token ids.
 """
 from __future__ import annotations
 
-import threading
-from queue import Queue
 from typing import Dict, Iterator, Optional
 
 import jax
@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ArchConfig, ShapeConfig
+from repro.runtime.dataflow import Channel, Closed, SourceStage, ThreadedSource
 
 
 class TokenStream:
@@ -93,34 +94,29 @@ class MmapCorpus:
 def prefetch(source, start_step: int = 0, depth: int = 2):
     """Double-buffered prefetch: synthesize batch i+1 while i is on device.
 
-    A daemon thread fills a bounded queue (lock-free from the consumer's
-    perspective — the GIL handoff happens during device compute).
+    One ``SourceStage`` (producing ``(step, source.batch_at(step))``) runs
+    under the threaded driver, blocking on a bounded ``Channel`` of depth
+    ``depth`` — the host-boundary instance of the staged-streaming pipeline
+    the serving executor is built from.  The consumer side is an iterator;
+    ``close()`` closes the channel, which unblocks and joins the producer.
     """
-    q: Queue = Queue(maxsize=depth)
-    stop = threading.Event()
-
-    def worker():
-        step = start_step
-        while not stop.is_set():
-            q.put((step, source.batch_at(step)))
-            step += 1
-
-    t = threading.Thread(target=worker, daemon=True)
-    t.start()
+    ch = Channel(depth, name="prefetch")
+    stage = SourceStage(lambda step: (step, source.batch_at(step)),
+                        ch, start=start_step)
+    driver = ThreadedSource(stage).start()
 
     class _Iter:
         def __iter__(self):
             return self
 
         def __next__(self):
-            return q.get()
+            try:
+                return ch.get()
+            except Closed:
+                raise StopIteration from None
 
         def close(self):
-            stop.set()
-            try:
-                q.get_nowait()   # unblock the producer if it's waiting
-            except Exception:
-                pass
+            driver.close()
 
     return _Iter()
 

@@ -15,9 +15,12 @@ to a supervised fleet of N of them:
               Supervisor (Orchestrator policies + ABFT storage checksums
                           + checkpoint reload)
 
-The dependability contract is **certify-before-release**: a finished
-request's tokens are withheld until the replica that produced them proves
-it is clean —
+The dependability contract is **certify-before-release**, and since the
+engine became a staged dataflow pipeline (runtime/dataflow.py) it is
+enforced *inside each engine's certify stage*: the fleet installs a
+release-gate hook (``_certify_finished``) into every replica's pipeline, so
+a finished request is withheld at the certify stage — not by fleet code
+wrapped around a monolithic step loop —
 
   * ``Policy.NONE``  release immediately (the undefended baseline campaigns
     measure SDC against);
@@ -152,6 +155,9 @@ class Fleet:
                     compiled=first.engine.compiled, backend=backend,
                     state_scrub=scrub_mode)
             for i in range(1, n_replicas)]
+        # the fleet's release gate runs inside each engine's certify stage
+        for r in self.replicas:
+            r.install_certifier(self._certify_finished)
         self.router = Router(router, admit_limit)
         self.supervisor = Supervisor(n_replicas, scrub_every=scrub_every,
                                      heartbeat_timeout=heartbeat_timeout)
@@ -202,20 +208,20 @@ class Fleet:
 
     # ----------------------------------------------------------- tick loop
     def tick(self):
-        """One fleet scheduling round: step every healthy engine, collect
-        finishes, heartbeat, scrub on cadence, expire deadlines."""
+        """One fleet scheduling round: step every healthy engine (each step
+        pumps the replica's admit→…→release pipeline once, with the fleet's
+        release gate live in the certify stage), heartbeat, scrub on
+        cadence, expire deadlines."""
         self.tick_no += 1
         self.metrics.ticks += 1
         for r in self.replicas:
             if r.state is not ReplicaState.HEALTHY or r.paused:
                 continue
             t0 = time.perf_counter()
-            finished = r.engine.step()
+            r.engine.step()
             self.metrics.engine_steps += 1
             self.supervisor.heartbeat(r.rid, r.engine.stats.steps,
                                       time.perf_counter() - t0, self.tick_no)
-            for req in finished:
-                self._on_finished(r, req)
             self._settle_state_events(r)
         self.supervisor.stragglers()      # straggler log (advisory in-process)
 
@@ -277,17 +283,22 @@ class Fleet:
         return self.metrics
 
     # ------------------------------------------------------ finish handling
-    def _on_finished(self, replica: Replica, req: Request):
+    def _certify_finished(self, replica: Replica, req: Request) -> bool:
+        """The fleet's release gate, run *inside* each replica engine's
+        certify stage (installed via ``Replica.install_certifier``).  True
+        lets the request flow on to the engine's release stage; False
+        withholds it — the fleet has taken custody (uncertified list, DMR
+        pair bookkeeping, or a stale copy that is simply dropped)."""
         rec = self.records.get(req.uid)
         if rec is None or rec.terminal:
-            return
+            return False
         is_primary = req is rec.req
         if not is_primary and req is not rec.shadow:
-            return                                   # stale pre-replay copy
+            return False                             # stale pre-replay copy
         if self.policy in _SCRUB_GATED:
             if is_primary:
                 replica.uncertified.append(req)
-            return
+            return False       # withheld until a clean post-finish scrub
         if self.policy == Policy.DMR and rec.shadow is not None:
             if is_primary:
                 rec.primary_done = True
@@ -296,12 +307,14 @@ class Fleet:
             if rec.primary_done and rec.shadow_done:
                 if rec.req.output == rec.shadow.output:
                     self._release(rec)
-                else:
-                    self._dmr_mismatch(rec)
-            return
+                    return True
+                self._dmr_mismatch(rec)
+            return False
         # Policy.NONE (or degraded DMR): release on finish
         if is_primary:
             self._release(rec)
+            return True
+        return False
 
     def _release(self, rec: _Tracked):
         rec.released = True

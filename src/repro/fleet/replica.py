@@ -63,19 +63,26 @@ class Replica:
         self.last_clean_scrub_tick = 0
         self.last_scrub_bad: List[str] = []    # verdict of the newest scrub
 
+    def install_certifier(self, gate) -> None:
+        """Wire the fleet's release gate into this replica's certify stage:
+        every request the engine finishes passes through
+        ``gate(replica, req)`` before it may release — certify-before-
+        release as a pipeline stage, not a wrapper."""
+        self.engine.certify = lambda req: gate(self, req)
+
     # --------------------------------------------------------------- status
     @property
     def healthy(self) -> bool:
         return self.state is ReplicaState.HEALTHY and not self.paused
 
     def load(self) -> int:
-        """Requests currently owned (queued + decoding) — router's cost."""
-        return len(self.engine.queue) + len(self.engine.active)
+        """Requests this replica's pipeline currently owns — router's cost."""
+        return self.engine.executor.pending_count()
 
     def in_flight(self) -> List[Request]:
-        """Queued + active requests, in deterministic (queue, slot) order."""
-        return list(self.engine.queue) + [
-            self.engine.active[s] for s in sorted(self.engine.active)]
+        """Every request in the replica's pipeline, in deterministic
+        stage-then-slot order (the order failover drains replay in)."""
+        return self.engine.executor.in_flight()
 
     # ---------------------------------------------------------------- scrub
     def scrub(self) -> List[str]:

@@ -62,3 +62,11 @@ def decode_step(cfg, params, token, cache, ctx=None, embed=None):
 
 def prefill(cfg, params, tokens, max_len, ctx=None, embeds=None):
     return _mod(cfg).prefill(cfg, params, tokens, max_len, ctx, embeds=embeds)
+
+
+def cache_write_slot(batch_cache, one_cache, slot, n):
+    """Splice a single-request prefill cache into row ``slot`` of a batch
+    cache (family-agnostic pytree surgery; see models/common.py) — the
+    slot-granular state handling continuous batching is built on."""
+    from repro.models import common
+    return common.cache_write_slot(batch_cache, one_cache, slot, n)

@@ -211,6 +211,38 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Slot-wise cache plumbing (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def cache_write_slot(batch_cache, one_cache, slot: int, n: int):
+    """Copy a single-request prefill cache into row ``slot`` of a batch
+    cache — the splice that lets a request join a live decode batch without
+    re-padding or draining its neighbors (runtime/dataflow DecodeStage).
+
+    Works on any family's cache pytree: leaves are (L, B, T, ...) for KV or
+    (L, B, ...) for recurrent state (batch at dim 1); per-row length vectors
+    are (B,) int (batch at dim 0, set to ``n``); scalar counters are maxed.
+    """
+    def write(bc, oc):
+        if bc.ndim == 0:
+            return jnp.maximum(bc, oc)
+        if bc.ndim == 1 and jnp.issubdtype(bc.dtype, jnp.integer):
+            return bc.at[slot].set(n)          # per-row length vector
+        # one_cache leaf has batch=1 at dim 1
+        row = jax.lax.dynamic_slice_in_dim(oc, 0, 1, axis=1)
+        if bc.ndim >= 3 and bc.shape[2] != row.shape[2]:
+            # time-indexed leaf with different max_len: copy the prefix
+            pad = [(0, 0)] * row.ndim
+            pad[2] = (0, bc.shape[2] - row.shape[2])
+            row = jnp.pad(row, pad)
+        return jax.lax.dynamic_update_slice_in_dim(bc, row.astype(bc.dtype),
+                                                   slot, axis=1)
+
+    return jax.tree_util.tree_map(write, batch_cache, one_cache)
+
+
+# ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------
 

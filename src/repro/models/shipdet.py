@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import abft as abft_mod
 from repro.core import quant
 from repro.core.dependability import (
     DependabilityStats, Policy, dependable_qconv2d)
@@ -93,16 +94,41 @@ def init_params(specs: List[ConvSpec], key: jax.Array) -> List[Dict[str, Any]]:
     return params
 
 
+def deploy_checks(params: List[Dict[str, Any]]) -> List[jax.Array]:
+    """Deploy-time per-layer weight checksums (the Huang–Abraham conv
+    identity over the known-good quantized weights).  Shipped alongside the
+    model exactly like the fleet's storage checksums: a later ``forward``
+    with ``w_checks=`` verifies the *live* weights against these, so a
+    weight-memory SEU between deploy and execution is detected (ABFT) or
+    healed by rollback to ``golden_weights`` (CKPT)."""
+    return [abft_mod.conv_checksum_weight(p["qconv"].w_q) for p in params]
+
+
+def golden_weights(params: List[Dict[str, Any]]) -> List[jax.Array]:
+    """The known-good quantized weights per layer — the operand checkpoint
+    CKPT rolls back to when a deploy-time check fails."""
+    return [p["qconv"].w_q for p in params]
+
+
 def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
             *, policy: Policy = Policy.NONE, use_kernel: bool = False,
             interpret: bool = False, inject=None,
-            backend=None) -> Tuple[jax.Array, Dict]:
+            backend=None, w_checks: Optional[List[jax.Array]] = None,
+            golden_wq: Optional[List[jax.Array]] = None
+            ) -> Tuple[jax.Array, Dict]:
     """x: (N, H, W, 3) float in [0,1]. Returns (det map, dependability stats).
 
     ``backend`` selects the quantized-conv execution engine (core/backend
     registry): a single name applies network-wide, a sequence applies
     per-layer — the software rendition of the paper reserving the rad-hard
     HPDP for the convolution trunk while other layers run elsewhere.
+
+    ``w_checks`` (from ``deploy_checks``) turns ABFT/CKPT layers into
+    deploy-time weight scrubs: the per-layer checksum is verified against
+    the shipped value instead of one recomputed from the (possibly struck)
+    live weights.  ``golden_wq`` (from ``golden_weights``) additionally
+    gives CKPT layers a rollback target, so a weight SEU is *healed* by
+    re-executing from the known-good weights, not just flagged.
     """
     stats = DependabilityStats.zero()
     if backend is None or isinstance(backend, str):
@@ -134,7 +160,10 @@ def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
                 else Policy.NONE,
                 x_q, p["in_zp"], p["qconv"].w_q, bias_i32, rq, p["out_zp"],
                 stride=stride, padding="SAME", inject=layer_inject,
-                backend=layer_be)
+                backend=layer_be,
+                w_check=w_checks[i] if w_checks is not None else None,
+                ckpt=((x_q, golden_wq[i]) if golden_wq is not None
+                      else None))
             x = (y_q.astype(jnp.float32) - p["out_zp"]) * p["out_scale"]
             stats = DependabilityStats.merge(stats, lstats)
         else:

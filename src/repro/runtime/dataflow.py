@@ -1,0 +1,862 @@
+"""Streaming dataflow executor — the Klepsydra-style staged serving pipeline.
+
+The paper's runtime gets its throughput from a *dataflow-oriented, lock-free
+streaming* structure: compute is decomposed into stages connected by bounded
+queues, and data moves through the stages continuously instead of being
+batch-synchronized.  This module is that structure for the serving path:
+
+    submit ─▶ [admit] ─▶ [prefill] ─▶ [decode] ─▶ [certify] ─▶ [release]
+                 │           │            │            │            │
+              admission   per-req      slotted     release      finished
+              control     prefill      batch,      gate (hook)  stream
+                          (unpadded    continuous
+                          recurrent)   batching
+
+  * Every arrow is a bounded single-producer/single-consumer ``Channel`` —
+    the same queue primitive ``data/pipeline.prefetch`` streams host batches
+    through (one shared implementation, two drivers).
+  * The **decode** stage does continuous batching: requests join free slots
+    of the fixed-capacity KV-cache/recurrent-state batch and leave it
+    mid-flight, with no re-padding and no drain barrier (slot state is data,
+    not structure, so the jitted step never recompiles).
+  * The **certify** stage is the release gate.  Engines run it pass-through;
+    a fleet installs its certify-before-release hook here, so withholding a
+    finished request until its replica proves clean is a *pipeline stage*,
+    not an inline call buried in a monolithic step loop.
+  * SEU injection is per-stage: ``StreamingExecutor.strike`` routes a fault
+    to the stage that owns the site (decode owns ``kv_cache`` and
+    ``decode_state``, the parameter store owns ``weights``), which is how
+    the campaign engine drills the pipeline.
+
+Two drivers share the stage/queue primitives:
+
+  * the **cooperative driver** (``StreamingExecutor.step``) pumps the stages
+    in topological order on the caller's thread.  It takes no locks and its
+    schedule is a pure function of the submission order, so decode streams
+    — and therefore fleet failover replays — are bit-exact, the property
+    every dependability campaign certifies.
+  * the **threaded driver** (``ThreadedSource``) runs a producer stage on a
+    daemon thread blocking on its outbox — the host-boundary streaming mode
+    (data prefetch overlapping device compute).
+
+Device-fault recovery (snapshot/rollback, decode-state scrubbing) lives at
+the executor level because a consistent restore spans admit bookkeeping and
+decode state together; see docs/streaming.md and docs/recovery.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import abft
+from repro.core.dependability import DependabilityStats
+from repro.models import api as model_api
+from repro.models.config import ArchConfig
+
+# decode-state checksums: the storage-scrub identity applied to the live
+# KV cache / recurrent state + token buffer; jitted once per cache structure
+_state_checksums = jax.jit(abft.storage_checksums)
+
+
+@jax.jit
+def _splice_slot(batch_cache, one_cache, tokens, slot, first_tok, n):
+    """Join-time slot splice, fused into one compiled call: write the
+    prefilled request's cache rows and first token into ``slot`` of the live
+    batch.  Module-level jit so every executor (and every fleet replica)
+    shares one compile cache entry per cache structure."""
+    cache = model_api.cache_write_slot(batch_cache, one_cache, slot, n)
+    return cache, tokens.at[slot].set(first_tok)
+
+
+def _checks_equal(a, b) -> bool:
+    """Host verdict: does every leaf checksum match?"""
+    return all(bool(x) for x in jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda p, q: p == q, a, b)))
+
+
+# ---------------------------------------------------------------------------
+# Queue/stage primitives (shared with data/pipeline.prefetch)
+# ---------------------------------------------------------------------------
+
+
+class Closed(Exception):
+    """Raised by blocking Channel ops once the channel is closed."""
+
+
+class Channel:
+    """Bounded single-producer/single-consumer queue between two stages.
+
+    Two APIs over one deque:
+
+      * cooperative — ``try_put``/``try_get`` never block and take no locks
+        (single-thread pipeline pumping; deque ops are atomic under the
+        interpreter), so the deterministic driver is lock-free on its hot
+        path;
+      * streaming — ``put``/``get`` block on capacity/emptiness and wake on
+        ``close()`` (the threaded host-boundary driver).
+
+    ``capacity=0`` means unbounded (terminal channels that are drained every
+    pump cycle).
+    """
+
+    _EMPTY = object()
+
+    def __init__(self, capacity: int = 0, name: str = ""):
+        self.capacity = int(capacity)
+        self.name = name
+        self.items: deque = deque()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+
+    # ---------------------------------------------------------- cooperative
+    def full(self) -> bool:
+        return self.capacity > 0 and len(self.items) >= self.capacity
+
+    def try_put(self, item) -> bool:
+        if self.full():
+            return False
+        self.items.append(item)
+        return True
+
+    def try_get(self):
+        """Next item or ``Channel.EMPTY`` — non-blocking."""
+        if not self.items:
+            return self._EMPTY
+        return self.items.popleft()
+
+    @classmethod
+    def is_empty_token(cls, item) -> bool:
+        return item is cls._EMPTY
+
+    def drain(self) -> list:
+        out = list(self.items)
+        self.items.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    def __iter__(self):
+        return iter(self.items)
+
+    # ------------------------------------------------------------ streaming
+    def put(self, item):
+        with self._not_full:
+            while self.full() and not self._closed:
+                self._not_full.wait()
+            if self._closed:
+                raise Closed(self.name)
+            self.items.append(item)
+            self._not_empty.notify()
+
+    def get(self):
+        with self._not_empty:
+            while not self.items and not self._closed:
+                self._not_empty.wait()
+            if not self.items:
+                raise Closed(self.name)
+            item = self.items.popleft()
+            self._not_full.notify()
+            return item
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+
+class Stage:
+    """One pipeline stage: pull from ``inbox``, push to ``outbox``.
+
+    ``pump()`` moves as much work as channel capacity allows and returns
+    whether any progress was made; drivers decide *when* to pump (the
+    cooperative driver in topological order, a threaded driver in a loop).
+    """
+
+    name = "stage"
+
+    def pump(self) -> bool:
+        raise NotImplementedError
+
+
+class SourceStage(Stage):
+    """Producer stage: pushes ``produce(i)`` for i = start, start+1, … into
+    its outbox — the generalization of the hand-rolled prefetch thread."""
+
+    name = "source"
+
+    def __init__(self, produce: Callable[[int], Any], outbox: Channel,
+                 start: int = 0):
+        self.produce = produce
+        self.outbox = outbox
+        self._i = start
+        self._pending = Channel._EMPTY   # produced but not yet enqueued
+
+    def pump(self) -> bool:
+        moved = False
+        while True:
+            if Channel.is_empty_token(self._pending):
+                self._pending = self.produce(self._i)
+                self._i += 1
+            if not self.outbox.try_put(self._pending):
+                return moved
+            self._pending = Channel._EMPTY
+            moved = True
+
+    def pump_blocking(self):
+        """Streaming-driver variant: block on outbox space (raises Closed)."""
+        if Channel.is_empty_token(self._pending):
+            self._pending = self.produce(self._i)
+            self._i += 1
+        self.outbox.put(self._pending)
+        self._pending = Channel._EMPTY
+
+
+class ThreadedSource:
+    """Drive a ``SourceStage`` on a daemon thread — the streaming driver for
+    host-side stages (batch synthesis overlapping device compute).  The
+    consumer reads the stage's outbox; ``close()`` unblocks the producer and
+    joins the thread."""
+
+    def __init__(self, stage: SourceStage):
+        self.stage = stage
+        self._thread = threading.Thread(
+            target=self._run, name=f"stage-{stage.name}", daemon=True)
+
+    def start(self) -> "ThreadedSource":
+        self._thread.start()
+        return self
+
+    def _run(self):
+        try:
+            while True:
+                self.stage.pump_blocking()
+        except Closed:
+            pass
+
+    def close(self):
+        self.stage.outbox.close()
+        self._thread.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline payloads
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    # filled by the pipeline
+    output: Optional[List[int]] = None
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_out: int = 0
+    replays: int = 0
+    faults_detected: int = 0
+
+    def tokens_per_step(self) -> float:
+        return self.tokens_out / max(self.steps, 1)
+
+
+@dataclasses.dataclass
+class _Prefilled:
+    """A request that cleared the prefill stage: its single-request cache,
+    first sampled token, and true (unpadded) prompt length."""
+    req: Request
+    cache: Any
+    first_token: int
+    prompt_len: int
+
+
+# ---------------------------------------------------------------------------
+# Stages of the serving pipeline
+# ---------------------------------------------------------------------------
+
+
+class AdmitStage(Stage):
+    """Submission queue → prefill inbox, gated on slot reservations.
+
+    A request is admitted only when the decode batch will have a free slot
+    for it once prefilled: reservable = free slots − requests already in
+    flight through the prefill stage.  FIFO order is preserved — admission
+    order is what makes replay deterministic.
+
+    ``drain_barrier=True`` degrades admission to pad-and-step static
+    batching: a new group is admitted only once the decode batch has fully
+    drained, so a freed slot idles until the group's longest request
+    finishes.  This is the monolith-equivalent scheduling baseline the
+    serving benchmark prices continuous batching against — never what a
+    production engine should run."""
+
+    name = "admit"
+
+    def __init__(self, inbox: Channel, outbox: Channel,
+                 prefill: "PrefillStage", decode: "DecodeStage",
+                 drain_barrier: bool = False):
+        self.inbox = inbox
+        self.outbox = outbox
+        self.prefill = prefill
+        self.decode = decode
+        self.drain_barrier = drain_barrier
+
+    def reservable(self) -> int:
+        if self.drain_barrier and self.decode.active:
+            return 0                   # barrier: wait for a full drain
+        in_prefill = len(self.outbox) + len(self.prefill.outbox)
+        return self.decode.n_free() - in_prefill
+
+    def pump(self) -> bool:
+        moved = False
+        while (self.inbox.items and self.reservable() > 0
+               and not self.outbox.full()):
+            self.outbox.try_put(self.inbox.items.popleft())
+            moved = True
+        return moved
+
+
+class PrefillStage(Stage):
+    """Per-request prefill: prompt → (single-request cache, first token).
+
+    Attention caches mask past each row's length, so right-padding prompts
+    to a bucket is free and bounds compile count; recurrent state integrates
+    every token it sees, so state families prefill the exact prompt (one
+    compile per distinct length instead of per bucket)."""
+
+    name = "prefill"
+
+    def __init__(self, ex: "StreamingExecutor", inbox: Channel,
+                 outbox: Channel):
+        self.ex = ex
+        self.inbox = inbox
+        self.outbox = outbox
+
+    def _prefill_one(self, req: Request) -> _Prefilled:
+        ex = self.ex
+        prompt = req.prompt[: ex.max_len - req.max_new_tokens]
+        if ex.cfg.recurrent is not None:
+            pad = len(prompt)
+        else:
+            pad = -(-len(prompt) // ex.prefill_pad) * ex.prefill_pad
+        toks = jnp.asarray([prompt + [0] * (pad - len(prompt))], jnp.int32)
+        logits, cache1 = ex._prefill(ex.params, toks)
+        nxt = int(jnp.argmax(logits[0, len(prompt) - 1]))
+        return _Prefilled(req, cache1, nxt, len(prompt))
+
+    def pump(self) -> bool:
+        moved = False
+        while not self.outbox.full():
+            req = self.inbox.try_get()
+            if Channel.is_empty_token(req):
+                break
+            self.outbox.try_put(self._prefill_one(req))
+            moved = True
+        return moved
+
+
+class DecodeStage(Stage):
+    """The continuous-batching core: owns the slotted decode batch.
+
+    State is one fixed-capacity KV-cache/recurrent-state pytree plus the
+    per-slot token buffer and bookkeeping vectors.  ``join()`` splices
+    prefilled requests into free slot rows (``models/common.cache_write_slot``
+    — no re-padding, no drain of in-flight slots); ``decode_once()`` steps
+    the whole batch and emits finished requests downstream.  Each pump is
+    join + at most one step, so requests enter and leave the batch while
+    their neighbors keep decoding."""
+
+    name = "decode"
+
+    def __init__(self, ex: "StreamingExecutor", inbox: Channel,
+                 outbox: Channel):
+        self.ex = ex
+        self.inbox = inbox
+        self.outbox = outbox
+        self.reset_state()
+
+    def reset_state(self):
+        ex = self.ex
+        self.cache = model_api.init_cache(ex.cfg, ex.capacity, ex.max_len)
+        self.tokens = jnp.zeros((ex.capacity,), jnp.int32)
+        self.slot_pos = np.zeros(ex.capacity, np.int32)
+        self.slot_remaining = np.zeros(ex.capacity, np.int32)
+        self.active: dict = {}                    # slot -> Request
+
+    def n_free(self) -> int:
+        return self.ex.capacity - len(self.active)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.ex.capacity) if s not in self.active]
+
+    def join(self) -> bool:
+        """Splice prefilled requests into free slots (continuous batching).
+        Requests whose prompt already produced their only token finish at
+        admission and go straight downstream."""
+        ex = self.ex
+        moved = False
+        for slot in self.free_slots():
+            item = self.inbox.try_get()
+            if Channel.is_empty_token(item):
+                break
+            req, n = item.req, item.prompt_len
+            ex._since_snapshot.append(req)
+            self.cache, self.tokens = _splice_slot(
+                self.cache, item.cache, self.tokens,
+                jnp.int32(slot), jnp.int32(item.first_token), jnp.int32(n))
+            self.slot_pos[slot] = n
+            # the prefill itself produced the first new token
+            self.slot_remaining[slot] = req.max_new_tokens - 1
+            req.output = [item.first_token]
+            self.active[slot] = req
+            moved = True
+            if self.slot_remaining[slot] <= 0:
+                req.finished_at = time.time()
+                del self.active[slot]
+                self.outbox.try_put(req)
+        return moved
+
+    def decode_once(self) -> bool:
+        """One decode step for every active slot; finished requests are
+        emitted to the certify stage."""
+        ex = self.ex
+        if not self.active:
+            return False
+        nxt, self.cache = ex._decode(ex.params, self.tokens, self.cache)
+        self.tokens = nxt
+        ex.stats.steps += 1
+        nxt_host = np.asarray(nxt)
+        done_slots = []
+        for slot, req in list(self.active.items()):
+            req.output.append(int(nxt_host[slot]))
+            self.slot_pos[slot] += 1
+            self.slot_remaining[slot] -= 1
+            ex.stats.tokens_out += 1
+            if (self.slot_remaining[slot] <= 0
+                    or int(nxt_host[slot]) == ex.eos_id
+                    or self.slot_pos[slot] >= ex.max_len - 1):
+                req.finished_at = time.time()
+                done_slots.append(slot)
+        for slot in done_slots:
+            self.outbox.try_put(self.active.pop(slot))
+        return True
+
+    def pump(self) -> bool:
+        joined = self.join()
+        return self.decode_once() or joined
+
+
+class CertifyStage(Stage):
+    """The release gate.  ``hook(req) -> bool`` decides whether a finished
+    request flows on to release (True) or is withheld — the hook's owner
+    (e.g. a fleet running certify-before-release weight scrubs) takes
+    custody of withheld requests and settles them out of band.  No hook
+    means trivially certified (a bare engine trusts its own scrubs)."""
+
+    name = "certify"
+
+    def __init__(self, ex: "StreamingExecutor", inbox: Channel,
+                 outbox: Channel):
+        self.ex = ex
+        self.inbox = inbox
+        self.outbox = outbox
+
+    def pump(self) -> bool:
+        moved = False
+        while True:
+            req = self.inbox.try_get()
+            if Channel.is_empty_token(req):
+                return moved
+            moved = True
+            hook = self.ex.certify
+            if hook is None or hook(req):
+                self.outbox.try_put(req)
+
+
+class ReleaseStage(Stage):
+    """Terminal stage: certified requests accumulate here until the caller
+    collects them (``StreamingExecutor.step`` drains once per pump cycle)."""
+
+    name = "release"
+
+    def __init__(self, inbox: Channel):
+        self.inbox = inbox
+
+    def pump(self) -> bool:
+        return False                               # terminal — nothing to move
+
+    def collect(self) -> List[Request]:
+        return self.inbox.drain()
+
+
+# ---------------------------------------------------------------------------
+# The executor: stages + cooperative driver + fault tolerance
+# ---------------------------------------------------------------------------
+
+
+class StreamingExecutor:
+    """Staged streaming executor with a deterministic cooperative driver.
+
+    One ``step()`` pumps every stage once in topological order — the
+    synchronous-dataflow schedule.  Because stage order and channel order
+    are fixed, the token streams are a pure function of submission order:
+    the bit-exact-replay property fleets and campaigns certify.
+
+    Fault tolerance spans the stages:
+
+      * every ``snapshot_every`` steps the decode-stage state plus admission
+        bookkeeping is snapshotted (checksummed, so a struck snapshot is
+        refused at restore);
+      * ``state_scrub`` runs the decode-state checksum scrub as a pipeline
+        guard before the decode stage consumes its state ("detect" raises
+        events for a supervisor, "rollback" restores the verified snapshot
+        in place);
+      * ``strike(site, fault, key)`` is the per-stage SEU injection surface
+        for campaigns.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
+                 max_len: int = 512, prefill_pad: int = 64,
+                 snapshot_every: int = 32, eos_id: int = -1,
+                 compiled=None, state_scrub: str = "off",
+                 certify: Optional[Callable[[Request], bool]] = None,
+                 drain_barrier: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.capacity = capacity
+        self.max_len = max_len
+        self.prefill_pad = prefill_pad
+        self.eos_id = eos_id
+        self.snapshot_every = snapshot_every
+        self.certify = certify
+        self.stats = EngineStats()
+
+        if compiled is not None:
+            # replica fleets share one jitted (decode, prefill) pair so N
+            # executors over the same config compile once, not N times
+            self._decode, self._prefill = compiled
+        else:
+            def _step(p, t, c):
+                logits, c = model_api.decode_step(cfg, p, t, c)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), c
+
+            self._decode = jax.jit(_step)
+            self._prefill = jax.jit(
+                lambda p, t, c=None: model_api.prefill(cfg, p, t, max_len))
+
+        # channels: submission is unbounded (admission control is a policy
+        # above the engine); prefill channels are slot-bounded; certify/
+        # release are drained every cycle
+        self.submit_ch = Channel(0, "submit")
+        self._admit_ch = Channel(capacity, "admitted")
+        self._prefill_ch = Channel(capacity, "prefilled")
+        self._certify_ch = Channel(0, "finished")
+        self._release_ch = Channel(0, "certified")
+
+        self.prefill = PrefillStage(self, self._admit_ch, self._prefill_ch)
+        self.decode = DecodeStage(self, self._prefill_ch, self._certify_ch)
+        self.admit = AdmitStage(self.submit_ch, self._admit_ch,
+                                self.prefill, self.decode,
+                                drain_barrier=drain_barrier)
+        self.certifier = CertifyStage(self, self._certify_ch,
+                                      self._release_ch)
+        self.release = ReleaseStage(self._release_ch)
+        self.stages: List[Stage] = [self.admit, self.prefill, self.decode,
+                                    self.certifier, self.release]
+
+        self._snapshot = None
+        self._snapshot_step = 0
+        self._since_snapshot: List[Request] = []   # admitted after snapshot
+        self.dependability = DependabilityStats.zero()
+
+        # decode-state scrubbing: "off" | "detect" | "rollback"
+        if state_scrub not in ("off", "detect", "rollback"):
+            raise ValueError(f"state_scrub must be off|detect|rollback, "
+                             f"got {state_scrub!r}")
+        self.state_scrub = state_scrub
+        self._expected_check = None        # checksums after last mutation
+        self.state_events: List[dict] = []  # drained by fleets / campaigns
+
+    @property
+    def compiled(self):
+        """The jitted (decode, prefill) pair, shareable with same-config
+        executors via the ``compiled=`` constructor argument."""
+        return (self._decode, self._prefill)
+
+    def reset(self, params=None):
+        """Return run state (channels, slots, cache, per-run stats) to
+        fresh, optionally with new (same-shaped) params.  Lifetime
+        dependability counters survive resets — a campaign accumulates
+        verdicts across many reset+run trials — and compiled functions are
+        kept (params are traced arguments, so swapping them is free)."""
+        if params is not None:
+            self.params = params
+        for ch in (self.submit_ch, self._admit_ch, self._prefill_ch,
+                   self._certify_ch, self._release_ch):
+            ch.items.clear()
+        self.decode.reset_state()
+        self.stats = EngineStats()
+        self._snapshot = None
+        self._snapshot_step = 0
+        self._since_snapshot = []
+        self._expected_check = None
+        self.state_events = []
+
+    # ------------------------------------------------------- dependability
+    def _device_state(self) -> dict:
+        """The device-resident decode-stage state the scrub covers (host-side
+        slot bookkeeping lives in ECC'd host memory in the deployment this
+        models, so it is outside the SEU threat surface)."""
+        return {"cache": self.decode.cache, "tokens": self.decode.tokens}
+
+    def _refresh_state_check(self):
+        """Re-checksum after a legitimate mutation — the running 'expected'
+        fingerprint every later scrub compares against."""
+        if self.state_scrub != "off":
+            self._expected_check = _state_checksums(self._device_state())
+
+    def scrub_decode_state(self) -> bool:
+        """Verify the live decode state against the post-mutation checksum;
+        True == clean.  A mismatch means an SEU struck the KV cache /
+        recurrent state or the token buffer *between* pump cycles — the
+        transient site no weight scrub can see."""
+        if self._expected_check is None:
+            return True
+        fresh = _state_checksums(self._device_state())
+        clean = _checks_equal(fresh, self._expected_check)
+        self.record_dependability({
+            "faults_detected": jnp.int32(0 if clean else 1),
+            "checks_run": jnp.int32(1)})
+        return clean
+
+    def _scrub_and_recover(self):
+        """The pre-decode scrub guard: detect, and under ``rollback`` restore
+        the last verified snapshot (checkpoint/restart at decode
+        granularity).  Appends one event per detection so fleets/campaigns
+        can account recoveries and measure recovery latency."""
+        if self.scrub_decode_state():
+            return
+        event = {"step": self.stats.steps, "recovered": False,
+                 "seconds": 0.0, "steps_replayed": 0}
+        if self.state_scrub == "rollback" and self._snapshot is not None:
+            t0 = time.perf_counter()
+            try:
+                event["steps_replayed"] = self.restore_snapshot()
+                event["recovered"] = True
+                event["seconds"] = time.perf_counter() - t0
+                self.record_dependability({"faults_recovered": jnp.int32(1)})
+            except RuntimeError:
+                # snapshot itself failed verification — leave recovered
+                # False; the supervisor's drain+replay is the fallback
+                pass
+        if not event["recovered"]:
+            # accept the corrupted fingerprint as the new baseline so one
+            # strike raises one alarm, not one per remaining step
+            self._refresh_state_check()
+        self.state_events.append(event)
+
+    def drain_state_events(self) -> List[dict]:
+        ev, self.state_events = self.state_events, []
+        return ev
+
+    def record_dependability(self, stats: dict):
+        """Fold a DependabilityStats pytree (from dependable ops or a
+        campaign's detection verdicts) into the executor-lifetime counters."""
+        self.dependability = DependabilityStats.merge(self.dependability, stats)
+
+    # ------------------------------------------------- per-stage injection
+    def strike(self, site: str, fault, key) -> None:
+        """Campaign hook: inject an SEU into the state the named stage owns.
+
+        ``kv_cache`` / ``decode_state`` strike the decode stage's cache and
+        token buffer; ``weights`` strikes the parameter store every stage
+        reads.  Routing faults by stage (instead of reaching into a
+        monolith) is what lets a campaign attribute coverage per stage.
+        """
+        from repro.core.fault_injection import inject_pytree_with
+        if site == "kv_cache":
+            self.decode.cache = inject_pytree_with(self.decode.cache, key,
+                                                   fault)
+        elif site == "decode_state":
+            self.decode.tokens = fault(self.decode.tokens, key)
+        elif site == "weights":
+            self.params = inject_pytree_with(self.params, key, fault)
+        else:
+            raise ValueError(
+                f"no stage owns fault site {site!r} "
+                f"(known: kv_cache, decode_state, weights)")
+
+    # ------------------------------------------------------------- driving
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.submit_ch.items.append(req)
+
+    def cancel(self, uid: int) -> bool:
+        """Evict a request from any stage it occupies (deadline/abort path).
+        Slot cache rows go stale but are overwritten by the next join's
+        prefill.  Also purged from snapshot bookkeeping so a later
+        ``restore_snapshot`` cannot resurrect cancelled work.  Returns True
+        if the request was found live in the pipeline."""
+        self._since_snapshot = [r for r in self._since_snapshot
+                                if r.uid != uid]
+        if self._snapshot is not None:
+            for slot, r in list(self._snapshot["active"].items()):
+                if r.uid == uid:
+                    del self._snapshot["active"][slot]
+                    del self._snapshot["outputs"][slot]
+        for ch in (self.submit_ch, self._admit_ch):
+            for i, r in enumerate(ch.items):
+                if r.uid == uid:
+                    del ch.items[i]
+                    return True
+        for i, item in enumerate(self._prefill_ch.items):
+            if item.req.uid == uid:
+                del self._prefill_ch.items[i]
+                return True
+        for slot, r in list(self.decode.active.items()):
+            if r.uid == uid:
+                del self.decode.active[slot]
+                self.decode.slot_remaining[slot] = 0
+                return True
+        for ch in (self._certify_ch, self._release_ch):
+            for i, r in enumerate(ch.items):
+                if r.uid == uid:
+                    del ch.items[i]
+                    return True
+        return False
+
+    def step(self) -> List[Request]:
+        """One cooperative pump cycle: admit → prefill → decode-join →
+        snapshot cadence → decode step → certify → release.  Returns the
+        requests that cleared the release stage this cycle (certify-hook
+        holds excluded)."""
+        # scrub BEFORE this cycle consumes decode state (and before a join
+        # mutates it): anything that changed since the last legitimate
+        # mutation is an SEU, and under "rollback" we restart from the
+        # last verified snapshot instead of decoding from corrupted state
+        if self.state_scrub != "off" and self.decode.active:
+            self._scrub_and_recover()
+        self.admit.pump()
+        self.prefill.pump()
+        self.decode.join()
+        if self.decode.active:
+            if self.stats.steps % self.snapshot_every == 0:
+                self._take_snapshot()
+            self.decode.decode_once()
+        self._refresh_state_check()
+        # certify/release pump AFTER the decode state is settled: a certify
+        # hook may re-enter the executor (fleet recalls, resets, replays)
+        self.certifier.pump()
+        self.release.pump()
+        return self.release.collect()
+
+    def busy(self) -> bool:
+        """Work anywhere in the pipeline before the release stage?"""
+        return bool(self.submit_ch.items or self._admit_ch.items
+                    or self._prefill_ch.items or self.decode.active)
+
+    def in_flight(self) -> List[Request]:
+        """Every request the pipeline currently owns, in deterministic
+        stage-then-slot order (failover drains replay in this order)."""
+        return (list(self.submit_ch) + list(self._admit_ch)
+                + [item.req for item in self._prefill_ch]
+                + [self.decode.active[s] for s in sorted(self.decode.active)])
+
+    def pending_count(self) -> int:
+        """How many requests the pipeline owns — O(1) (router cost metric;
+        ``in_flight()`` materializes the list, this just counts it)."""
+        return (len(self.submit_ch) + len(self._admit_ch)
+                + len(self._prefill_ch) + len(self.decode.active))
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        """Drain the pipeline."""
+        while self.busy() and self.stats.steps < max_steps:
+            self.step()
+        return self.stats
+
+    # ----------------------------------------------------- fault tolerance
+    def _take_snapshot(self):
+        d = self.decode
+        self._snapshot = {
+            "cache": d.cache,
+            "tokens": d.tokens,
+            "slot_pos": d.slot_pos.copy(),
+            "slot_remaining": d.slot_remaining.copy(),
+            "active": dict(d.active),
+            "outputs": {s: list(r.output) for s, r in d.active.items()},
+            "steps": self.stats.steps,
+            "tokens_out": self.stats.tokens_out,
+            # golden-snapshot integrity: checksummed at capture so a later
+            # restore can refuse a snapshot that was itself struck
+            "check": (_state_checksums(
+                {"cache": d.cache, "tokens": d.tokens})
+                if self.state_scrub != "off" else None),
+        }
+        self._snapshot_step = self.stats.steps
+        self._since_snapshot = []
+
+    def restore_snapshot(self) -> int:
+        """Roll back to the last snapshot (device-fault recovery path).
+
+        The snapshot round-trips the *whole* decode state: cache, token
+        buffer, per-slot bookkeeping, active-set membership, request outputs
+        and the step/token counters — so ``tokens_per_step()`` and token
+        accounting stay exact across a replay, and requests that finished or
+        were admitted after the snapshot are correctly re-decoded / requeued.
+        ``replays`` and ``faults_detected`` are lifetime counters and are
+        never rolled back.
+
+        Returns the number of steps replayed (lost work bound =
+        snapshot_every).
+        """
+        if self._snapshot is None:
+            raise RuntimeError("no snapshot taken yet")
+        snap = self._snapshot
+        if snap["check"] is not None:
+            fresh = _state_checksums(
+                {"cache": snap["cache"], "tokens": snap["tokens"]})
+            if not _checks_equal(fresh, snap["check"]):
+                raise RuntimeError(
+                    "snapshot failed checksum verification (SEU struck the "
+                    "golden snapshot itself) — refusing to restore; escalate "
+                    "to drain + failover")
+        d = self.decode
+        d.cache = snap["cache"]
+        d.tokens = snap["tokens"]
+        d.slot_pos = snap["slot_pos"].copy()
+        d.slot_remaining = snap["slot_remaining"].copy()
+        # active set as of the snapshot: resurrects requests that finished
+        # after it (their post-snapshot tokens are suspect) and drops ones
+        # admitted after it (requeued below; the cache rollback erased their
+        # prefill rows)
+        d.active = dict(snap["active"])
+        for s, req in d.active.items():
+            req.output = list(snap["outputs"][s])
+            req.finished_at = 0.0
+        for req in reversed(self._since_snapshot):
+            req.output = None
+            req.finished_at = 0.0
+            self.submit_ch.items.appendleft(req)
+        self._since_snapshot = []
+        lost = self.stats.steps - snap["steps"]
+        self.stats.steps = snap["steps"]
+        self.stats.tokens_out = snap["tokens_out"]
+        self.stats.replays += 1
+        self._refresh_state_check()
+        return lost

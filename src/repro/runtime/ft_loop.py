@@ -4,11 +4,20 @@ Composes the substrate into the dependable-execution story the paper tells:
 
     data pipeline (deterministic batch_at)        — data/pipeline.py
     train step (pjit'd, sharded)                  — train/steps.py
-    checkpoint every K steps (atomic, crc32)      — train/checkpoint.py
+    checkpoint every K steps (incremental, async, — train/checkpoint.py
+      crc32-chained; dirty chunks only)             (IncrementalCheckpointer)
     SEU injection (optional, for drills)          — core/fault_injection.py
     detection: loss NaN/spike or ABFT flag        — here
     recovery: restore last checkpoint + replay    — here
     elastic: shrink mesh on simulated node loss   — runtime/orchestrator.py
+
+Checkpointing runs through ``IncrementalCheckpointer``: saves snapshot the
+state to host immediately and persist on a background writer (training never
+blocks on disk unless ``max_pending`` snapshots are already in flight), and
+only chunks whose mod-2^32 checksum changed since the last durable save are
+rewritten.  Recovery calls ``wait()`` first so the restore reads a durable
+manifest; restores of chained (format-2) checkpoints are bit-identical to
+full ones, so the replay determinism contract below is unchanged.
 
 Determinism contract: batch ``i`` is a pure function of (seed, i), so a
 restore at step s replays steps [s, crash) on identical data — the loss
@@ -44,6 +53,10 @@ class FTConfig:
     loss_spike_factor: float = 10.0   # recovery trigger: loss > factor×median
     max_recoveries: int = 8
     seed: int = 0
+    # incremental-checkpointer knobs: rebase cadence bounds manifest-chain
+    # length; max_pending bounds how far durable state may trail the loop
+    ckpt_full_every: int = 8
+    ckpt_max_pending: int = 2
 
 
 @dataclasses.dataclass
@@ -53,6 +66,7 @@ class RunReport:
     steps_replayed: int
     wall_s: float
     events: List[str]
+    ckpt_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def _is_bad(loss: float, history: List[float], factor: float) -> bool:
@@ -87,53 +101,65 @@ def run(cfg: ArchConfig, shape: ShapeConfig, ft: FTConfig,
         ctx = ShardCtx(mesh=mesh, dp=dp, model="model")
     step_fn = jax.jit(steps_mod.make_train_step(cfg, ctx, opt))
 
-    # ---- init or resume
-    start = ckpt.latest_step(ft.ckpt_dir)
-    if start is None:
-        state = steps_mod.init_train_state(cfg, jax.random.key(ft.seed), opt)
-        ckpt.save(ft.ckpt_dir, 0, state, keep_n=ft.keep_n)
-        start = 0
-    else:
-        start, state = ckpt.restore(ft.ckpt_dir, start)
+    # incremental + async checkpointing: dirty-chunk writes on a background
+    # thread; every restore below waits for in-flight saves to be durable
+    # before reading, so recovery never races the writer
+    ick = ckpt.IncrementalCheckpointer(
+        ft.ckpt_dir, keep_n=ft.keep_n, full_every=ft.ckpt_full_every,
+        max_pending=ft.ckpt_max_pending)
+    try:
+        # ---- init or resume
+        start = ckpt.latest_step(ft.ckpt_dir)
+        if start is None:
+            state = steps_mod.init_train_state(cfg, jax.random.key(ft.seed),
+                                               opt)
+            ick.save(0, state)
+            start = 0
+        else:
+            start, state = ckpt.restore(ft.ckpt_dir, start)
 
-    losses: List[float] = []
-    events: List[str] = []
-    recoveries = 0
-    replayed = 0
-    step = start
+        losses: List[float] = []
+        events: List[str] = []
+        recoveries = 0
+        replayed = 0
+        step = start
 
-    while step < n_steps:
-        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
-        try:
-            if fault_hook is not None:
-                maybe = fault_hook(step, state)
-                if maybe is not None:
-                    state = maybe
-            t_step = time.time()
-            state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
-            orch.heartbeat(0, step, time.time() - t_step)
+        while step < n_steps:
+            batch = {k: jnp.asarray(v)
+                     for k, v in stream.batch_at(step).items()}
+            try:
+                if fault_hook is not None:
+                    maybe = fault_hook(step, state)
+                    if maybe is not None:
+                        state = maybe
+                t_step = time.time()
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                orch.heartbeat(0, step, time.time() - t_step)
 
-            if _is_bad(loss, losses, ft.loss_spike_factor):
-                raise RuntimeError(f"corruption detected: loss={loss}")
+                if _is_bad(loss, losses, ft.loss_spike_factor):
+                    raise RuntimeError(f"corruption detected: loss={loss}")
 
-            losses.append(loss)
-            step += 1
-            if step % ft.ckpt_every == 0:
-                ckpt.save(ft.ckpt_dir, step, state, keep_n=ft.keep_n)
-        except (RuntimeError, FloatingPointError) as e:
-            recoveries += 1
-            events.append(f"step {step}: {e} → restore+replay")
-            if recoveries > ft.max_recoveries:
-                raise RuntimeError(
-                    f"exceeded max_recoveries={ft.max_recoveries}") from e
-            last = ckpt.latest_step(ft.ckpt_dir)
-            restored, state = ckpt.restore(ft.ckpt_dir, last)
-            # drop optimistic losses past the restore point, replay
-            replayed += step - restored
-            losses = losses[: restored - start]
-            step = restored
+                losses.append(loss)
+                step += 1
+                if step % ft.ckpt_every == 0:
+                    ick.save(step, state)
+            except (RuntimeError, FloatingPointError) as e:
+                recoveries += 1
+                events.append(f"step {step}: {e} → restore+replay")
+                if recoveries > ft.max_recoveries:
+                    raise RuntimeError(
+                        f"exceeded max_recoveries={ft.max_recoveries}") from e
+                ick.wait()                  # durability barrier before read
+                last = ckpt.latest_step(ft.ckpt_dir)
+                restored, state = ckpt.restore(ft.ckpt_dir, last)
+                # drop optimistic losses past the restore point, replay
+                replayed += step - restored
+                losses = losses[: restored - start]
+                step = restored
+    finally:
+        ick.close()                         # flush pending writes, join
 
     return RunReport(losses=losses, recoveries=recoveries,
                      steps_replayed=replayed, wall_s=time.time() - t0,
-                     events=events)
+                     events=events, ckpt_stats=dict(ick.stats))

@@ -1,451 +1,241 @@
-"""Batched serving engine — the Klepsydra-AI-runtime analogue.
+"""Batched serving engine — a thin facade over the streaming dataflow
+executor (``runtime/dataflow.py``).
 
-The paper's runtime traits, mapped to a TPU serving engine:
+Historically this module held a 450-line monolithic ``Engine.step()`` that
+admitted, prefilled, decoded, scrubbed and released in one blocking pass.
+The paper's runtime is the opposite shape — a dataflow-oriented, lock-free
+streaming pipeline (Klepsydra on the HPDP) — and the implementation now
+matches: admit → prefill → decode → certify → release are explicit stages
+connected by bounded SPSC channels, with continuous batching in the decode
+stage and certification as the release gate.  See ``dataflow.py`` for the
+pipeline itself and docs/streaming.md for the semantics.
 
-  * **lock-free streaming execution** → a continuous-batching decode loop:
-    one jitted ``decode_step`` over a fixed-capacity batch; requests slot in
-    and out of the batch without recompilation (slot state is data, not
-    structure).
-  * **"no hardware-specific coding once configured"** → the engine is built
-    from the same family-dispatching model API as training; any
-    ``--arch`` serves through it unchanged.
-  * **orchestration instructions** (payload computer → RTG4 → HPDP) →
-    ``Request``/``Engine.submit`` → scheduler → device step.
-  * **dependability hooks**: an optional dependability policy re-executes /
-    checksums each step (core.dependability), and every N steps the engine
-    snapshots decode state so a device fault replays at most N tokens.
-  * **decode-state scrubbing** (docs/recovery.md): the transient state a
-    weight scrub can never see — the KV cache / recurrent state and the
-    sampled-token buffer — carries a running mod-2^32 checksum, refreshed
-    after every legitimate mutation and re-verified before the next step
-    consumes it.  ``state_scrub="rollback"`` turns detection into
-    checkpoint/restart: the engine rolls back to its last (checksum-
-    verified) snapshot and replays, bounding lost work at
-    ``snapshot_every`` steps; ``"detect"`` only raises the alarm so a
-    fleet supervisor can drain + fail over instead.
+``Engine`` keeps the public surface every caller already speaks —
+``submit``/``step``/``run``/``snapshot``/``restore_snapshot``, the
+``DependabilityStats`` rollup and the drained ``state_events`` — and adds
+the per-stage surfaces the pipeline makes possible:
+
+  * ``certify=`` installs a release-gate hook (the fleet's
+    certify-before-release runs *in the certify stage*, not in fleet code
+    wrapped around the engine);
+  * ``strike(site, fault, key)`` injects an SEU into the stage that owns
+    the site (decode owns ``kv_cache``/``decode_state``, the parameter
+    store owns ``weights``) — the campaign engine's per-stage drill surface.
 
 Single-process implementation (CPU or one TPU slice) with the same
-state-machine a multi-host engine needs; the scheduler is deliberately
-deterministic so replay-after-fault is bit-exact.
+state-machine a multi-host engine needs; the cooperative stage schedule is
+deliberately deterministic so replay-after-fault is bit-exact.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import abft
-from repro.core.dependability import DependabilityStats
 from repro.models import api as model_api
 from repro.models.config import ArchConfig
-
-# decode-state checksums: the storage-scrub identity applied to the live
-# KV cache / recurrent state + token buffer; jitted once per cache structure
-_state_checksums = jax.jit(abft.storage_checksums)
-
-
-def _checks_equal(a, b) -> bool:
-    """Host verdict: does every leaf checksum match?"""
-    return all(bool(x) for x in jax.tree_util.tree_leaves(
-        jax.tree_util.tree_map(lambda p, q: p == q, a, b)))
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    # filled by the engine
-    output: Optional[List[int]] = None
-    submitted_at: float = 0.0
-    finished_at: float = 0.0
-
-
-@dataclasses.dataclass
-class EngineStats:
-    steps: int = 0
-    tokens_out: int = 0
-    replays: int = 0
-    faults_detected: int = 0
-
-    def tokens_per_step(self) -> float:
-        return self.tokens_out / max(self.steps, 1)
+from repro.runtime.dataflow import (     # noqa: F401 — public re-exports
+    Channel, EngineStats, Request, StreamingExecutor)
 
 
 class Engine:
-    """Fixed-capacity continuous-batching engine.
+    """Fixed-capacity continuous-batching engine over the staged executor.
 
     capacity: decode batch width (slots).  Each slot is free or holds one
     request.  Prefill runs per-request (right-padded to ``prefill_pad``
-    buckets to bound compile count); decode steps the whole batch.
+    buckets to bound compile count); decode steps the whole batch while
+    requests join and leave mid-flight.
     """
 
     def __init__(self, cfg: ArchConfig, params, capacity: int = 8,
                  max_len: int = 512, prefill_pad: int = 64,
                  snapshot_every: int = 32, eos_id: int = -1,
                  compiled=None, backend: Optional[str] = None,
-                 state_scrub: str = "off"):
+                 state_scrub: str = "off",
+                 certify: Optional[Callable[[Request], bool]] = None,
+                 drain_barrier: bool = False):
         # engine-level execution-backend override for the quantized hot
         # paths (core/backend registry); baked into cfg so the jitted
         # decode/prefill pair and any compiled-pair sharing stay consistent
         cfg = model_api.with_backend(cfg, backend)
-        self.cfg = cfg
-        self.params = params
-        self.capacity = capacity
-        self.max_len = max_len
-        self.prefill_pad = prefill_pad
-        self.eos_id = eos_id
-        self.snapshot_every = snapshot_every
+        self._ex = StreamingExecutor(
+            cfg, params, capacity=capacity, max_len=max_len,
+            prefill_pad=prefill_pad, snapshot_every=snapshot_every,
+            eos_id=eos_id, compiled=compiled, state_scrub=state_scrub,
+            certify=certify, drain_barrier=drain_barrier)
 
-        self.queue: deque[Request] = deque()
-        self.active: Dict[int, Request] = {}          # slot -> request
-        self.slot_pos = np.zeros(capacity, np.int32)  # current length per slot
-        self.slot_remaining = np.zeros(capacity, np.int32)
-        self.stats = EngineStats()
+    # ------------------------------------------------------------- pipeline
+    @property
+    def executor(self) -> StreamingExecutor:
+        """The staged pipeline this engine fronts (stages, channels,
+        per-stage injection)."""
+        return self._ex
 
-        # one KV cache for the whole batch; slots index rows
-        self.cache = model_api.init_cache(cfg, capacity, max_len)
-        self.tokens = jnp.zeros((capacity,), jnp.int32)
-
-        if compiled is not None:
-            # replica fleets share one jitted (decode, prefill) pair so N
-            # engines over the same config compile once, not N times
-            self._decode, self._prefill = compiled
-        else:
-            def _step(p, t, c):
-                logits, c = model_api.decode_step(cfg, p, t, c)
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), c
-
-            self._decode = jax.jit(_step)
-            self._prefill = jax.jit(
-                lambda p, t, c=None: model_api.prefill(cfg, p, t, max_len),
-                static_argnums=())
-        self._snapshot = None
-        self._snapshot_step = 0
-        self._since_snapshot: List[Request] = []   # admitted after snapshot
-        self.dependability = DependabilityStats.zero()
-
-        # decode-state scrubbing: "off" | "detect" | "rollback"
-        #   detect   — checksum-verify before each step; mismatches are
-        #              recorded as events for a supervisor to act on
-        #   rollback — additionally restore the last verified snapshot and
-        #              replay (engine-local checkpoint/restart)
-        if state_scrub not in ("off", "detect", "rollback"):
-            raise ValueError(f"state_scrub must be off|detect|rollback, "
-                             f"got {state_scrub!r}")
-        self.state_scrub = state_scrub
-        self._expected_check = None        # checksums after last mutation
-        self.state_events: List[dict] = []  # drained by fleets / campaigns
+    @property
+    def cfg(self):
+        return self._ex.cfg
 
     @property
     def compiled(self):
         """The jitted (decode, prefill) pair, shareable with same-config
         engines via the ``compiled=`` constructor argument."""
-        return (self._decode, self._prefill)
+        return self._ex.compiled
 
+    # --------------------------------------------------- state pass-through
+    # Mutable run state lives in the stages; these properties keep the
+    # monolith-era surface (fleet, campaigns, tests) working unchanged.
+    @property
+    def params(self):
+        return self._ex.params
+
+    @params.setter
+    def params(self, value):
+        self._ex.params = value
+
+    @property
+    def capacity(self):
+        return self._ex.capacity
+
+    @property
+    def max_len(self):
+        return self._ex.max_len
+
+    @property
+    def prefill_pad(self):
+        return self._ex.prefill_pad
+
+    @property
+    def snapshot_every(self):
+        return self._ex.snapshot_every
+
+    @property
+    def eos_id(self):
+        return self._ex.eos_id
+
+    @property
+    def queue(self):
+        """The submission channel's deque (admit-stage inbox)."""
+        return self._ex.submit_ch.items
+
+    @property
+    def active(self):
+        """slot -> Request mapping of the decode stage's live batch."""
+        return self._ex.decode.active
+
+    @property
+    def slot_pos(self):
+        return self._ex.decode.slot_pos
+
+    @property
+    def slot_remaining(self):
+        return self._ex.decode.slot_remaining
+
+    @property
+    def cache(self):
+        return self._ex.decode.cache
+
+    @cache.setter
+    def cache(self, value):
+        self._ex.decode.cache = value
+
+    @property
+    def tokens(self):
+        return self._ex.decode.tokens
+
+    @tokens.setter
+    def tokens(self, value):
+        self._ex.decode.tokens = value
+
+    @property
+    def stats(self) -> EngineStats:
+        return self._ex.stats
+
+    @property
+    def certify(self):
+        return self._ex.certify
+
+    @certify.setter
+    def certify(self, hook):
+        self._ex.certify = hook
+
+    @property
+    def state_scrub(self) -> str:
+        return self._ex.state_scrub
+
+    @state_scrub.setter
+    def state_scrub(self, mode: str):
+        if mode not in ("off", "detect", "rollback"):
+            raise ValueError(f"state_scrub must be off|detect|rollback, "
+                             f"got {mode!r}")
+        self._ex.state_scrub = mode
+
+    @property
+    def state_events(self):
+        return self._ex.state_events
+
+    @property
+    def dependability(self):
+        return self._ex.dependability
+
+    @property
+    def _snapshot(self):
+        return self._ex._snapshot
+
+    @_snapshot.setter
+    def _snapshot(self, value):
+        self._ex._snapshot = value
+
+    # ------------------------------------------------------------ lifecycle
     def reset(self, params=None):
-        """Return the engine's run state (queue, slots, cache, per-run stats)
-        to fresh, optionally with new (same-shaped) params.  Lifetime
-        dependability counters (``self.dependability``) survive resets — a
-        campaign accumulates verdicts across many reset+run trials.
-        Campaigns reuse one engine across trials so the jitted prefill/decode
-        stay compiled; swapping params is free because they are traced
-        arguments, not constants."""
-        if params is not None:
-            self.params = params
-        self.queue.clear()
-        self.active.clear()
-        self.slot_pos[:] = 0
-        self.slot_remaining[:] = 0
-        self.stats = EngineStats()
-        self.cache = model_api.init_cache(self.cfg, self.capacity, self.max_len)
-        self.tokens = jnp.zeros((self.capacity,), jnp.int32)
-        self._snapshot = None
-        self._snapshot_step = 0
-        self._since_snapshot = []
-        self._expected_check = None
-        self.state_events = []
+        """Return the engine's run state (channels, slots, cache, per-run
+        stats) to fresh, optionally with new (same-shaped) params.  Lifetime
+        dependability counters survive resets; compiled fns are kept."""
+        self._ex.reset(params=params)
+
+    def submit(self, req: Request):
+        self._ex.submit(req)
+
+    def cancel(self, uid: int) -> bool:
+        """Evict a request from whichever stage holds it (deadline/abort
+        path); True if it was found live anywhere in the pipeline."""
+        return self._ex.cancel(uid)
+
+    def step(self) -> List[Request]:
+        """One cooperative pump of every stage; returns requests that
+        cleared the release stage this cycle."""
+        return self._ex.step()
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        """Drain the pipeline."""
+        return self._ex.run(max_steps=max_steps)
 
     # ------------------------------------------------------- dependability
-    def _device_state(self) -> dict:
-        """The device-resident decode state the scrub covers (the host-side
-        slot bookkeeping lives in ECC'd host memory in the deployment this
-        models, so it is outside the SEU threat surface)."""
-        return {"cache": self.cache, "tokens": self.tokens}
-
-    def _refresh_state_check(self):
-        """Re-checksum after a legitimate mutation — the running 'expected'
-        fingerprint every later scrub compares against."""
-        if self.state_scrub != "off":
-            self._expected_check = _state_checksums(self._device_state())
-
     def scrub_decode_state(self) -> bool:
-        """Verify the live decode state against the post-mutation checksum;
-        True == clean.  A mismatch means an SEU struck the KV cache /
-        recurrent state or the token buffer *between* engine steps — the
-        transient site no weight scrub can see."""
-        if self._expected_check is None:
-            return True
-        fresh = _state_checksums(self._device_state())
-        clean = _checks_equal(fresh, self._expected_check)
-        self.record_dependability({
-            "faults_detected": jnp.int32(0 if clean else 1),
-            "checks_run": jnp.int32(1)})
-        return clean
-
-    def _scrub_and_recover(self):
-        """The per-step scrub: detect, and under ``rollback`` restore the
-        last verified snapshot (checkpoint/restart at decode granularity).
-        Appends one event per detection so fleets/campaigns can account
-        recoveries and measure recovery latency."""
-        if self.scrub_decode_state():
-            return
-        event = {"step": self.stats.steps, "recovered": False,
-                 "seconds": 0.0, "steps_replayed": 0}
-        if self.state_scrub == "rollback" and self._snapshot is not None:
-            t0 = time.perf_counter()
-            try:
-                event["steps_replayed"] = self.restore_snapshot()
-                event["recovered"] = True
-                event["seconds"] = time.perf_counter() - t0
-                self.record_dependability({"faults_recovered": jnp.int32(1)})
-            except RuntimeError:
-                # snapshot itself failed verification — leave recovered
-                # False; the supervisor's drain+replay is the fallback
-                pass
-        if not event["recovered"]:
-            # accept the corrupted fingerprint as the new baseline so one
-            # strike raises one alarm, not one per remaining step
-            self._refresh_state_check()
-        self.state_events.append(event)
+        return self._ex.scrub_decode_state()
 
     def drain_state_events(self) -> List[dict]:
-        ev, self.state_events = self.state_events, []
-        return ev
+        return self._ex.drain_state_events()
 
     def record_dependability(self, stats: dict):
-        """Fold a DependabilityStats pytree (from dependable ops or a
-        campaign's detection verdicts) into the engine-lifetime counters."""
-        self.dependability = DependabilityStats.merge(self.dependability, stats)
+        self._ex.record_dependability(stats)
+
+    def strike(self, site: str, fault, key) -> None:
+        """Per-stage SEU injection (campaign drill surface)."""
+        self._ex.strike(site, fault, key)
 
     def dependability_report(self) -> dict:
         """Host-side dependability summary: detection counters + the
         replay/snapshot state a campaign needs to judge recovery cost."""
-        out = DependabilityStats.to_host(self.dependability)
-        out.update(steps=self.stats.steps, replays=self.stats.replays,
-                   tokens_out=self.stats.tokens_out,
-                   snapshot_every=self.snapshot_every,
-                   state_scrub=self.state_scrub,
-                   state_events_pending=len(self.state_events))
+        from repro.core.dependability import DependabilityStats
+        ex = self._ex
+        out = DependabilityStats.to_host(ex.dependability)
+        out.update(steps=ex.stats.steps, replays=ex.stats.replays,
+                   tokens_out=ex.stats.tokens_out,
+                   snapshot_every=ex.snapshot_every,
+                   state_scrub=ex.state_scrub,
+                   state_events_pending=len(ex.state_events))
         return out
 
-    # ------------------------------------------------------------- admission
-    def submit(self, req: Request):
-        req.submitted_at = time.time()
-        self.queue.append(req)
-
-    def _free_slots(self) -> List[int]:
-        return [s for s in range(self.capacity) if s not in self.active]
-
-    def cancel(self, uid: int) -> bool:
-        """Evict a request from the queue or its slot (deadline/abort path).
-        The slot's cache rows go stale but are overwritten by the next
-        admission's prefill.  Also purged from snapshot bookkeeping so a
-        later ``restore_snapshot`` cannot resurrect cancelled work.
-        Returns True if the request was found live (queued or decoding)."""
-        self._since_snapshot = [r for r in self._since_snapshot
-                                if r.uid != uid]
-        if self._snapshot is not None:
-            for slot, r in list(self._snapshot["active"].items()):
-                if r.uid == uid:
-                    del self._snapshot["active"][slot]
-                    del self._snapshot["outputs"][slot]
-        for i, r in enumerate(self.queue):
-            if r.uid == uid:
-                del self.queue[i]
-                return True
-        for slot, r in list(self.active.items()):
-            if r.uid == uid:
-                del self.active[slot]
-                self.slot_remaining[slot] = 0
-                return True
-        return False
-
-    def _admit(self) -> List[Request]:
-        """Prefill queued requests into free slots (continuous batching).
-        Returns requests that finished during admission (prompt already
-        produced their only token)."""
-        finished: List[Request] = []
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.popleft()
-            self._since_snapshot.append(req)
-            prompt = req.prompt[: self.max_len - req.max_new_tokens]
-            # attention caches mask past each row's length, so right-padding
-            # to a bucket is free; recurrent state integrates every token it
-            # sees, so state families must prefill the exact prompt (one
-            # compile per distinct length instead of per bucket)
-            if self.cfg.recurrent is not None:
-                pad = len(prompt)
-            else:
-                pad = -(-len(prompt) // self.prefill_pad) * self.prefill_pad
-            toks = jnp.asarray(
-                [prompt + [0] * (pad - len(prompt))], jnp.int32)
-            logits, cache1 = self._prefill(self.params, toks)
-            # write this request's prefix rows into the batch cache
-            self.cache = _cache_write_slot(
-                self.cfg, self.cache, cache1, slot, len(prompt), self.max_len)
-            nxt = int(jnp.argmax(logits[0, len(prompt) - 1]))
-            self.tokens = self.tokens.at[slot].set(nxt)
-            self.slot_pos[slot] = len(prompt)
-            # the prefill itself produced the first new token
-            self.slot_remaining[slot] = req.max_new_tokens - 1
-            req.output = [nxt]
-            self.active[slot] = req
-            if self.slot_remaining[slot] <= 0:
-                req.finished_at = time.time()
-                del self.active[slot]
-                finished.append(req)
-        return finished
-
-    # ----------------------------------------------------------------- steps
-    def step(self) -> List[Request]:
-        """One decode step for every active slot; returns requests that
-        finished this step (admission-time finishes included)."""
-        # scrub BEFORE this step consumes the state (and before admission
-        # mutates it): anything that changed since the last legitimate
-        # mutation is an SEU, and under "rollback" we restart from the
-        # last verified snapshot instead of decoding from corrupted state
-        if self.state_scrub != "off" and self.active:
-            self._scrub_and_recover()
-        finished = self._admit()
-        if not self.active:
-            self._refresh_state_check()
-            return finished
-        if self.stats.steps % self.snapshot_every == 0:
-            self._take_snapshot()
-        nxt, self.cache = self._decode(self.params, self.tokens, self.cache)
-        self.tokens = nxt
-        self.stats.steps += 1
-        nxt_host = np.asarray(nxt)
-        done_slots = []
-        for slot, req in list(self.active.items()):
-            req.output.append(int(nxt_host[slot]))
-            self.slot_pos[slot] += 1
-            self.slot_remaining[slot] -= 1
-            self.stats.tokens_out += 1
-            if (self.slot_remaining[slot] <= 0
-                    or int(nxt_host[slot]) == self.eos_id
-                    or self.slot_pos[slot] >= self.max_len - 1):
-                req.finished_at = time.time()
-                done_slots.append(slot)
-        for slot in done_slots:
-            finished.append(self.active.pop(slot))
-        self._refresh_state_check()
-        return finished
-
-    def run(self, max_steps: int = 10_000) -> EngineStats:
-        """Drain queue + active set."""
-        while (self.queue or self.active) and self.stats.steps < max_steps:
-            self.step()
-        return self.stats
-
     # ----------------------------------------------------- fault tolerance
-    def _take_snapshot(self):
-        self._snapshot = {
-            "cache": self.cache,
-            "tokens": self.tokens,
-            "slot_pos": self.slot_pos.copy(),
-            "slot_remaining": self.slot_remaining.copy(),
-            "active": dict(self.active),
-            "outputs": {s: list(r.output) for s, r in self.active.items()},
-            "steps": self.stats.steps,
-            "tokens_out": self.stats.tokens_out,
-            # golden-snapshot integrity: checksummed at capture so a later
-            # restore can refuse a snapshot that was itself struck
-            "check": (_state_checksums(
-                {"cache": self.cache, "tokens": self.tokens})
-                if self.state_scrub != "off" else None),
-        }
-        self._snapshot_step = self.stats.steps
-        self._since_snapshot = []
-
     def restore_snapshot(self) -> int:
-        """Roll back to the last snapshot (device-fault recovery path).
-
-        The snapshot round-trips the *whole* decode state: cache, token
-        buffer, per-slot bookkeeping, active-set membership, request outputs
-        and the step/token counters — so ``tokens_per_step()`` and token
-        accounting stay exact across a replay, and requests that finished or
-        were admitted after the snapshot are correctly re-decoded / requeued.
-        ``replays`` and ``faults_detected`` are lifetime counters and are
-        never rolled back.
-
-        Returns the number of steps replayed (lost work bound =
-        snapshot_every).
-        """
-        if self._snapshot is None:
-            raise RuntimeError("no snapshot taken yet")
-        snap = self._snapshot
-        if snap["check"] is not None:
-            fresh = _state_checksums(
-                {"cache": snap["cache"], "tokens": snap["tokens"]})
-            if not _checks_equal(fresh, snap["check"]):
-                raise RuntimeError(
-                    "snapshot failed checksum verification (SEU struck the "
-                    "golden snapshot itself) — refusing to restore; escalate "
-                    "to drain + failover")
-        self.cache = snap["cache"]
-        self.tokens = snap["tokens"]
-        self.slot_pos = snap["slot_pos"].copy()
-        self.slot_remaining = snap["slot_remaining"].copy()
-        # active set as of the snapshot: resurrects requests that finished
-        # after it (their post-snapshot tokens are suspect) and drops ones
-        # admitted after it (requeued below; the cache rollback erased their
-        # prefill rows)
-        self.active = dict(snap["active"])
-        for s, req in self.active.items():
-            req.output = list(snap["outputs"][s])
-            req.finished_at = 0.0
-        for req in reversed(self._since_snapshot):
-            req.output = None
-            req.finished_at = 0.0
-            self.queue.appendleft(req)
-        self._since_snapshot = []
-        lost = self.stats.steps - snap["steps"]
-        self.stats.steps = snap["steps"]
-        self.stats.tokens_out = snap["tokens_out"]
-        self.stats.replays += 1
-        self._refresh_state_check()
-        return lost
-
-
-def _cache_write_slot(cfg, batch_cache, one_cache, slot: int, n: int,
-                      max_len: int):
-    """Copy a single-request prefill cache into row ``slot`` of the batch
-    cache.  Works on any family's cache pytree: leaves are (L, B, T, ...)
-    for KV or (L, B, ...) for recurrent state (batch at dim 1); per-row
-    length vectors are (B,) int (batch at dim 0); scalar counters are maxed.
-    """
-    def write(bc, oc):
-        if bc.ndim == 0:
-            return jnp.maximum(bc, oc)
-        if bc.ndim == 1 and jnp.issubdtype(bc.dtype, jnp.integer):
-            return bc.at[slot].set(n)          # per-row length vector
-        # one_cache leaf has batch=1 at dim 1
-        row = jax.lax.dynamic_slice_in_dim(oc, 0, 1, axis=1)
-        if bc.ndim >= 3 and bc.shape[2] != row.shape[2]:
-            # time-indexed leaf with different max_len: copy the prefix
-            pad = [(0, 0)] * row.ndim
-            pad[2] = (0, bc.shape[2] - row.shape[2])
-            row = jnp.pad(row, pad)
-        return jax.lax.dynamic_update_slice_in_dim(bc, row.astype(bc.dtype),
-                                                   slot, axis=1)
-
-    return jax.tree_util.tree_map(write, batch_cache, one_cache)
+        """Roll back to the last (checksum-verified) snapshot; returns the
+        number of steps replayed."""
+        return self._ex.restore_snapshot()

@@ -318,3 +318,42 @@ def test_expanded_sites_registry():
                         ["single_bitflip"], trials=2, seed=0,
                         supported=SUPPORTED)
     assert run_campaign(specs) == []
+
+
+# ---------------------------------------------------------------------------
+# (g) shipdet deploy-time weight checks (model-level w_check path)
+# ---------------------------------------------------------------------------
+
+
+def test_shipdet_weights_site_covered_by_deploy_checks():
+    """Model-level weight-SEU coverage via shipped checksums
+    (shipdet.deploy_checks): ABFT layers verify live weights against the
+    deploy-time values (detect, zero SDC), CKPT layers additionally roll
+    back to the golden weights (heal)."""
+    case = build_case("shipdet", 0)
+    fault = resolve_fault_model("single_bitflip")
+
+    spec = CampaignSpec("shipdet", Policy.ABFT, "weights",
+                        "single_bitflip", trials=20, seed=0)
+    det, mis = case.run_trials(Policy.ABFT, "weights", fault.apply,
+                               trial_keys(spec))
+    counts = classify_counts(det, mis)
+    assert counts["sdc"] == 0
+    # every flip that manifested in the output was detected
+    assert counts["detected_uncorrected"] + counts["detected_corrected"] > 0
+    assert not np.logical_and(~det, mis).any()
+
+    spec = CampaignSpec("shipdet", Policy.CKPT, "weights",
+                        "single_bitflip", trials=20, seed=0)
+    det, mis = case.run_trials(Policy.CKPT, "weights", fault.apply,
+                               trial_keys(spec))
+    counts = classify_counts(det, mis)
+    assert counts["sdc"] == 0
+    assert counts["detected_uncorrected"] == 0     # rollback healed them all
+    assert counts["detected_corrected"] > 0
+
+    spec = CampaignSpec("shipdet", Policy.NONE, "weights",
+                        "single_bitflip", trials=20, seed=0)
+    det, mis = case.run_trials(Policy.NONE, "weights", fault.apply,
+                               trial_keys(spec))
+    assert classify_counts(det, mis)["sdc"] > 0    # undefended baseline

@@ -1,0 +1,318 @@
+"""Streaming dataflow executor: queue/stage primitives, continuous-batching
+bit-identity with mid-decode joins across model families, per-stage fault
+injection, the certify release gate, and the pad-and-step drain barrier."""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import fault_injection as fi
+from repro.models import api as model_api
+from repro.models.config import reduced
+from repro.runtime import dataflow as df
+from repro.runtime.serving import Engine, Request
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Channel / stage primitives
+# ---------------------------------------------------------------------------
+
+
+def test_channel_fifo_and_capacity():
+    ch = df.Channel(2, "t")
+    assert ch.try_put(1) and ch.try_put(2)
+    assert ch.full() and not ch.try_put(3)
+    assert ch.try_get() == 1
+    assert ch.try_put(3)
+    assert [ch.try_get(), ch.try_get()] == [2, 3]
+    assert df.Channel.is_empty_token(ch.try_get())
+
+
+def test_channel_unbounded_and_drain():
+    ch = df.Channel(0)
+    for i in range(100):
+        assert ch.try_put(i)
+    assert not ch.full()
+    assert len(ch) == 100
+    assert ch.drain() == list(range(100))
+    assert len(ch) == 0
+
+
+def test_channel_blocking_put_unblocks_on_get():
+    ch = df.Channel(1)
+    ch.put("a")
+    got = []
+
+    def producer():
+        ch.put("b")               # blocks until the consumer makes room
+        got.append("sent")
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not got                # still blocked at capacity
+    assert ch.get() == "a"
+    t.join(timeout=2.0)
+    assert got == ["sent"] and ch.get() == "b"
+
+
+def test_channel_close_raises_closed():
+    ch = df.Channel(1)
+    ch.close()
+    with pytest.raises(df.Closed):
+        ch.put(1)
+    with pytest.raises(df.Closed):
+        ch.get()
+
+
+def test_source_stage_cooperative_pump_is_ordered():
+    out = df.Channel(3)
+    stage = df.SourceStage(lambda i: i * 10, out, start=4)
+    assert stage.pump()           # fills to capacity, then parks the next
+    assert list(out) == [40, 50, 60]
+    assert out.try_get() == 40
+    stage.pump()
+    assert list(out) == [50, 60, 70]
+
+
+def test_threaded_source_streams_deterministically():
+    out = df.Channel(2)
+    driver = df.ThreadedSource(df.SourceStage(lambda i: i, out)).start()
+    assert [out.get() for _ in range(20)] == list(range(20))
+    driver.close()
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: bit-identity with requests joining mid-decode
+# ---------------------------------------------------------------------------
+
+
+def greedy_reference(cfg, params, prompt, n_new, max_len=96):
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, cache = model_api.prefill(cfg, params, toks, max_len)
+    out = [int(jnp.argmax(logits[0, len(prompt) - 1]))]
+    tok = jnp.asarray([out[-1]], jnp.int32)
+    for _ in range(n_new - 1):
+        logits, cache = model_api.decode_step(cfg, params, tok, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+FAMILY_ARCHS = ["smollm-135m", "rwkv6-1.6b", "recurrentgemma-2b"]
+
+
+@pytest.fixture(scope="module", params=FAMILY_ARCHS)
+def family(request):
+    cfg = reduced(registry.get(request.param))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_mid_decode_joins_are_bit_identical(family):
+    """Requests that join the slotted batch while neighbors are mid-decode
+    must produce exactly the tokens a solo greedy decode produces — the
+    continuous-batching invariant, across transformer/rwkv/hybrid."""
+    cfg, params = family
+    early = [[5, 9, 2], [3, 1, 4, 1]]
+    late = [[2, 7, 1], [8, 8]]
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8)
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=8)
+            for i, p in enumerate(early)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()                       # both early requests mid-decode
+    late_reqs = [Request(uid=10 + i, prompt=list(p), max_new_tokens=8)
+                 for i, p in enumerate(late)]
+    for r in late_reqs:
+        eng.submit(r)                    # join as early slots free up
+    eng.run()
+    for r, p in zip(reqs + late_reqs, early + late):
+        assert r.output == greedy_reference(cfg, params, p, 8), f"uid {r.uid}"
+
+
+def test_drain_barrier_changes_schedule_not_tokens(family):
+    """The pad-and-step baseline mode (drain_barrier) must decode more steps
+    on a mixed-length trace (idle slots) yet emit the identical streams —
+    scheduling policy can never change tokens."""
+    cfg, params = family
+    prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7], [8, 8, 6]]
+    budgets = [2, 8, 2, 8]
+
+    def serve(drain):
+        eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                     drain_barrier=drain)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, budgets))]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [list(r.output) for r in reqs], eng.stats.steps
+
+    streamed, s_steps = serve(False)
+    padded, p_steps = serve(True)
+    assert streamed == padded
+    assert p_steps > s_steps             # the barrier wastes slot-steps
+
+
+# ---------------------------------------------------------------------------
+# Pipeline structure, per-stage injection, certify gate
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduced(registry.get("smollm-135m"))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_stage_topology_and_in_flight_order(smollm):
+    cfg, params = smollm
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8)
+    ex = eng.executor
+    assert [s.name for s in ex.stages] == [
+        "admit", "prefill", "decode", "certify", "release"]
+    reqs = [Request(uid=i, prompt=[1 + i, 2], max_new_tokens=4)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    assert [r.uid for r in ex.in_flight()] == [0, 1, 2, 3]
+    eng.step()
+    # two in decode slots, two still queued — stage-then-slot order
+    assert [r.uid for r in ex.in_flight()] == [2, 3, 0, 1]
+    eng.run()
+
+
+def test_strike_decode_state_is_caught_by_scrub(smollm):
+    """Per-stage injection drills the decode stage's token buffer; the
+    pre-decode scrub guard must catch it before the next step consumes it."""
+    cfg, params = smollm
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                 snapshot_every=2, state_scrub="rollback")
+    eng.submit(Request(uid=0, prompt=[5, 9, 2], max_new_tokens=6))
+    eng.step()
+    eng.step()
+    eng.strike("decode_state", fi.flip_one_bit, jax.random.key(3))
+    eng.run()
+    events = eng.drain_state_events()
+    assert len(events) == 1 and events[0]["recovered"]
+
+
+def test_strike_kv_cache_and_weights_route_to_owners(smollm):
+    cfg, params = smollm
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8)
+    before_cache = jax.tree_util.tree_leaves(eng.cache)
+    before_params = jax.tree_util.tree_leaves(eng.params)
+    eng.submit(Request(uid=0, prompt=[5, 9, 2], max_new_tokens=4))
+    eng.step()
+    eng.strike("kv_cache", fi.flip_one_bit, jax.random.key(1))
+    eng.strike("weights", fi.flip_one_bit, jax.random.key(2))
+    after_cache = jax.tree_util.tree_leaves(eng.cache)
+    after_params = jax.tree_util.tree_leaves(eng.params)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(before_cache, after_cache))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(before_params, after_params))
+    with pytest.raises(ValueError, match="no stage owns"):
+        eng.strike("flux_capacitor", fi.flip_one_bit, jax.random.key(0))
+
+
+def test_certify_hook_withholds_and_releases(smollm):
+    """The certify stage is the release gate: a False-returning hook keeps
+    finished requests out of step()'s released stream (the hook's owner has
+    custody); a True-returning hook passes them through."""
+    cfg, params = smollm
+    held = []
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                 certify=lambda req: (held.append(req), False)[1])
+    reqs = [Request(uid=i, prompt=[1 + i, 5], max_new_tokens=3)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    released = []
+    while eng.executor.busy():
+        released += eng.step()
+    assert released == []
+    assert sorted(r.uid for r in held) == [0, 1]
+    assert all(r.finished_at > 0 for r in held)   # finished, just not released
+
+    eng.certify = lambda req: True
+    eng.reset()
+    for r in reqs:
+        r.output = None
+        r.finished_at = 0.0
+        eng.submit(r)
+    released = []
+    while eng.executor.busy():
+        released += eng.step()
+    assert sorted(r.uid for r in released) == [0, 1]
+
+
+def test_fleet_release_gate_lives_in_certify_stage(smollm):
+    """A scrub-gated fleet must flow finished requests through the replica
+    engines' certify stages: engines release nothing themselves, the
+    replica's uncertified list takes custody until the weight scrub."""
+    from repro.core.dependability import Policy
+    from repro.fleet import Fleet
+    cfg, params = smollm
+    fleet = Fleet(cfg, params, n_replicas=2, policy=Policy.ABFT,
+                  capacity=2, max_len=96, prefill_pad=8, scrub_every=1000)
+    try:
+        assert all(r.engine.certify is not None for r in fleet.replicas)
+        req = Request(uid=0, prompt=[5, 9, 2], max_new_tokens=3)
+        assert fleet.submit(req)
+        for _ in range(10):
+            fleet.tick()
+        # finished but withheld: certification (scrub cadence) never came
+        assert req.finished_at > 0
+        assert req.uid not in fleet.released
+        assert any(any(q.uid == req.uid for q in r.uncertified)
+                   for r in fleet.replicas)
+        fleet.run()                       # final certification settles it
+        assert req.uid in fleet.released
+    finally:
+        fleet.close()
+
+
+def test_failover_bit_exact_hybrid_family():
+    """Fleet failover replay on the staged executor, hybrid (griffin)
+    family: killing a replica mid-decode must not change any released
+    token."""
+    from repro.core.dependability import Policy
+    from repro.fleet import Fleet, ReplicaState
+    cfg = reduced(registry.get("recurrentgemma-2b"))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7]]
+    fleet = Fleet(cfg, params, n_replicas=2, policy=Policy.NONE,
+                  capacity=2, max_len=96, prefill_pad=8)
+    try:
+        def serve(kill):
+            fleet.reset()
+            reqs = [Request(uid=i, prompt=list(p), max_new_tokens=5)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                assert fleet.submit(r)
+            if kill:
+                fleet.tick()
+                fleet.tick()
+                fleet.kill_replica(0)
+            fleet.run()
+            return [list(r.output) for r in reqs]
+
+        golden = serve(kill=False)
+        replayed = serve(kill=True)
+        assert fleet.replicas[0].state is ReplicaState.DEAD
+        assert fleet.metrics.failovers > 0
+        assert replayed == golden
+    finally:
+        fleet.close()
