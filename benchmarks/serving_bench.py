@@ -80,13 +80,13 @@ def _latency_stats(latencies):
 
 
 def run_engine(cfg, params, trace, capacity, max_len, prefill_pad,
-               drain_barrier=False, compiled=None):
+               drain_barrier=False, compiled=None, multi_step=1):
     """Serve the trace through the staged engine (continuous batching, or
     the pad-and-step baseline under ``drain_barrier``); returns
     (report, reqs, compiled-pair)."""
     eng = Engine(cfg, params, capacity=capacity, max_len=max_len,
                  prefill_pad=prefill_pad, drain_barrier=drain_barrier,
-                 compiled=compiled)
+                 compiled=compiled, multi_step=multi_step)
 
     def serve():
         eng.reset()
@@ -123,6 +123,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--prefill-pad", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--multi-step", type=int, default=4,
+                    help="decode-dispatch window: steps decoded on device "
+                         "per host readback (1 = per-step dispatch)")
+    ap.add_argument("--quant-kv", action="store_true",
+                    help="serve with the int8-quantized KV cache "
+                         "(ArchConfig.quant_kv)")
     ap.add_argument("--check-bit-identity", action="store_true",
                     help="also verify streamed outputs == greedy reference "
                          "(slow: one reference decode per request)")
@@ -130,16 +136,34 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     cfg = reduced(registry.get(args.arch))
+    if args.quant_kv:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, quant_kv=True)
     params = model_api.init_params(cfg, jax.random.key(args.seed))
     trace = make_trace(cfg, args.requests, args.seed)
 
     streamed, reqs, compiled = run_engine(
-        cfg, params, trace, args.capacity, args.max_len, args.prefill_pad)
+        cfg, params, trace, args.capacity, args.max_len, args.prefill_pad,
+        multi_step=args.multi_step)
     # same compiled (decode, prefill) pair: the baseline pays no extra
     # compiles, so the ratio isolates the admission policy
     padded, _, _ = run_engine(
         cfg, params, trace, args.capacity, args.max_len, args.prefill_pad,
         drain_barrier=True, compiled=compiled)
+
+    multi_step_bit_identical = None
+    per_step = None
+    if args.multi_step > 1:
+        # the multi-step window must be a pure dispatch optimization: the
+        # per-step schedule (N=1) serves the same trace and every token
+        # stream must match bit-for-bit
+        per_step, reqs_1, _ = run_engine(
+            cfg, params, trace, args.capacity, args.max_len,
+            args.prefill_pad, compiled=compiled, multi_step=1)
+        multi_step_bit_identical = all(
+            a.output == b.output for a, b in zip(reqs, reqs_1))
+        assert multi_step_bit_identical, \
+            "multi-step decode changed tokens vs per-step dispatch"
 
     bit_identical = None
     if args.check_bit_identity:
@@ -153,17 +177,28 @@ def main(argv=None) -> int:
         "capacity": args.capacity,
         "requests": args.requests,
         "seed": args.seed,
+        "multi_step": args.multi_step,
+        "quant_kv": bool(args.quant_kv),
         "trace_max_new": [n for _, n in trace],
         "streamed": streamed,
+        "per_step": per_step,
         "padded": padded,
         "speedup_tokens_per_s": round(speedup, 3),
+        "multi_step_speedup": (round(streamed["tokens_per_s"]
+                                     / max(per_step["tokens_per_s"], 1e-9), 3)
+                               if per_step else None),
+        "multi_step_bit_identical": multi_step_bit_identical,
         "decode_bit_identical": bit_identical,
     }
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2) + "\n")
     print(f"streamed: {streamed['tokens_per_s']:8.1f} tok/s  "
           f"occupancy {streamed['occupancy']:.2f}  "
-          f"p99 {streamed['p99_latency_s']:.2f}s")
+          f"p99 {streamed['p99_latency_s']:.2f}s  "
+          f"(multi_step={args.multi_step})")
+    if per_step is not None:
+        print(f"per-step: {per_step['tokens_per_s']:8.1f} tok/s  "
+              f"(bit-identical to multi-step: {multi_step_bit_identical})")
     print(f"padded:   {padded['tokens_per_s']:8.1f} tok/s  "
           f"occupancy {padded['occupancy']:.2f}  "
           f"p99 {padded['p99_latency_s']:.2f}s")

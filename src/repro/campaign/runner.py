@@ -48,6 +48,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Sequence, Tuple
 
+import dataclasses
 import zlib
 
 import jax
@@ -60,7 +61,7 @@ from repro.core import abft as abft_mod
 from repro.core import fault_injection as fi
 from repro.core import redundancy
 from repro.core.dependability import (
-    Policy, dependable_qconv2d, dependable_qmatmul)
+    Policy, dependable_attention, dependable_qconv2d, dependable_qmatmul)
 from repro.core.fault_injection import _as_bits
 
 _IDENTITY = lambda x, key: x
@@ -159,9 +160,13 @@ class _KernelCase:
         return y, st["faults_detected"] > 0
 
     def run_trials(self, policy, site, fault, keys):
-        golden, _ = self._one(policy, site, _IDENTITY, keys[0])
-
+        # golden is computed INSIDE the jitted trial program (not hoisted
+        # eagerly): for the float case XLA fusion perturbs low-order output
+        # bits between compilation contexts, so a bit-exact mismatch verdict
+        # needs both streams from one program (integer cases are bit-stable
+        # either way, and CSE makes the in-program golden free)
         def trial(key):
+            golden, _ = self._one(policy, site, _IDENTITY, key)
             y, detected = self._one(policy, site, fault, key)
             return detected, _bitwise_mismatch(y, golden)
 
@@ -219,6 +224,37 @@ class QConv2dCase(_KernelCase):
         return dependable_qconv2d(
             policy, x_q, self.x_zp, w_q, self.bias, self.scale, self.out_zp,
             inject=inject, w_check=w_check, ckpt=ckpt, backend=self.backend)
+
+
+class FlashAttnCase(_KernelCase):
+    """Float flash attention under the two-tier ABFT check — the one hot
+    kernel the integer-checksum story cannot absorb (kernels/flashattn,
+    ``dependable_attention``).
+
+    Site mapping onto the kernel-case hooks: ``x_q`` is the query tensor
+    (the ``activations`` site strikes an operand, covered at campaign level
+    by the DMR/TMR replicas like every operand SEU); the ``accumulator``
+    site strikes the kernel's *emitted output* — the float analog of the
+    int32 accumulator hook — where the fused exact bit checksum certifies
+    detection of every flip, including the low-mantissa ones a tolerance
+    check must wave through."""
+
+    name = "flashattn"
+    sites = ("accumulator", "activations")
+
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 b: int = 1, h: int = 2, s: int = 24, hd: int = 16):
+        self.backend = backend
+        kq, kk, kv = jax.random.split(key, 3)
+        self.x_q = jax.random.normal(kq, (b, h, s, hd), jnp.float32)
+        self.k = jax.random.normal(kk, (b, h, s, hd), jnp.float32)
+        self.v = jax.random.normal(kv, (b, h, s, hd), jnp.float32)
+        self.w_q = None          # attention has no weight operand
+        self.w_check = None
+
+    def _op(self, policy, x_q, w_q, inject, w_check):
+        return dependable_attention(policy, x_q, self.k, self.v,
+                                    inject=inject, backend=self.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -407,6 +443,7 @@ class ServingCase:
     name = "serving"
     sites = ("weights", "kv_cache", "decode_state")
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR, Policy.CKPT)
+    quant_kv = False    # subclass hook: run on the int8-quantized KV cache
 
     # the tick (engine step) after which mid-run state strikes land; >0 so
     # prefill and at least one decode step have populated real state
@@ -422,6 +459,8 @@ class ServingCase:
         self._Request = Request
         self._abft = abft_api
         self.cfg = reduced(registry.get(arch))
+        if self.quant_kv:
+            self.cfg = dataclasses.replace(self.cfg, quant_kv=True)
         self.params = model_api.init_params(self.cfg, key)
         self.engine = Engine(self.cfg, self.params, capacity=2, max_len=64,
                              prefill_pad=8, snapshot_every=2, backend=backend)
@@ -534,6 +573,21 @@ class ServingCase:
         return self._recovery.drain()
 
 
+class ServingInt8KVCase(ServingCase):
+    """ServingCase with the int8-quantized KV cache (``ArchConfig.quant_kv``)
+    — the raw-speed decode configuration.  The ``kv_cache`` site now strikes
+    a *mixed pytree* (int8 rows plus float32 per-row scales), the worst case
+    for detection: a scale-tensor SEU perturbs every value dequantized from
+    its row.  The engine's decode-state scrub is dtype-uniform (exact
+    mod-2^32 bit checksums), so ABFT detects and CKPT snapshot-rollback
+    heals these strikes exactly as it does for the f32 cache — the campaign
+    rows certify that quantizing the cache does not narrow the dependability
+    envelope."""
+
+    name = "serving_int8kv"
+    quant_kv = True
+
+
 class FleetCase:
     """Fleet-level end-to-end drill: an SEU strikes ONE replica of a live
     multi-replica serving fleet (src/repro/fleet/) and the campaign judges
@@ -640,9 +694,11 @@ class FleetCase:
 CASES: Dict[str, type] = {
     "qmatmul": QMatmulCase,
     "qconv2d": QConv2dCase,
+    "flashattn": FlashAttnCase,
     "shipdet": ShipdetCase,
     "transformer": TransformerCase,
     "serving": ServingCase,
+    "serving_int8kv": ServingInt8KVCase,
     "fleet": FleetCase,
 }
 
@@ -740,9 +796,10 @@ def run_bit_sweep(workload: str, policies: Sequence[Policy],
         keys = jax.random.split(jax.random.fold_in(base, disc),
                                 ACC_BITS * trials_per_bit)
         keys = keys.reshape(ACC_BITS, trials_per_bit)
-        golden, _ = case._one(policy, "accumulator", _IDENTITY, keys[0, 0])
-
         def trial(bit, key):
+            # in-program golden: see _KernelCase.run_trials (float cases
+            # need both streams compiled together for bit-exact compare)
+            golden, _ = case._one(policy, "accumulator", _IDENTITY, key)
             fault = lambda x, k: fi.flip_bit_at(x, k, bit)
             y, det = case._one(policy, "accumulator", fault, key)
             return det, _bitwise_mismatch(y, golden)

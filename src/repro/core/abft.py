@@ -148,6 +148,23 @@ def verify_storage(params, checks):
     return jax.tree_util.tree_map(lambda a, b: a == b, fresh, checks)
 
 
+def output_row_checksums(x: jax.Array) -> jax.Array:
+    """``storage_checksums`` at row granularity: the exact mod-2^32 sum of
+    ``x``'s bit patterns over its last axis, uint32 with the last axis
+    reduced away.
+
+    This is the verification side of the float-op output checksum: a kernel
+    that emits its own per-row bit checksum alongside the output (e.g.
+    ``kernels.flashattn.flash_attention_checked``) lets the consumer compare
+    bit-exactly, so any single-bit flip of the *emitted output* is detected
+    with zero false positives/negatives — even though the float compute path
+    itself only admits tolerance-based checking.
+    """
+    from repro.core.fault_injection import _as_bits
+    bits, _ = _as_bits(jnp.asarray(x))
+    return jnp.sum(bits.astype(jnp.uint32), axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # Conv variant: checksum over output channels
 # ---------------------------------------------------------------------------

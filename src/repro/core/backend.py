@@ -62,6 +62,18 @@ class Backend:
           -> i32 (N,OH,OW,Cout): conv(x_q - x_zp, w_q)
       conv_acc_checksum(x_q, x_zp, w_q, w_check i32 (KH,KW,Cin,1),
                         stride, padding) -> (acc, want (N,OH,OW))
+
+    The attention entries cover the one float hot kernel (flash attention;
+    optional so out-of-tree integer-only backends stay valid):
+
+      attn(q (B,H,S,hd), k, v (B,KV,S,hd), *, causal, window)
+          -> (B,H,S,hd): fused causal/sliding-window attention
+      attn_checksum(q, k, v, *, causal, window) -> (out, check, csum)
+          out as above; ``check`` (B,H,S) f32 is an independently accumulated
+          rowsum_hd(out) column (tolerance-verified compute-path cover);
+          ``csum`` (B,H,S) u32 is the exact mod-2^32 bit checksum of the
+          emitted output rows (bit-exact output-integrity cover) — both
+          fused into the kernel on the pallas backend
     """
 
     name: str
@@ -70,6 +82,9 @@ class Backend:
     conv_acc: Callable[..., jax.Array]
     conv_acc_checksum: Callable[..., Tuple[jax.Array, jax.Array]]
     description: str = ""
+    attn: Optional[Callable[..., jax.Array]] = None
+    attn_checksum: Optional[
+        Callable[..., Tuple[jax.Array, jax.Array, jax.Array]]] = None
 
 
 _REGISTRY: Dict[str, Backend] = {}

@@ -197,6 +197,101 @@ def dependable_qmatmul(
     return run(inject), stats
 
 
+def dependable_attention(
+    policy: Policy,
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal=True, window=None,
+    inject=None, stats: Optional[dict] = None,
+    backend: backend_mod.BackendLike = None, tol: float = 1e-3,
+):
+    """Fused attention (B,H,S,hd) under a dependability policy — the float
+    twin of ``dependable_qmatmul`` covering the one hot kernel the integer
+    quantization story cannot absorb.
+
+    Float math admits no exact compute checksum, so ABFT here is two-tier
+    (see kernels/flashattn and docs/backends.md):
+
+      * a float check column accumulated *in the execution path* alongside
+        the output, verified as ``|rowsum_hd(out) - check| <= tol*(|check|+1)``
+        — tolerance-based, covers the softmax/accumulate compute path;
+      * an exact mod-2^32 bit checksum of the emitted output rows, verified
+        bit-for-bit — covers the emitted result itself, so any single bit
+        flip of the output is detected with zero false negatives (the float
+        tier alone would miss low-mantissa flips).
+
+    ``inject`` corrupts the kernel output (the campaign's activations site);
+    recovery recomputes flagged rows from the plain ``be.attn`` path, which
+    is bit-identical to the checked kernel's output (enforced by
+    tests/test_flashattn.py), so ABFT correction is bit-exact.
+    Returns (out, stats).
+    """
+    if stats is None:
+        stats = DependabilityStats.zero()
+    be = backend_mod.resolve(backend)
+    if be.attn is None or be.attn_checksum is None:
+        raise ValueError(f"backend {be.name!r} does not register attention")
+
+    def plain(inj):
+        out = be.attn(q, k, v, causal=causal, window=window)
+        if inj is not None:
+            out = inj(out)
+        return out
+
+    def row_ok_mask(out, check, csum):
+        bit_ok = abft_mod.output_row_checksums(out) == csum
+        flt_ok = jnp.abs(jnp.sum(out.astype(jnp.float32), axis=-1) - check) \
+            <= tol * (jnp.abs(check) + 1.0)
+        return bit_ok & flt_ok
+
+    # NOTE on recovery: integer ABFT recomputes under ``lax.cond`` because
+    # exact math is bit-stable across compilation contexts.  Float attention
+    # is not — a cond branch compiles as its own fused XLA program whose
+    # low-order bits can differ from the in-context result — so both float
+    # policies recompute *unconditionally in the same execution context* and
+    # select.  Eagerly the recompute dispatches the same ops (bit-identical);
+    # under jit/vmap both calls live in one program and CSE collapses them,
+    # so recovery is bit-exact and the recompute is free on the clean path.
+
+    if policy == Policy.ABFT:
+        out, check, csum = be.attn_checksum(q, k, v, causal=causal,
+                                            window=window)
+        if inject is not None:
+            out = inject(out)
+        row_ok = row_ok_mask(out, check, csum)
+        faults = jnp.sum(~row_ok).astype(jnp.int32)
+        fresh = be.attn(q, k, v, causal=causal, window=window)
+        out = jnp.where(row_ok[..., None], out, fresh)
+        ok = jnp.all(row_ok_mask(out, check, csum))
+        corrected = faults * ok.astype(jnp.int32)
+        return out, _bump(stats, faults, corrected)
+
+    if policy == Policy.CKPT:
+        # detect via the fused two-tier check, recover by re-executing the
+        # whole op from the operands instead of selective rows
+        out, check, csum = be.attn_checksum(q, k, v, causal=causal,
+                                            window=window)
+        if inject is not None:
+            out = inject(out)
+        detected = jnp.any(~row_ok_mask(out, check, csum))
+        fresh = be.attn(q, k, v, causal=causal, window=window)
+        out = jnp.where(detected, fresh, out)
+        recovered = detected & jnp.all(row_ok_mask(out, check, csum))
+        return out, _bump(stats, detected, False, recovered)
+
+    if policy == Policy.DMR:
+        out = plain(inject)
+        detected = ~redundancy.agree([out, plain(None)])
+        return out, _bump(stats, detected, False)
+
+    if policy == Policy.TMR:
+        r0, r1 = plain(inject), plain(None)
+        disagreed = ~redundancy.agree([r0, r1])
+        out = redundancy.vote([r0, r1, plain(None)])
+        return out, _bump(stats, disagreed, disagreed)
+
+    return plain(inject), stats
+
+
 def dependable_qconv2d(
     policy: Policy,
     x_q: jax.Array, x_zp: jax.Array, w_q: jax.Array, bias: jax.Array,

@@ -15,7 +15,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import abft as abft_mod
 from repro.core import backend as backend_mod
+from repro.kernels.flashattn.kernel import (
+    flash_attention as flash_attention_pallas,
+    flash_attention_checked as flash_attention_checked_pallas)
+from repro.kernels.flashattn.ref import attention_ref
 from repro.kernels.qconv2d.kernel import (
     qconv2d_acc as qconv2d_acc_pallas,
     qconv2d_acc_checksum as qconv2d_acc_checksum_pallas)
@@ -178,6 +183,93 @@ def _conv_acc_checksum_pallas(x_q, x_zp, w_q, w_check, stride, padding):
 
 
 # ---------------------------------------------------------------------------
+# attention — the float hot kernel, per backend
+#
+# Attention has no integer operand identity, so the checksummed entry is
+# two-tier (core/backend.py docstring): a float check column verified with
+# a tolerance plus an exact bit checksum of the emitted output rows.  On
+# the pallas backend both are fused into the kernel epilogue; jnp/ref
+# compute them as separate passes in the execution path, exactly as their
+# qmatmul checksums are separate dots.
+# ---------------------------------------------------------------------------
+
+
+def _attn_check_column(q, k, v, *, causal, window):
+    """Independent rowsum_hd(out) accumulation: softmax probabilities
+    contracted with rowsum_hd(v) — never touches the (hd-wide) output
+    accumulation it checks."""
+    import math
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    v1 = jnp.sum(jnp.repeat(v, G, axis=1).astype(jnp.float32), axis=-1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk) \
+        / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos >= qpos - window)
+    p = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+    return jnp.einsum("bhqk,bhk->bhq", p, v1)
+
+
+def _attn_jnp(q, k, v, *, causal=True, window=None):
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+def _attn_checksum_jnp(q, k, v, *, causal=True, window=None):
+    out = attention_ref(q, k, v, causal=causal, window=window)
+    check = _attn_check_column(q, k, v, causal=causal, window=window)
+    return out, check, abft_mod.output_row_checksums(out)
+
+
+def _attn_ref(q, k, v, *, causal=True, window=None):
+    """Independent oracle: explicit two-pass softmax (max/exp/normalize),
+    no ``jax.nn.softmax``."""
+    import math
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk) \
+        / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos >= qpos - window)
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)
+
+
+def _attn_checksum_ref(q, k, v, *, causal=True, window=None):
+    out = _attn_ref(q, k, v, causal=causal, window=window)
+    check = _attn_check_column(q, k, v, causal=causal, window=window)
+    return out, check, abft_mod.output_row_checksums(out)
+
+
+def _attn_pallas(q, k, v, *, causal=True, window=None):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=not _on_tpu())
+
+
+def _attn_checksum_pallas(q, k, v, *, causal=True, window=None):
+    return flash_attention_checked_pallas(q, k, v, causal=causal,
+                                          window=window,
+                                          interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
 # registration + convenience dispatchers
 # ---------------------------------------------------------------------------
 
@@ -188,6 +280,8 @@ for _be in (
         matmul_acc_checksum=_matmul_acc_checksum_jnp,
         conv_acc=_conv_acc_jnp,
         conv_acc_checksum=_conv_acc_checksum_jnp,
+        attn=_attn_jnp,
+        attn_checksum=_attn_checksum_jnp,
         description="XLA-native int8 dot_general / conv_general_dilated"),
     backend_mod.Backend(
         name="ref",
@@ -195,6 +289,8 @@ for _be in (
         matmul_acc_checksum=_matmul_acc_checksum_ref,
         conv_acc=_conv_acc_ref,
         conv_acc_checksum=_conv_acc_checksum_ref,
+        attn=_attn_ref,
+        attn_checksum=_attn_checksum_ref,
         description="independent jnp oracle (int32 upcast / tap loop)"),
     backend_mod.Backend(
         name="pallas",
@@ -202,6 +298,8 @@ for _be in (
         matmul_acc_checksum=_matmul_acc_checksum_pallas,
         conv_acc=_conv_acc_pallas,
         conv_acc_checksum=_conv_acc_checksum_pallas,
+        attn=_attn_pallas,
+        attn_checksum=_attn_checksum_pallas,
         description="Pallas TPU kernels with fused ABFT checksum "
                     "(interpret=True off-TPU)"),
 ):
@@ -232,3 +330,19 @@ def conv_acc_checksum(x_q, x_zp, w_q, w_check, stride=(1, 1), padding="SAME",
     """(acc, want) conv accumulator plus the fused per-pixel ABFT channel."""
     return backend_mod.resolve(backend).conv_acc_checksum(
         x_q, x_zp, w_q, w_check, stride, padding)
+
+
+def attn(q, k, v, *, causal=True, window=None,
+         backend: backend_mod.BackendLike = None):
+    """Fused attention (B,H,S,hd layout) on the selected backend."""
+    return backend_mod.resolve(backend).attn(q, k, v, causal=causal,
+                                             window=window)
+
+
+def attn_checksum(q, k, v, *, causal=True, window=None,
+                  backend: backend_mod.BackendLike = None):
+    """(out, check, csum): attention plus the two-tier ABFT check outputs
+    (float check column + exact output-row bit checksum), fused into the
+    kernel on the pallas backend."""
+    return backend_mod.resolve(backend).attn_checksum(q, k, v, causal=causal,
+                                                      window=window)

@@ -162,6 +162,172 @@ def flash_attention(
 
 
 # ---------------------------------------------------------------------------
+# Checked forward: fused two-tier ABFT outputs (docs/backends.md)
+#
+# Attention is float, so the exact mod-2^32 operand identity qmatmul enjoys
+# does not exist for the *compute* path.  The checked kernel therefore emits
+# two check outputs per query row, fused into the same pass:
+#
+#   check  (f32)  — an independent accumulation of rowsum_hd(out), carried
+#                   through the online softmax alongside m/l/acc
+#                   (c ← c·α + p · rowsum_hd(v)); verified with a tolerance,
+#                   this covers the compute path (MXU/accumulator faults that
+#                   perturb the math).
+#   csum  (u32)   — the exact per-row mod-2^32 sum of the emitted output's
+#                   bit patterns (``abft.storage_checksums`` at row
+#                   granularity), computed in the epilogue from the very
+#                   block written to HBM.  Verification is bit-exact, so ANY
+#                   single-bit flip of the output between kernel and consumer
+#                   is detected — zero false negatives, certifiable at 1.0.
+# ---------------------------------------------------------------------------
+
+
+def _flash_checked_kernel(q_ref, k_ref, v_ref, o_ref, chk_ref, csum_ref,
+                          m_ref, l_ref, acc_ref, c_ref, *,
+                          scale: float, seq_len: int, block_q: int,
+                          block_k: int, window: int | None, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+    intersects = True
+    if causal:
+        intersects = k_lo <= q_lo + block_q - 1
+    if window is not None:
+        intersects = jnp.logical_and(
+            intersects, k_lo + block_k - 1 >= q_lo - window)
+
+    @pl.when(intersects)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        vrow = k_lo + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(vrow < seq_len, v, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos >= qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        # in-path check column: contract the probabilities with rowsum_hd(v)
+        # — an accumulation independent of the (bq, hd) accumulator above,
+        # tracking rowsum_hd(acc) through the same online rescaling
+        v1 = jnp.sum(v, axis=-1)                          # (bk,)
+        c_ref[...] = c_ref[...] * alpha + jnp.sum(p * v1[None, :], axis=-1)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _epilogue():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        o_ref[0] = out
+        chk_ref[0] = c_ref[...] / l
+        if out.dtype == jnp.float32:
+            bits = jax.lax.bitcast_convert_type(out, jnp.uint32)
+        else:                                             # bf16 / f16 I/O
+            bits = jax.lax.bitcast_convert_type(out, jnp.uint16).astype(
+                jnp.uint32)
+        csum_ref[0] = jnp.sum(bits, axis=-1)              # wraps mod 2^32
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_checked(
+    q: jax.Array,            # (B, H, S, hd)
+    k: jax.Array,            # (B, KV, S, hd)
+    v: jax.Array,            # (B, KV, S, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Forward attention returning ``(out, check, csum)``.
+
+    ``out`` (B,H,S,hd) as ``flash_attention``; ``check`` (B,H,S) f32 is the
+    fused independent rowsum-of-output column (tolerance-verified);
+    ``csum`` (B,H,S) u32 is the exact per-row bit checksum of ``out``
+    (bit-exact verification; see ``core.abft.output_row_checksums``).
+    """
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    grid = (B * H, pl.cdiv(S, block_q), pl.cdiv(S, block_k))
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        h = bh % H
+        b = bh // H
+        return (b * KV + h // G, ki, 0)
+
+    def row_map(bh, qi, ki):
+        return (bh, qi)
+
+    qr = q.reshape(B * H, S, hd)
+    kr = k.reshape(B * KV, S, hd)
+    vr = v.reshape(B * KV, S, hd)
+    out, check, csum = pl.pallas_call(
+        functools.partial(_flash_checked_kernel, scale=scale, seq_len=S,
+                          block_q=block_q, block_k=block_k,
+                          window=window, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=[pl.BlockSpec((1, block_q, hd), q_map),
+                   pl.BlockSpec((1, block_q), row_map),
+                   pl.BlockSpec((1, block_q), row_map)],
+        out_shape=[jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+                   jax.ShapeDtypeStruct((B * H, S), jnp.float32),
+                   jax.ShapeDtypeStruct((B * H, S), jnp.uint32)],
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return (out.reshape(B, H, S, hd), check.reshape(B, H, S),
+            csum.reshape(B, H, S))
+
+
+# ---------------------------------------------------------------------------
 # Backward kernels (Dao 2022 two-pass formulation, TPU-adapted)
 #
 #   D  = rowsum(dO ∘ O)                       (computed outside, elementwise)

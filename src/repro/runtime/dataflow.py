@@ -81,6 +81,49 @@ def _checks_equal(a, b) -> bool:
         jax.tree_util.tree_map(lambda p, q: p == q, a, b)))
 
 
+# Multi-step decode windows: one jitted N-step scan per (decode fn, N,
+# eos, max_len).  Keyed on the decode fn *object* (a strong reference is
+# kept so ids cannot be recycled), which is how fleet replicas / benchmark
+# reps sharing a ``compiled`` pair also share one window compilation.
+_DECODE_WINDOW_CACHE: dict = {}
+
+
+def _decode_window_fn(decode_fn, n_steps: int, eos_id: int, max_len: int):
+    """Build (or fetch) the jitted N-step decode window.
+
+    The scan carries (tokens, cache, remaining, pos, active-mask) on device
+    and emits per-step (next-token, finished-mask) — join/EOS/max-len
+    accounting is evaluated in device-side masks, so the host reads back
+    once per window instead of once per step.  Every slot steps every
+    inner step (slot rows are independent and a later join splices whole
+    rows), which is exactly the per-step engine's behavior for slots that
+    finished but have not been re-filled yet.
+    """
+    key = (id(decode_fn), n_steps, eos_id, max_len)
+    hit = _DECODE_WINDOW_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+
+    def _window(params, tokens, cache, remaining, pos, active):
+        def body(carry, _):
+            tokens, cache, remaining, pos, active = carry
+            nxt, cache = decode_fn(params, tokens, cache)
+            remaining = jnp.where(active, remaining - 1, remaining)
+            pos = jnp.where(active, pos + 1, pos)
+            finished = active & ((remaining <= 0) | (nxt == eos_id)
+                                 | (pos >= max_len - 1))
+            return ((nxt, cache, remaining, pos, active & ~finished),
+                    (nxt, finished))
+        carry, emitted = jax.lax.scan(
+            body, (tokens, cache, remaining, pos, active),
+            None, length=n_steps)
+        return carry, emitted
+
+    fn = jax.jit(_window)
+    _DECODE_WINDOW_CACHE[key] = (decode_fn, fn)
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Queue/stage primitives (shared with data/pipeline.prefetch)
 # ---------------------------------------------------------------------------
@@ -350,7 +393,12 @@ class PrefillStage(Stage):
 
     def _prefill_one(self, req: Request) -> _Prefilled:
         ex = self.ex
-        prompt = req.prompt[: ex.max_len - req.max_new_tokens]
+        # reserve cache rows for the token budget, but never truncate the
+        # prompt to nothing: a budget >= max_len used to slice to an empty
+        # prompt and crash the whole engine (losing every in-flight request);
+        # generation is truncated at the cache edge by the decode-stage
+        # max_len guard instead
+        prompt = req.prompt[: max(1, ex.max_len - req.max_new_tokens)]
         if ex.cfg.recurrent is not None:
             pad = len(prompt)
         else:
@@ -398,6 +446,9 @@ class DecodeStage(Stage):
         self.slot_pos = np.zeros(ex.capacity, np.int32)
         self.slot_remaining = np.zeros(ex.capacity, np.int32)
         self.active: dict = {}                    # slot -> Request
+        # finished requests the (bounded) outbox refused: held here and
+        # re-offered every pump — backpressure must never *drop* a request
+        self._pending: deque = deque()
 
     def n_free(self) -> int:
         return self.ex.capacity - len(self.active)
@@ -405,12 +456,26 @@ class DecodeStage(Stage):
     def free_slots(self) -> List[int]:
         return [s for s in range(self.ex.capacity) if s not in self.active]
 
+    def _emit(self, req: Request) -> None:
+        """Hand a finished request downstream, FIFO: anything already held
+        goes first, and a full outbox parks the request instead of losing
+        it (the unchecked ``try_put`` drop bug)."""
+        self._pending.append(req)
+        self.flush_pending()
+
+    def flush_pending(self) -> bool:
+        moved = False
+        while self._pending and self.outbox.try_put(self._pending[0]):
+            self._pending.popleft()
+            moved = True
+        return moved
+
     def join(self) -> bool:
         """Splice prefilled requests into free slots (continuous batching).
         Requests whose prompt already produced their only token finish at
         admission and go straight downstream."""
         ex = self.ex
-        moved = False
+        moved = self.flush_pending()
         for slot in self.free_slots():
             item = self.inbox.try_get()
             if Channel.is_empty_token(item):
@@ -426,10 +491,13 @@ class DecodeStage(Stage):
             req.output = [item.first_token]
             self.active[slot] = req
             moved = True
-            if self.slot_remaining[slot] <= 0:
+            # finish at admission: budget exhausted by the prefill token, or
+            # the prefill token itself is EOS (burning the whole budget on a
+            # request that already terminated would waste its slot)
+            if self.slot_remaining[slot] <= 0 or item.first_token == ex.eos_id:
                 req.finished_at = time.time()
                 del self.active[slot]
-                self.outbox.try_put(req)
+                self._emit(req)
         return moved
 
     def decode_once(self) -> bool:
@@ -454,12 +522,56 @@ class DecodeStage(Stage):
                 req.finished_at = time.time()
                 done_slots.append(slot)
         for slot in done_slots:
-            self.outbox.try_put(self.active.pop(slot))
+            self._emit(self.active.pop(slot))
         return True
+
+    def decode_window(self) -> bool:
+        """Multi-step dispatch: one jitted ``multi_step``-deep scan over the
+        slot batch, then a single host readback of the per-step token /
+        finished-mask trajectory.  Host bookkeeping replays the window from
+        the device masks — token streams are bit-identical to per-step
+        decoding because slots are independent and joins (which only happen
+        between windows) splice whole slot rows."""
+        ex = self.ex
+        if not self.active:
+            return False
+        window = _decode_window_fn(ex._decode, ex.multi_step, ex.eos_id,
+                                   ex.max_len)
+        active_mask = np.zeros(ex.capacity, bool)
+        active_mask[list(self.active)] = True
+        (tokens, cache, _, _, _), (nxt_all, fin_all) = window(
+            ex.params, self.tokens, self.cache,
+            jnp.asarray(self.slot_remaining), jnp.asarray(self.slot_pos),
+            jnp.asarray(active_mask))
+        self.tokens, self.cache = tokens, cache
+        nxt_host = np.asarray(nxt_all)            # (N, capacity)
+        fin_host = np.asarray(fin_all)
+        for i in range(ex.multi_step):
+            if not self.active:
+                break                  # trailing idle steps are not counted
+            ex.stats.steps += 1
+            done_slots = []
+            for slot, req in list(self.active.items()):
+                req.output.append(int(nxt_host[i, slot]))
+                self.slot_pos[slot] += 1
+                self.slot_remaining[slot] -= 1
+                ex.stats.tokens_out += 1
+                if fin_host[i, slot]:
+                    req.finished_at = time.time()
+                    done_slots.append(slot)
+            for slot in done_slots:
+                self._emit(self.active.pop(slot))
+        return True
+
+    def decode_any(self) -> bool:
+        """Per-step or windowed decode, per the executor's ``multi_step``."""
+        if self.ex.multi_step > 1:
+            return self.decode_window()
+        return self.decode_once()
 
     def pump(self) -> bool:
         joined = self.join()
-        return self.decode_once() or joined
+        return self.decode_any() or joined
 
 
 class CertifyStage(Stage):
@@ -476,9 +588,19 @@ class CertifyStage(Stage):
         self.ex = ex
         self.inbox = inbox
         self.outbox = outbox
+        # certified requests a full release channel refused — retried every
+        # pump rather than silently dropped
+        self._pending: deque = deque()
+
+    def _forward(self, req: Request) -> None:
+        if self._pending or not self.outbox.try_put(req):
+            self._pending.append(req)
 
     def pump(self) -> bool:
         moved = False
+        while self._pending and self.outbox.try_put(self._pending[0]):
+            self._pending.popleft()
+            moved = True
         while True:
             req = self.inbox.try_get()
             if Channel.is_empty_token(req):
@@ -486,7 +608,7 @@ class CertifyStage(Stage):
             moved = True
             hook = self.ex.certify
             if hook is None or hook(req):
-                self.outbox.try_put(req)
+                self._forward(req)
 
 
 class ReleaseStage(Stage):
@@ -536,7 +658,7 @@ class StreamingExecutor:
                  snapshot_every: int = 32, eos_id: int = -1,
                  compiled=None, state_scrub: str = "off",
                  certify: Optional[Callable[[Request], bool]] = None,
-                 drain_barrier: bool = False):
+                 drain_barrier: bool = False, multi_step: int = 1):
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
@@ -545,6 +667,12 @@ class StreamingExecutor:
         self.eos_id = eos_id
         self.snapshot_every = snapshot_every
         self.certify = certify
+        if multi_step < 1:
+            raise ValueError(f"multi_step must be >= 1, got {multi_step}")
+        # N=1: per-step decode (host readback every step, joins between
+        # every step).  N>1: jitted N-step windows with device-side finish
+        # masks — same token streams, 1/N host syncs, joins at window edges.
+        self.multi_step = multi_step
         self.stats = EngineStats()
 
         if compiled is not None:
@@ -611,6 +739,7 @@ class StreamingExecutor:
                    self._certify_ch, self._release_ch):
             ch.items.clear()
         self.decode.reset_state()
+        self.certifier._pending.clear()
         self.stats = EngineStats()
         self._snapshot = None
         self._snapshot_step = 0
@@ -734,6 +863,11 @@ class StreamingExecutor:
                 del self.decode.active[slot]
                 self.decode.slot_remaining[slot] = 0
                 return True
+        for held in (self.decode._pending, self.certifier._pending):
+            for r in list(held):
+                if r.uid == uid:
+                    held.remove(r)
+                    return True
         for ch in (self._certify_ch, self._release_ch):
             for i, r in enumerate(ch.items):
                 if r.uid == uid:
@@ -756,9 +890,14 @@ class StreamingExecutor:
         self.prefill.pump()
         self.decode.join()
         if self.decode.active:
-            if self.stats.steps % self.snapshot_every == 0:
+            # cadence by steps-since-snapshot (≡ steps % snapshot_every for
+            # per-step decode; windowed decode advances steps by up to N per
+            # pump, which a bare modulo check would skip over)
+            if (self._snapshot is None
+                    or self.stats.steps - self._snapshot_step
+                    >= self.snapshot_every):
                 self._take_snapshot()
-            self.decode.decode_once()
+            self.decode.decode_any()
         self._refresh_state_check()
         # certify/release pump AFTER the decode state is settled: a certify
         # hook may re-enter the executor (fleet recalls, resets, replays)
@@ -767,22 +906,29 @@ class StreamingExecutor:
         return self.release.collect()
 
     def busy(self) -> bool:
-        """Work anywhere in the pipeline before the release stage?"""
+        """Work anywhere in the pipeline before the release stage?
+        Includes requests parked behind a full downstream channel — they
+        still need pump cycles to flush."""
         return bool(self.submit_ch.items or self._admit_ch.items
-                    or self._prefill_ch.items or self.decode.active)
+                    or self._prefill_ch.items or self.decode.active
+                    or self.decode._pending or self.certifier._pending)
 
     def in_flight(self) -> List[Request]:
         """Every request the pipeline currently owns, in deterministic
-        stage-then-slot order (failover drains replay in this order)."""
+        stage-then-slot order (failover drains replay in this order).
+        Requests held behind a full channel come after the decode slots —
+        they are finished, downstream of decode, not yet released."""
         return (list(self.submit_ch) + list(self._admit_ch)
                 + [item.req for item in self._prefill_ch]
-                + [self.decode.active[s] for s in sorted(self.decode.active)])
+                + [self.decode.active[s] for s in sorted(self.decode.active)]
+                + list(self.decode._pending) + list(self.certifier._pending))
 
     def pending_count(self) -> int:
         """How many requests the pipeline owns — O(1) (router cost metric;
         ``in_flight()`` materializes the list, this just counts it)."""
         return (len(self.submit_ch) + len(self._admit_ch)
-                + len(self._prefill_ch) + len(self.decode.active))
+                + len(self._prefill_ch) + len(self.decode.active)
+                + len(self.decode._pending) + len(self.certifier._pending))
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         """Drain the pipeline."""
@@ -846,6 +992,12 @@ class StreamingExecutor:
         # admitted after it (requeued below; the cache rollback erased their
         # prefill rows)
         d.active = dict(snap["active"])
+        # a request that finished after the snapshot may still be parked
+        # behind a full channel; its resurrected copy re-decodes, so the
+        # parked (suspect) copy must not also flush downstream
+        resurrected = {r.uid for r in d.active.values()}
+        d._pending = deque(r for r in d._pending
+                           if r.uid not in resurrected)
         for s, req in d.active.items():
             req.output = list(snap["outputs"][s])
             req.finished_at = 0.0

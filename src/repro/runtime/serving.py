@@ -51,7 +51,7 @@ class Engine:
                  compiled=None, backend: Optional[str] = None,
                  state_scrub: str = "off",
                  certify: Optional[Callable[[Request], bool]] = None,
-                 drain_barrier: bool = False):
+                 drain_barrier: bool = False, multi_step: int = 1):
         # engine-level execution-backend override for the quantized hot
         # paths (core/backend registry); baked into cfg so the jitted
         # decode/prefill pair and any compiled-pair sharing stay consistent
@@ -60,7 +60,8 @@ class Engine:
             cfg, params, capacity=capacity, max_len=max_len,
             prefill_pad=prefill_pad, snapshot_every=snapshot_every,
             eos_id=eos_id, compiled=compiled, state_scrub=state_scrub,
-            certify=certify, drain_barrier=drain_barrier)
+            certify=certify, drain_barrier=drain_barrier,
+            multi_step=multi_step)
 
     # ------------------------------------------------------------- pipeline
     @property
@@ -109,6 +110,11 @@ class Engine:
     @property
     def eos_id(self):
         return self._ex.eos_id
+
+    @property
+    def multi_step(self):
+        """Decode steps per jitted dispatch window (1 = per-step)."""
+        return self._ex.multi_step
 
     @property
     def queue(self):

@@ -290,3 +290,39 @@ def test_stats_merge_tolerates_missing_keys():
     assert int(merged["faults_detected"]) == 2
     assert int(merged["faults_corrected"]) == 0
     assert int(merged["checks_run"]) == 5
+
+
+# ---------------------------------------------------------------------------
+# Attention registry entries (the float hot kernel)
+# ---------------------------------------------------------------------------
+
+
+def _attn_case(seed=21, B=1, H=2, S=48, hd=16):
+    kq, kk, kv = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(kq, (B, H, S, hd)),
+            jax.random.normal(kk, (B, H, S, hd)),
+            jax.random.normal(kv, (B, H, S, hd)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_attn_registry_close_across_backends(backend):
+    """Float attention is tolerance-parity across backends (unlike the
+    exact integer ops); within one backend the checked entry must agree
+    with the plain entry bit-for-bit."""
+    q, k, v = _attn_case()
+    out = dispatch.attn(q, k, v, backend=backend)
+    out_jnp = dispatch.attn(q, k, v, backend="jnp")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_jnp),
+                               rtol=2e-5, atol=2e-5)
+    out2, check, csum = dispatch.attn_checksum(q, k, v, backend=backend)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    np.testing.assert_allclose(np.asarray(jnp.sum(out2, axis=-1)),
+                               np.asarray(check), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(abft.output_row_checksums(out2)), np.asarray(csum))
+
+
+def test_attn_entries_registered_on_all_builtins():
+    for name in backend_mod.available_backends():
+        be = backend_mod.get_backend(name)
+        assert be.attn is not None and be.attn_checksum is not None, name

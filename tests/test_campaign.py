@@ -357,3 +357,53 @@ def test_shipdet_weights_site_covered_by_deploy_checks():
     det, mis = case.run_trials(Policy.NONE, "weights", fault.apply,
                                trial_keys(spec))
     assert classify_counts(det, mis)["sdc"] > 0    # undefended baseline
+
+
+# ---------------------------------------------------------------------------
+# (i) the float attention workload + the int8-KV serving workload
+# ---------------------------------------------------------------------------
+
+
+def test_flashattn_abft_detects_all_output_bitflips():
+    """The decode-stack acceptance bar: every single-bit flip of the
+    attention kernel's emitted output is detected (exact bit-checksum tier)
+    and healed (SDC = 0) under ABFT."""
+    spec = CampaignSpec("flashattn", Policy.ABFT, "accumulator",
+                        "single_bitflip", trials=60, seed=0)
+    detected, mismatch = _run_spec(spec)
+    assert detected.all(), "flashattn ABFT missed an output bit flip"
+    assert not mismatch.any(), "flashattn ABFT recovery left a corrupt row"
+
+
+def test_flashattn_none_policy_has_nonzero_sdc():
+    spec = CampaignSpec("flashattn", Policy.NONE, "accumulator",
+                        "single_bitflip", trials=60, seed=0)
+    detected, mismatch = _run_spec(spec)
+    assert not detected.any()
+    assert mismatch.any()                       # undefended kernel corrupts
+
+
+def test_flashattn_tmr_covers_operand_site():
+    spec = CampaignSpec("flashattn", Policy.TMR, "activations",
+                        "single_bitflip", trials=30, seed=1)
+    detected, mismatch = _run_spec(spec)
+    counts = classify_counts(detected, mismatch)
+    assert counts["sdc"] == 0
+
+
+def test_serving_int8kv_scrub_covers_kv_cache():
+    """Quantizing the KV cache must not narrow the dependability envelope:
+    the dtype-uniform state scrub detects kv_cache strikes on the int8
+    cache (ABFT) and snapshot rollback heals them (CKPT, SDC = 0)."""
+    from repro.campaign.runner import build_case as _bc
+    case = _bc("serving_int8kv", seed=0)
+    assert case.cfg.quant_kv
+    fault = resolve_fault_model("single_bitflip")
+    for policy in (Policy.ABFT, Policy.CKPT):
+        spec = CampaignSpec("serving_int8kv", policy, "kv_cache",
+                            "single_bitflip", trials=4, seed=0)
+        detected, mismatch = case.run_trials(policy, "kv_cache", fault.apply,
+                                             trial_keys(spec))
+        assert detected.all(), f"{policy} missed an int8 kv_cache strike"
+        if policy == Policy.CKPT:
+            assert not mismatch.any(), "CKPT rollback left a corrupt stream"

@@ -284,6 +284,130 @@ def test_fleet_release_gate_lives_in_certify_stage(smollm):
         fleet.close()
 
 
+# ---------------------------------------------------------------------------
+# Decode-path request-loss regressions + multi-step dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_finished_requests_survive_full_outbox(smollm):
+    """Regression: finished requests used to be handed to ``outbox.try_put``
+    unchecked — a full bounded channel silently dropped them.  Rewire the
+    decode→certify and certify→release hops to capacity-1 channels and
+    finish two requests in the same pump: hold-and-retry must deliver both."""
+    cfg, params = smollm
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8)
+    ex = eng.executor
+    certify_ch = df.Channel(1, "finished")
+    release_ch = df.Channel(1, "certified")
+    ex._certify_ch, ex._release_ch = certify_ch, release_ch
+    ex.decode.outbox = certify_ch
+    ex.certifier.inbox, ex.certifier.outbox = certify_ch, release_ch
+    ex.release.inbox = release_ch
+
+    prompts = [[5, 9, 2], [3, 1, 4]]
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    released = []
+    while eng.executor.busy():
+        released += eng.step()
+    assert sorted(r.uid for r in released) == [0, 1]      # none dropped
+    for r, p in zip(reqs, prompts):
+        assert r.output == greedy_reference(cfg, params, p, 4), f"uid {r.uid}"
+
+
+def test_prefill_eos_finishes_at_admission(smollm):
+    """A request whose *first* generated token is EOS must finish at join —
+    previously the EOS check only ran in the decode loop, so the request
+    burned its whole token budget decoding past its own terminator."""
+    cfg, params = smollm
+    prompt = [5, 9, 2]
+    t0 = greedy_reference(cfg, params, prompt, 1)[0]
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                 eos_id=t0)
+    req = Request(uid=0, prompt=list(prompt), max_new_tokens=8)
+    other = Request(uid=1, prompt=[8, 8, 6], max_new_tokens=3)
+    eng.submit(req)
+    eng.submit(other)
+    released = []
+    while eng.executor.busy():
+        released += eng.step()
+    assert req.output == [t0]                 # terminated at admission
+    assert req.finished_at > 0
+    assert sorted(r.uid for r in released) == [0, 1]
+    assert len(other.output) >= 1             # neighbor unaffected
+
+
+@pytest.mark.parametrize("multi_step", [1, 4])
+def test_decode_truncates_at_max_len(smollm, multi_step):
+    """The ``slot_pos >= max_len - 1`` guard: a budget larger than the
+    remaining cache rows must truncate the stream exactly at the cache edge,
+    not overrun the buffer.  Regression: a budget >= max_len used to slice
+    the prompt to *empty* at prefill and crash the engine (killing every
+    in-flight request); now the prompt keeps at least one token and
+    generation fills the remaining cache rows."""
+    cfg, params = smollm
+    max_len, prompt = 12, [5, 9, 2]
+    eng = Engine(cfg, params, capacity=2, max_len=max_len, prefill_pad=8,
+                 multi_step=multi_step)
+    req = Request(uid=0, prompt=list(prompt), max_new_tokens=64)
+    eng.submit(req)
+    eng.run()
+    # budget (64) >= max_len reserves all but one cache row for generation:
+    # effective prompt is prompt[:1], stream truncates at pos == max_len - 1
+    eff = prompt[:1]
+    want_len = max_len - len(eff)
+    assert len(req.output) == want_len
+    assert req.output == greedy_reference(cfg, params, eff, want_len,
+                                          max_len=max_len)
+    assert req.finished_at > 0
+
+
+def test_multi_step_windows_are_bit_identical(family):
+    """The tentpole invariant: an N-step on-device decode window (one host
+    readback per window) must emit exactly the per-step schedule's tokens —
+    across the transformer / rwkv / hybrid families."""
+    cfg, params = family
+    prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7], [8, 8, 6]]
+    budgets = [2, 8, 2, 8]
+
+    def serve(multi_step):
+        eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                     multi_step=multi_step)
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, budgets))]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [list(r.output) for r in reqs], eng.stats.steps
+
+    per_step, s1 = serve(1)
+    windowed, s4 = serve(4)
+    assert windowed == per_step
+    # windowed decode may burn drain-tail slot-steps, never fewer steps
+    assert s4 >= s1
+
+
+def test_multi_step_snapshot_rollback_still_bit_exact(smollm):
+    """Snapshots land on window boundaries under multi-step dispatch; a
+    mid-run state strike must roll back and still finish bit-exact."""
+    cfg, params = smollm
+    prompt, n_new = [5, 9, 2], 16    # budget must outlive two 4-step windows
+    golden = greedy_reference(cfg, params, prompt, n_new)
+    eng = Engine(cfg, params, capacity=2, max_len=96, prefill_pad=8,
+                 multi_step=4, snapshot_every=2, state_scrub="rollback")
+    req = Request(uid=0, prompt=list(prompt), max_new_tokens=n_new)
+    eng.submit(req)
+    eng.step()
+    eng.step()
+    eng.strike("decode_state", fi.flip_one_bit, jax.random.key(3))
+    eng.run()
+    events = eng.drain_state_events()
+    assert len(events) == 1 and events[0]["recovered"]
+    assert req.output == golden
+
+
 def test_failover_bit_exact_hybrid_family():
     """Fleet failover replay on the staged executor, hybrid (griffin)
     family: killing a replica mid-decode must not change any released

@@ -346,3 +346,116 @@ def test_stats_zero_has_recovered_counter():
                       "faults_recovered", "checks_run"}
     merged = DependabilityStats.merge(z, {"faults_recovered": jnp.int32(3)})
     assert int(merged["faults_recovered"]) == 3
+
+
+# ------------------- dependable_attention (float two-tier) -------------------
+
+from repro.core.dependability import dependable_attention  # noqa: E402
+
+
+def _attn_inputs(seed=0, B=1, H=2, S=24, hd=16):
+    kq, kk, kv = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(kq, (B, H, S, hd)),
+            jax.random.normal(kk, (B, H, S, hd)),
+            jax.random.normal(kv, (B, H, S, hd)))
+
+
+def _flip_out_bit(bit, idx=(0, 1, 5, 4)):
+    def inj(out):
+        bits = jax.lax.bitcast_convert_type(out, jnp.uint32)
+        bits = bits.at[idx].set(bits[idx] ^ jnp.uint32(1 << bit))
+        return jax.lax.bitcast_convert_type(bits, jnp.float32)
+    return inj
+
+
+@pytest.mark.parametrize("policy", [Policy.NONE, Policy.ABFT, Policy.DMR,
+                                    Policy.TMR, Policy.CKPT])
+def test_attention_policies_agree_on_clean_input(policy):
+    q, k, v = _attn_inputs()
+    base, _ = dependable_attention(Policy.NONE, q, k, v)
+    out, st = dependable_attention(policy, q, k, v)
+    assert bool(jnp.all(out == base))
+    assert int(st["faults_detected"]) == 0
+
+
+@pytest.mark.parametrize("bit", [0, 1, 22, 23, 30, 31])
+def test_attention_abft_detects_and_heals_every_output_bit(bit):
+    """Both tiers together: high bits trip the float tolerance, low-mantissa
+    bits slip under it — the exact output checksum must catch those, and
+    row recovery must restore the clean stream bit-for-bit either way."""
+    q, k, v = _attn_inputs(1)
+    clean, _ = dependable_attention(Policy.NONE, q, k, v)
+    out, st = dependable_attention(Policy.ABFT, q, k, v,
+                                   inject=_flip_out_bit(bit))
+    assert int(st["faults_detected"]) == 1
+    assert int(st["faults_corrected"]) == 1
+    assert bool(jnp.all(out == clean))
+
+
+def test_attention_ckpt_rolls_back_whole_op():
+    q, k, v = _attn_inputs(2)
+    clean, _ = dependable_attention(Policy.NONE, q, k, v)
+    out, st = dependable_attention(Policy.CKPT, q, k, v,
+                                   inject=_flip_out_bit(0))
+    assert int(st["faults_detected"]) == 1
+    assert int(st["faults_recovered"]) == 1
+    assert int(st["faults_corrected"]) == 0     # rollback, not in-place
+    assert bool(jnp.all(out == clean))
+
+
+def test_attention_dmr_detects_but_ships_replica0():
+    q, k, v = _attn_inputs(3)
+    clean, _ = dependable_attention(Policy.NONE, q, k, v)
+    out, st = dependable_attention(Policy.DMR, q, k, v,
+                                   inject=_flip_out_bit(0))
+    assert int(st["faults_detected"]) == 1
+    assert int(st["faults_corrected"]) == 0
+    assert not bool(jnp.all(out == clean))      # faulted replica shipped
+
+
+def test_attention_tmr_outvotes_corrupted_replica():
+    q, k, v = _attn_inputs(4)
+    clean, _ = dependable_attention(Policy.NONE, q, k, v)
+    out, st = dependable_attention(Policy.TMR, q, k, v,
+                                   inject=_flip_out_bit(30))
+    assert int(st["faults_detected"]) == 1
+    assert int(st["faults_corrected"]) == 1
+    assert bool(jnp.all(out == clean))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "ref", "pallas"])
+def test_attention_abft_heals_on_every_backend(backend):
+    q, k, v = _attn_inputs(5)
+    clean, _ = dependable_attention(Policy.NONE, q, k, v, backend=backend)
+    out, st = dependable_attention(Policy.ABFT, q, k, v, backend=backend,
+                                   inject=_flip_out_bit(1))
+    assert int(st["faults_detected"]) == 1
+    assert int(st["faults_corrected"]) == 1
+    assert bool(jnp.all(out == clean))
+
+
+def test_attention_abft_bit_exact_under_jit():
+    """Recovery recomputes in the same compilation context, so the healed
+    stream must be bit-identical to the same program's clean stream."""
+    q, k, v = _attn_inputs(6)
+
+    @jax.jit
+    def both(q, k, v):
+        clean, _ = dependable_attention(Policy.NONE, q, k, v)
+        out, st = dependable_attention(Policy.ABFT, q, k, v,
+                                       inject=_flip_out_bit(0))
+        return clean, out, st
+
+    clean, out, st = both(q, k, v)
+    assert int(st["faults_detected"]) == 1
+    assert int(st["faults_corrected"]) == 1
+    assert bool(jnp.all(out == clean))
+
+
+def test_attention_requires_registered_backend():
+    from repro.core.backend import Backend
+    q, k, v = _attn_inputs(7)
+    bare = Backend(name="bare", matmul_acc=None, matmul_acc_checksum=None,
+                   conv_acc=None, conv_acc_checksum=None)
+    with pytest.raises(ValueError, match="does not register attention"):
+        dependable_attention(Policy.ABFT, q, k, v, backend=bare)
