@@ -53,6 +53,7 @@ def bench(arch: str, n_replicas: int, policy: Policy, n_requests: int,
         "released": m.released, "tokens": m.tokens_out, "ticks": m.ticks,
         "tok_per_s": m.tokens_out / dt,
         "p50_ticks": m.p50_ticks, "p99_ticks": m.p99_ticks,
+        "metrics": m.to_json(),
     }
 
 
@@ -65,6 +66,9 @@ def main(argv=None):
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--fast", action="store_true",
                     help="2 replicas only, 6 requests")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write every row's full FleetMetrics snapshot "
+                         "(registry counters + latency histograms) as JSON")
     args = ap.parse_args(argv)
 
     replica_counts = [2] if args.fast else [
@@ -90,6 +94,14 @@ def main(argv=None):
         if r["policy"] != "none" and r["replicas"] in base:
             print(f"  overhead {r['policy']} @ {r['replicas']} replicas: "
                   f"{base[r['replicas']] / max(r['tok_per_s'], 1e-9):.2f}×")
+    if args.metrics_out:
+        import json
+        import pathlib
+        mpath = pathlib.Path(args.metrics_out)
+        mpath.parent.mkdir(parents=True, exist_ok=True)
+        mpath.write_text(json.dumps({"rows": rows}, indent=2,
+                                    sort_keys=True) + "\n")
+        print(f"wrote {mpath}")
     return 0
 
 

@@ -80,13 +80,15 @@ def _latency_stats(latencies):
 
 
 def run_engine(cfg, params, trace, capacity, max_len, prefill_pad,
-               drain_barrier=False, compiled=None, multi_step=1):
+               drain_barrier=False, compiled=None, multi_step=1,
+               tracer=None, metrics=None):
     """Serve the trace through the staged engine (continuous batching, or
     the pad-and-step baseline under ``drain_barrier``); returns
     (report, reqs, compiled-pair)."""
     eng = Engine(cfg, params, capacity=capacity, max_len=max_len,
                  prefill_pad=prefill_pad, drain_barrier=drain_barrier,
-                 compiled=compiled, multi_step=multi_step)
+                 compiled=compiled, multi_step=multi_step,
+                 tracer=tracer, metrics=metrics)
 
     def serve():
         eng.reset()
@@ -132,6 +134,13 @@ def main(argv=None) -> int:
     ap.add_argument("--check-bit-identity", action="store_true",
                     help="also verify streamed outputs == greedy reference "
                          "(slow: one reference decode per request)")
+    ap.add_argument("--trace-out", default=None,
+                    help="re-serve the streamed trace with span tracing on "
+                         "and write the Chrome trace_event JSON; also "
+                         "reports trace_overhead_frac vs the untraced run")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the traced run's metrics registry snapshot "
+                         "(.prom extension → Prometheus text format)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -171,6 +180,29 @@ def main(argv=None) -> int:
             r.output == greedy_reference(cfg, params, p, n, args.max_len)
             for r, (p, n) in zip(reqs, trace))
 
+    traced = None
+    trace_overhead_frac = None
+    if args.trace_out or args.metrics_out:
+        # observability cost: same trace, same compiled functions, tracing
+        # and metrics on — tokens/s delta vs the untraced streamed run is
+        # the overhead the < 3 % budget (docs/observability.md) bounds
+        from repro.obs import Registry, SpanTracer
+        tracer = SpanTracer(name="serving_bench") if args.trace_out else None
+        reg = Registry() if args.metrics_out else None
+        traced, traced_reqs, _ = run_engine(
+            cfg, params, trace, args.capacity, args.max_len,
+            args.prefill_pad, compiled=compiled, multi_step=args.multi_step,
+            tracer=tracer, metrics=reg)
+        assert all(a.output == b.output
+                   for a, b in zip(reqs, traced_reqs)), \
+            "tracing changed tokens — observer effect"
+        trace_overhead_frac = round(
+            1.0 - traced["tokens_per_s"] / streamed["tokens_per_s"], 4)
+        if tracer is not None:
+            tracer.dump(args.trace_out)
+        if reg is not None:
+            reg.dump(args.metrics_out)
+
     speedup = streamed["tokens_per_s"] / max(padded["tokens_per_s"], 1e-9)
     result = {
         "arch": cfg.name,
@@ -189,6 +221,8 @@ def main(argv=None) -> int:
                                if per_step else None),
         "multi_step_bit_identical": multi_step_bit_identical,
         "decode_bit_identical": bit_identical,
+        "traced": traced,
+        "trace_overhead_frac": trace_overhead_frac,
     }
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2) + "\n")
@@ -205,6 +239,9 @@ def main(argv=None) -> int:
     print(f"continuous batching speedup: {speedup:.2f}×"
           + (f"  (bit-identical to reference: {bit_identical})"
              if bit_identical is not None else ""))
+    if traced is not None:
+        print(f"traced:   {traced['tokens_per_s']:8.1f} tok/s  "
+              f"(overhead {trace_overhead_frac * 100:.1f}%)")
     print(f"wrote {out}")
     return 0
 

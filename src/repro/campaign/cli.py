@@ -51,6 +51,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default="reports/campaign",
                    help="output directory for campaign.json / campaign.md")
+    p.add_argument("--events-out", default=None,
+                   help="also write the raw injection→detection→recovery "
+                        "timelines (one entry per configuration) as JSON")
     p.add_argument("--quiet", action="store_true")
     return p
 
@@ -80,7 +83,9 @@ def main(argv=None) -> int:
         f"(seed {args.seed}, backends {','.join(backends)})")
     t0 = time.time()
     case_cache = {}
-    results = runner.run_campaign(specs, log=log, cache=case_cache)
+    event_sink = [] if args.events_out else None
+    results = runner.run_campaign(specs, log=log, cache=case_cache,
+                                  event_sink=event_sink)
 
     bit_rows = []
     if args.bit_trials > 0 and "accumulator" in sites:
@@ -113,6 +118,16 @@ def main(argv=None) -> int:
     }
     jpath, mpath = report_mod.write_report(results, args.out, meta,
                                            bit_coverage=bit_rows)
+    if event_sink is not None:
+        import json
+        import pathlib
+        epath = pathlib.Path(args.events_out)
+        epath.parent.mkdir(parents=True, exist_ok=True)
+        with open(epath, "w") as f:
+            json.dump({"meta": meta, "configs": event_sink}, f,
+                      indent=2, sort_keys=True)
+        log(f"wrote {epath} ({sum(len(e['timelines']) for e in event_sink)} "
+            "timelines)")
     print(report_mod.to_markdown(results, meta, bit_coverage=bit_rows))
     print(f"wrote {jpath} and {mpath} ({elapsed:.1f}s)")
     return 0

@@ -61,6 +61,16 @@ class ConfigResult:
     faults_recovered: int = 0  # rollback/restart recoveries across trials
     recovery_ms_mean: float = 0.0
     recovery_ms_max: float = 0.0
+    # injection→detection→recovery timelines reconstructed from the
+    # structured dependability event log (repro.obs.events): how many
+    # strike chains were logged, and the detection-/recovery-latency
+    # distributions in the emitting layer's deterministic ticks
+    strikes_logged: int = 0
+    detections_logged: int = 0
+    detection_ticks_mean: float = 0.0
+    detection_ticks_max: int = 0
+    recovery_ticks_mean: float = 0.0
+    recovery_ticks_max: int = 0
 
     @property
     def detection_rate(self) -> float:
@@ -161,19 +171,24 @@ def to_markdown(results: Sequence[ConfigResult], meta: dict | None = None,
     lines += [
         "| workload | backend | policy | site | fault model | trials | masked "
         "| det-corr | det-unc | SDC | det. rate | SDC rate | coverage "
-        "| recovered | rec. mean ms |",
+        "| recovered | rec. mean ms | det. lat ticks (mean/max) "
+        "| rec. lat ticks (mean/max) |",
         "|---|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:"
-        "|---:|---:|",
+        "|---:|---:|---:|---:|",
     ]
     for r in results:
         rec_ms = f"{r.recovery_ms_mean:.2f}" if r.faults_recovered else "—"
+        det_lat = (f"{r.detection_ticks_mean:.1f}/{r.detection_ticks_max}"
+                   if r.detections_logged else "—")
+        rec_lat = (f"{r.recovery_ticks_mean:.1f}/{r.recovery_ticks_max}"
+                   if r.faults_recovered and r.strikes_logged else "—")
         lines.append(
             f"| {r.workload} | {r.backend} | {r.policy} | {r.site} "
             f"| {r.fault_model} "
             f"| {r.trials} | {r.masked} | {r.detected_corrected} "
             f"| {r.detected_uncorrected} | {r.sdc} "
             f"| {r.detection_rate:.3f} | {r.sdc_rate:.3f} | {r.coverage:.3f} "
-            f"| {r.faults_recovered} | {rec_ms} |")
+            f"| {r.faults_recovered} | {rec_ms} | {det_lat} | {rec_lat} |")
     lines.append("")
     if bit_coverage:
         lines += [

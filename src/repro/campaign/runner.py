@@ -63,8 +63,27 @@ from repro.core import redundancy
 from repro.core.dependability import (
     Policy, dependable_attention, dependable_qconv2d, dependable_qmatmul)
 from repro.core.fault_injection import _as_bits
+from repro.obs import EventLog
 
 _IDENTITY = lambda x, key: x
+
+
+def _timeline_columns(ev_log: EventLog) -> Tuple[dict, List[dict]]:
+    """Reduce an event log to the report's timeline columns (and the raw
+    reconstructed chains, for ``--events-out``).  Drains the log."""
+    tls = ev_log.timelines()
+    ev_log.clear()
+    det = [t["detection_latency_ticks"] for t in tls if t["detected"]]
+    rec = [t["recovery_latency_ticks"] for t in tls if t["recovered"]]
+    cols = {
+        "strikes_logged": len(tls),
+        "detections_logged": len(det),
+        "detection_ticks_mean": float(np.mean(det)) if det else 0.0,
+        "detection_ticks_max": int(max(det)) if det else 0,
+        "recovery_ticks_mean": float(np.mean(rec)) if rec else 0.0,
+        "recovery_ticks_max": int(max(rec)) if rec else 0,
+    }
+    return cols, tls
 
 
 def _bitwise_mismatch(a, b) -> jax.Array:
@@ -462,8 +481,13 @@ class ServingCase:
         if self.quant_kv:
             self.cfg = dataclasses.replace(self.cfg, quant_kv=True)
         self.params = model_api.init_params(self.cfg, key)
+        # structured dependability events on the engine's tick clock: engine
+        # strikes/scrubs/rollbacks emit into it directly; weight-site
+        # injections (host pytree surgery) are stamped by run_trials
+        self.events = EventLog()
         self.engine = Engine(self.cfg, self.params, capacity=2, max_len=64,
-                             prefill_pad=8, snapshot_every=2, backend=backend)
+                             prefill_pad=8, snapshot_every=2, backend=backend,
+                             event_log=self.events)
         # deploy-time storage checksums: the scrub baseline for weight sites
         self.storage_checks = jax.jit(abft_api.storage_checksums)(self.params)
         self._verify_storage = jax.jit(abft_api.verify_storage)
@@ -508,6 +532,7 @@ class ServingCase:
         scrub_mode = {Policy.ABFT: "detect", Policy.CKPT: "rollback"}.get(
             policy, "off")
         state_site = site if site in ("kv_cache", "decode_state") else None
+        self.events.ctx.update(policy=policy.value)
 
         def serve(params, key):
             return self._run_engine(params, scrub_mode=scrub_mode,
@@ -515,10 +540,18 @@ class ServingCase:
                                     fault=fault, key=key)
 
         golden = self._run_engine(self.params)
+        self.events.clear()               # golden pass leaves no timelines
         detected_l, mismatch_l = [], []
         for k in keys:
             params = self.params if state_site is not None \
                 else fl.inject_pytree_with(self.params, k, fault)
+            if state_site is None:
+                # weight-site injection happens here (pytree surgery), not
+                # through Engine.strike — stamp the injection event so the
+                # chain has its strike anchor
+                self.events.emit(
+                    "strike", tick=self.engine.tick, site=site,
+                    fault=getattr(fault, "__name__", ""))
             out = serve(params, k)
             events = self.engine.drain_state_events()
             detected = len(events) > 0
@@ -536,10 +569,15 @@ class ServingCase:
                     # rollback-and-reexecute from the golden checkpoint
                     t0 = _time.perf_counter()
                     out = self._run_engine(self.params)
-                    self._recovery.seconds.append(_time.perf_counter() - t0)
+                    seconds = _time.perf_counter() - t0
+                    self._recovery.seconds.append(seconds)
                     self._recovery.count += 1
                     self.engine.record_dependability({
                         "faults_recovered": jnp.int32(1)})
+                    self.events.emit(
+                        "recovery", tick=self.engine.tick, site="weights",
+                        seconds=seconds,
+                        detail={"action": "golden_reexecute"})
             differs = out != golden
             if policy == Policy.TMR:
                 # temporal TMR: clean replicas replay deterministically, so a
@@ -637,6 +675,10 @@ class FleetCase:
                            backend=backend)
         self.prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7]]
         self._recovery = _RecoveryLog()
+        # accumulates the fleet's per-trial dependability events (fleet-tick
+        # clock) across a configuration's trials, drained by the runner into
+        # the report's timeline columns
+        self.events = EventLog()
 
     @staticmethod
     def supports(policy: Policy, site: str) -> bool:
@@ -653,14 +695,13 @@ class FleetCase:
                 for i, p in enumerate(self.prompts)]
         for r in reqs:
             fleet.submit(r)
-        victim = fleet.replicas[0]
         if site == "weights":
             # strike the parameter store before serving (deploy-window SEU)
-            victim.engine.strike("weights", fault, key)
+            fleet.strike(0, "weights", fault, key)
         else:   # transient sites: strike the live decode stage two ticks in
             fleet.tick()
             fleet.tick()
-            victim.engine.strike(site, fault, key)
+            fleet.strike(0, site, fault, key)
         fleet.run()
         outs = tuple(
             tuple(fleet.released[r.uid].output) if r.uid in fleet.released
@@ -669,13 +710,24 @@ class FleetCase:
         m = fleet.metrics
         self._recovery.count += m.recoveries + m.state_rollbacks \
             + m.state_drains
-        self._recovery.seconds += list(m.recovery_seconds)
+        rec_hist = m.recovery_seconds
+        if rec_hist.count:
+            # histogram, not a list: reconstruct count entries preserving the
+            # exact sum and max — all the report's recovery columns need
+            n, total, peak = rec_hist.count, rec_hist.sum, float(rec_hist.max)
+            if n == 1:
+                self._recovery.seconds.append(total)
+            else:
+                self._recovery.seconds += [(total - peak) / (n - 1)] * (n - 1)
+                self._recovery.seconds.append(peak)
+        self.events.events.extend(fleet.event_log.drain())
         return outs, m.detections > 0
 
     def run_trials(self, policy, site, fault, keys):
         golden, _ = self._serve(policy, site, _IDENTITY, keys[0])
-        # the golden pass must not contribute recovery accounting
+        # the golden pass must not contribute recovery or timeline accounting
         self._recovery.drain()
+        self.events.clear()
         detected_l, mismatch_l = [], []
         for k in keys:
             out, det = self._serve(policy, site, fault, k)
@@ -714,6 +766,7 @@ def build_case(workload: str, seed: int = 0, backend: str = "jnp"):
 def run_campaign(specs: Sequence[fl.CampaignSpec],
                  log: Callable[[str], None] = lambda s: None,
                  cache: Dict[Tuple[str, int, str], object] | None = None,
+                 event_sink: List[dict] | None = None,
                  ) -> List[ConfigResult]:
     """Execute every configuration; returns one ConfigResult per spec.
 
@@ -722,6 +775,16 @@ def run_campaign(specs: Sequence[fl.CampaignSpec],
     one workload share data, params, and compiled functions; pass ``cache``
     (a dict, populated in place) to reuse the built cases afterwards, e.g.
     for a ``run_bit_sweep`` over the same workloads.
+
+    Every configuration also yields injection→detection→recovery timelines:
+    the engine/fleet cases maintain a live ``repro.obs.EventLog`` during
+    their trials, and for the in-graph cases (kernels, model forwards) the
+    runner synthesizes the equivalent chains from the trial verdicts (strike
+    at trial index i, same-tick detection — in-op checks verdict within the
+    op call).  The reduced latency distributions land in each
+    ``ConfigResult``'s timeline columns; pass ``event_sink`` (a list,
+    appended in place) to also capture the raw per-configuration chains,
+    e.g. for ``--events-out``.
     """
     if cache is None:
         cache = {}
@@ -751,10 +814,30 @@ def run_campaign(specs: Sequence[fl.CampaignSpec],
             recovery = {"faults_recovered": counts["detected_corrected"]}
         else:
             recovery = {}
+        if getattr(case, "events", None) is not None:
+            tl_cols, tls = _timeline_columns(case.events)
+        else:
+            # in-graph trials (kernels, model forwards) cannot emit host
+            # events mid-vmap — synthesize the equivalent chains from the
+            # trial verdicts: strike at trial index i, same-tick detection
+            # (the in-op check verdict lands within the op call itself)
+            synth = EventLog(policy=spec.policy.value, site=spec.site,
+                             fault=spec.fault_model)
+            for i, (det, mis) in enumerate(zip(detected, mismatch)):
+                synth.emit("strike", tick=i)
+                if det:
+                    synth.emit("detection", tick=i,
+                               detail={"check": "in_op"})
+                    if spec.policy == Policy.CKPT and not mis:
+                        synth.emit("recovery", tick=i,
+                                   detail={"action": "in_op_rollback"})
+            tl_cols, tls = _timeline_columns(synth)
+        if event_sink is not None:
+            event_sink.append({"config": spec.label(), "timelines": tls})
         res = ConfigResult(
             workload=spec.workload, policy=spec.policy.value, site=spec.site,
             fault_model=spec.fault_model, trials=spec.trials,
-            backend=spec.backend, **counts, **recovery)
+            backend=spec.backend, **counts, **recovery, **tl_cols)
         log(f"{spec.label()}: det={res.detection_rate:.3f} "
             f"sdc={res.sdc_rate:.3f} cov={res.coverage:.3f}"
             + (f" rec={res.faults_recovered}" if res.faults_recovered else ""))

@@ -32,6 +32,7 @@ from repro.core import fault_injection as fi
 from repro.core.dependability import Policy
 from repro.fleet.fleet import FLEET_POLICIES, Fleet
 from repro.fleet.router import POLICIES as ROUTER_POLICIES
+from repro.obs import SpanTracer, dump_merged
 from repro.runtime.serving import Request
 
 INJECT_SITES = ("none", "weights", "kv_cache", "decode_state")
@@ -64,6 +65,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default="reports/fleet",
                    help="output directory for fleet.json")
+    p.add_argument("--trace-out", default=None,
+                   help="write a Chrome trace_event JSON of the drill pass "
+                        "(every replica's pipeline spans; ui.perfetto.dev)")
+    p.add_argument("--metrics-out", default=None,
+                   help="write the drill pass's metrics registry snapshot "
+                        "(.prom extension → Prometheus text format)")
+    p.add_argument("--events-out", default=None,
+                   help="write the drill pass's structured dependability "
+                        "event log + reconstructed timelines as JSON")
     p.add_argument("--quiet", action="store_true")
     return p
 
@@ -76,19 +86,13 @@ def _serve(fleet: Fleet, prompts, max_new_tokens: int, *,
     for r in reqs:
         fleet.submit(r)
     if inject == "weights":
-        victim = fleet.replicas[0]
-        victim.engine.params = fi.inject_pytree_with(
-            victim.engine.params, key, fi.flip_one_bit)
+        fleet.strike(0, "weights", fi.flip_one_bit, key)
     mid_drill = inject in ("kv_cache", "decode_state") or kill >= 0
     if mid_drill:
         for _ in range(2):
             fleet.tick()
-        victim = fleet.replicas[0]
-        if inject == "kv_cache":
-            victim.engine.cache = fi.inject_pytree_with(
-                victim.engine.cache, key, fi.flip_one_bit)
-        elif inject == "decode_state":
-            victim.engine.tokens = fi.flip_one_bit(victim.engine.tokens, key)
+        if inject in ("kv_cache", "decode_state"):
+            fleet.strike(0, inject, fi.flip_one_bit, key)
         if kill >= 0:
             fleet.kill_replica(kill)
     fleet.run()
@@ -128,6 +132,14 @@ def main(argv=None) -> int:
     if drill:
         log(f"drill pass (inject={args.inject}, kill="
             f"{args.kill if args.kill >= 0 else 'none'}) …")
+    tracers = []
+    if args.trace_out:
+        # one tracer per replica engine (pid = replica id) — attached after
+        # the golden pass so the trace covers exactly the drill
+        for r in fleet.replicas:
+            tr = SpanTracer(name=f"replica{r.rid}", pid=r.rid)
+            r.engine.tracer = tr
+            tracers.append(tr)
     observed = _serve(fleet, prompts, args.max_new_tokens,
                       inject=args.inject, kill=args.kill,
                       key=jax.random.key(args.seed + 1))
@@ -144,6 +156,16 @@ def main(argv=None) -> int:
     out.mkdir(parents=True, exist_ok=True)
     jpath = out / "fleet.json"
     jpath.write_text(json.dumps(report, indent=2))
+
+    if args.trace_out:
+        tpath = dump_merged(tracers, args.trace_out)
+        log(f"wrote {tpath} (open in ui.perfetto.dev)")
+    if args.metrics_out:
+        mpath = fleet.metrics.registry.dump(args.metrics_out)
+        log(f"wrote {mpath}")
+    if args.events_out:
+        epath = fleet.event_log.dump(args.events_out)
+        log(f"wrote {epath} ({len(fleet.event_log)} events)")
 
     log(json.dumps({k: v for k, v in report.items() if k != "events"},
                    indent=2))

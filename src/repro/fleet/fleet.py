@@ -67,6 +67,7 @@ from typing import Dict, List, Optional
 
 from repro.core.dependability import Policy
 from repro.fleet.metrics import FleetMetrics
+from repro.obs import EventLog
 from repro.fleet.replica import Replica, ReplicaState
 from repro.fleet.router import Router
 from repro.fleet.supervisor import Supervisor
@@ -163,6 +164,14 @@ class Fleet:
                                      heartbeat_timeout=heartbeat_timeout)
         self.metrics = FleetMetrics(
             lost_work_bound_tokens=scrub_every * capacity)
+        # structured dependability event log on the fleet tick clock; the
+        # supervisor shares it so scrub/recovery verdicts carry provenance.
+        # Replica engines do NOT share it — their pump-cycle clock differs
+        # from the fleet tick, and mixing clocks would corrupt timeline
+        # latencies; engine-level verdicts reach this log via
+        # _settle_state_events (stamped with the fleet tick).
+        self.event_log = EventLog(policy=policy.value)
+        self.supervisor.event_log = self.event_log
         self.tick_no = 0
         self.records: Dict[int, _Tracked] = {}
         self.released: Dict[int, Request] = {}
@@ -255,8 +264,15 @@ class Fleet:
             self.supervisor.events.append(
                 f"tick {self.tick_no}: replica {replica.rid} decode-state "
                 f"scrub detected corruption ({action})")
+            self.event_log.emit(
+                "detection", tick=self.tick_no, site="decode_state",
+                replica=replica.rid, detail={"check": "state_scrub"})
             if ev["recovered"]:
                 self.metrics.observe_recovery(ev["seconds"], rollback=True)
+                self.event_log.emit(
+                    "rollback", tick=self.tick_no, site="decode_state",
+                    replica=replica.rid, seconds=ev["seconds"],
+                    detail={"steps_replayed": ev["steps_replayed"]})
                 continue
             t0 = time.perf_counter()
             drained = replica.in_flight() + replica.uncertified
@@ -264,8 +280,13 @@ class Fleet:
             # weights are untouched by a state SEU: a run-state reset (not a
             # quarantine) makes the replica clean again
             replica.engine.reset()
-            self.metrics.recovery_seconds.append(time.perf_counter() - t0)
+            seconds = time.perf_counter() - t0
+            self.metrics.recovery_seconds.observe(seconds)
             self.metrics.state_drains += 1
+            self.event_log.emit(
+                "recovery", tick=self.tick_no, site="decode_state",
+                replica=replica.rid, seconds=seconds,
+                detail={"action": "drain_replay", "drained": len(drained)})
             for req in drained:
                 rec = self.records.get(req.uid)
                 if rec is not None and not rec.terminal:
@@ -347,6 +368,10 @@ class Fleet:
         self.supervisor.events.append(
             f"tick {self.tick_no}: uid {rec.req.uid} DMR mismatch "
             f"(replicas {rec.primary_rid}/{rec.shadow_rid})")
+        self.event_log.emit(
+            "detection", tick=self.tick_no, uid=rec.req.uid,
+            replica=rec.primary_rid,
+            detail={"check": "dmr_compare", "shadow_rid": rec.shadow_rid})
         for rid in (rec.primary_rid, rec.shadow_rid):
             r = self.replicas[rid]
             if r.state is ReplicaState.HEALTHY and not self.supervisor.scrub(
@@ -354,6 +379,17 @@ class Fleet:
                 self._fail_replica(r, reason="weight scrub failed "
                                    "(DMR attribution)", recover=True)
         self._replay(rec)
+
+    # ------------------------------------------------------------ injection
+    def strike(self, rid: int, site: str, fault, key) -> None:
+        """Campaign/drill injection surface: route an SEU to a replica's
+        engine and record it — with fault provenance and the fleet tick —
+        in the event log, so reports can reconstruct the
+        injection→detection→recovery timeline."""
+        self.event_log.emit(
+            "strike", tick=self.tick_no, site=site, replica=rid,
+            fault=getattr(fault, "name", getattr(fault, "__name__", "")))
+        self.replicas[rid].engine.strike(site, fault, key)
 
     # ------------------------------------------------------------- failover
     def kill_replica(self, rid: int, reason: str = "killed"):
@@ -386,6 +422,9 @@ class Fleet:
             self.metrics.replicas_lost += 1
             self.supervisor.events.append(
                 f"tick {self.tick_no}: replica {replica.rid} DEAD ({reason})")
+            self.event_log.emit("replica_dead", tick=self.tick_no,
+                                replica=replica.rid,
+                                detail={"reason": reason})
         for req in drained:
             rec = self.records.get(req.uid)
             if rec is not None and not rec.terminal:
@@ -398,6 +437,8 @@ class Fleet:
         have produced."""
         rec.replays += 1
         self.metrics.failovers += 1
+        self.event_log.emit("failover", tick=self.tick_no, uid=rec.req.uid,
+                            detail={"replay": rec.replays})
         self.metrics.lost_tokens += len(rec.req.output or [])
         if rec.shadow is not None:
             self.metrics.lost_tokens += len(rec.shadow.output or [])
@@ -497,6 +538,8 @@ class Fleet:
         self.supervisor.reset()
         self.metrics = FleetMetrics(
             lost_work_bound_tokens=self.metrics.lost_work_bound_tokens)
+        self.event_log = EventLog(policy=self.policy.value)
+        self.supervisor.event_log = self.event_log
         self.tick_no = 0
         self.records = {}
         self.released = {}
@@ -515,9 +558,11 @@ class Fleet:
             pass
 
     # -------------------------------------------------------------- report
-    def report(self) -> dict:
-        """Fleet metrics + per-replica state, JSON-ready."""
-        out = self.metrics.to_json()
+    def report(self, wall: bool = False) -> dict:
+        """Fleet metrics + per-replica state, JSON-ready.  ``wall=True``
+        adds the wall-clock-derived rates (non-deterministic; see
+        ``FleetMetrics.to_json``)."""
+        out = self.metrics.to_json(wall=wall)
         out["policy"] = self.policy.value
         out["replicas"] = [
             {"rid": r.rid, "state": r.state.value,

@@ -1,73 +1,112 @@
-"""Fleet-level service metrics.
+"""Fleet-level service metrics — built on the ``repro.obs`` registry.
 
 One ``FleetMetrics`` instance accumulates everything a dependable-serving
 SLO needs: delivery counters (released / rejected / deadline misses),
 dependability counters (scrubs, detections, recoveries, failovers), the
 lost-work accounting the paper's bounded-recovery story requires, and
 per-request latency in *ticks* (the fleet's deterministic clock) so the
-numbers replay bit-exactly under campaign seeds.  ``to_json`` is the export
-surface — the fleet CLI and campaign reports both serialize it verbatim.
+numbers replay bit-exactly under campaign seeds.
+
+Counters live in an ``repro.obs.Registry`` (attribute access is preserved:
+``metrics.released += 1`` still works, routed to the registry counter), and
+the two distributions that used to be unbounded Python lists — release
+latency and recovery wall time — are streaming ``Histogram``s: a fleet that
+serves ten million requests holds the same few hundred bytes of metric
+state as one that serves ten.  The registry doubles as the Prometheus /
+JSON-snapshot export surface (``metrics.registry``).
+
+``to_json`` is the export surface the fleet CLI and campaign reports
+serialize verbatim.  Wall-clock-derived fields (``wall_seconds``,
+``tokens_per_second``) are opt-in via ``to_json(wall=True)``: they change
+run to run even under fixed seeds, so the deterministic default keeps
+report diffs clean.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import pathlib
 import time
-from typing import List
 
-import numpy as np
+from repro.obs import Histogram, Registry
 
-
-@dataclasses.dataclass
-class FleetMetrics:
+# every integer counter the fleet maintains, in export order
+_COUNTERS = (
     # configuration-derived bound: max tokens a replica can produce between
     # two clean scrubs (certification window × batch width)
-    lost_work_bound_tokens: int = 0
-
+    "lost_work_bound_tokens",
     # service counters
-    ticks: int = 0
-    engine_steps: int = 0
-    submitted: int = 0
-    released: int = 0
-    rejected: int = 0
-    deadline_misses: int = 0
-    failed: int = 0
-    tokens_out: int = 0              # tokens of *released* (certified) requests
-
+    "ticks", "engine_steps", "submitted", "released", "rejected",
+    "deadline_misses", "failed",
+    "tokens_out",                # tokens of *released* (certified) requests
     # dependability counters
-    scrubs: int = 0
-    detections: int = 0              # scrub mismatches + DMR disagreements + state-scrub hits
-    recoveries: int = 0              # quarantine→restore→re-verify→readmit cycles
-    failovers: int = 0               # requests replayed on another replica
-    replicas_lost: int = 0           # replicas that ended DEAD
-    lost_tokens: int = 0             # tokens discarded and re-decoded (actual lost work)
-
+    "scrubs",
+    "detections",         # scrub mismatches + DMR disagreements + state hits
+    "recoveries",         # quarantine→restore→re-verify→readmit cycles
+    "failovers",          # requests replayed on another replica
+    "replicas_lost",      # replicas that ended DEAD
+    "lost_tokens",        # tokens discarded and re-decoded (actual lost work)
     # recovery accounting (checkpoint/restart as a measured subsystem)
-    incremental_restores: int = 0    # quarantine recoveries served by partial restore
-    full_reloads: int = 0            # recoveries that needed the whole checkpoint
-    leaves_restored: int = 0         # tensors re-read across incremental restores
-    state_scrub_detections: int = 0  # decode-state checksum mismatches (transient SEUs)
-    state_rollbacks: int = 0         # engine snapshot rollbacks (CKPT transient recovery)
-    state_drains: int = 0            # drain+replay transient recoveries (ABFT detect mode)
+    "incremental_restores",   # quarantine recoveries served by partial restore
+    "full_reloads",           # recoveries that needed the whole checkpoint
+    "leaves_restored",        # tensors re-read across incremental restores
+    "state_scrub_detections",  # decode-state checksum mismatches (transients)
+    "state_rollbacks",        # engine snapshot rollbacks (CKPT recovery)
+    "state_drains",           # drain+replay transient recoveries (ABFT detect)
+)
 
-    # latency, in fleet ticks (submit → release)
-    latencies: List[int] = dataclasses.field(default_factory=list)
-    # recovery latency, wall seconds (quarantine-restore + snapshot rollbacks)
-    recovery_seconds: List[float] = dataclasses.field(default_factory=list)
-    started_at: float = dataclasses.field(default_factory=time.time)
+# latency in fleet ticks: power-of-two edges 1..8192
+_TICK_BUCKETS = tuple(float(2 ** i) for i in range(14))
+# recovery wall seconds: 100 µs .. ~26 s exponential
+_SECONDS_BUCKETS = tuple(0.0001 * 4.0 ** i for i in range(10))
+
+
+class FleetMetrics:
+    """Registry-backed fleet metrics with the legacy attribute surface."""
+
+    def __init__(self, lost_work_bound_tokens: int = 0,
+                 registry: Registry = None):
+        self.registry = registry if registry is not None else Registry()
+        self._c = {name: self.registry.counter("fleet_" + name)
+                   for name in _COUNTERS}
+        # latency, in fleet ticks (submit → release)
+        self.latencies: Histogram = self.registry.histogram(
+            "fleet_release_latency_ticks",
+            "submit-to-release latency in fleet ticks",
+            buckets=_TICK_BUCKETS)
+        # recovery latency, wall seconds (quarantine restores + rollbacks)
+        self.recovery_seconds: Histogram = self.registry.histogram(
+            "fleet_recovery_seconds",
+            "wall time of measured recovery actions",
+            buckets=_SECONDS_BUCKETS)
+        self.started_at = time.time()
+        self.lost_work_bound_tokens = lost_work_bound_tokens
+
+    # counter attribute routing: ``metrics.released += 1`` reads and writes
+    # the registry counter, so the monolith-era call sites stay unchanged
+    def __getattr__(self, name):
+        c = self.__dict__.get("_c")
+        if c is not None and name in c:
+            return c[name].value
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        c = self.__dict__.get("_c")
+        if c is not None and name in c:
+            c[name].value = int(value)
+        else:
+            object.__setattr__(self, name, value)
 
     # ------------------------------------------------------------- derived
     def observe_release(self, latency_ticks: int, n_tokens: int):
         self.released += 1
         self.tokens_out += n_tokens
-        self.latencies.append(int(latency_ticks))
+        self.latencies.observe(int(latency_ticks))
 
     def observe_recovery(self, seconds: float, *, leaves: int = 0,
                          incremental: bool = False, rollback: bool = False):
         """One measured recovery action: a quarantine restore (incremental
         or full-reload) or an engine decode-state snapshot rollback."""
-        self.recovery_seconds.append(float(seconds))
+        self.recovery_seconds.observe(float(seconds))
         if rollback:
             self.state_rollbacks += 1
         elif incremental:
@@ -77,19 +116,14 @@ class FleetMetrics:
             self.full_reloads += 1
 
     def recovery_mean_seconds(self) -> float:
-        if not self.recovery_seconds:
-            return 0.0
-        return float(np.mean(self.recovery_seconds))
+        return self.recovery_seconds.mean()
 
     def recovery_max_seconds(self) -> float:
-        if not self.recovery_seconds:
-            return 0.0
-        return float(np.max(self.recovery_seconds))
+        h = self.recovery_seconds
+        return float(h.max) if h.count else 0.0
 
     def latency_percentile(self, q: float) -> float:
-        if not self.latencies:
-            return 0.0
-        return float(np.percentile(np.asarray(self.latencies), q))
+        return self.latencies.percentile(q)
 
     @property
     def p50_ticks(self) -> float:
@@ -103,25 +137,30 @@ class FleetMetrics:
         return self.tokens_out / max(self.ticks, 1)
 
     # -------------------------------------------------------------- export
-    def to_json(self) -> dict:
-        d = {f.name: getattr(self, f.name)
-             for f in dataclasses.fields(self)
-             if f.name not in ("latencies", "recovery_seconds", "started_at")}
+    def to_json(self, wall: bool = False) -> dict:
+        """JSON-ready metrics.  Deterministic by default; ``wall=True`` adds
+        the wall-clock-derived rates (they vary run to run, so reports that
+        want diffable output leave them off)."""
+        d = {name: self._c[name].value for name in _COUNTERS}
         d.update(
-            recovery_count=len(self.recovery_seconds),
+            recovery_count=self.recovery_seconds.count,
             recovery_mean_seconds=round(self.recovery_mean_seconds(), 6),
             recovery_max_seconds=round(self.recovery_max_seconds(), 6),
             p50_latency_ticks=self.p50_ticks,
             p99_latency_ticks=self.p99_ticks,
             tokens_per_tick=self.throughput_tokens_per_tick(),
-            wall_seconds=round(time.time() - self.started_at, 3),
-            tokens_per_second=round(
-                self.tokens_out / max(time.time() - self.started_at, 1e-9), 1),
         )
+        if wall:
+            elapsed = time.time() - self.started_at
+            d.update(
+                wall_seconds=round(elapsed, 3),
+                tokens_per_second=round(
+                    self.tokens_out / max(elapsed, 1e-9), 1),
+            )
         return d
 
-    def dump(self, path) -> pathlib.Path:
+    def dump(self, path, wall: bool = False) -> pathlib.Path:
         path = pathlib.Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(self.to_json(), indent=2))
+        path.write_text(json.dumps(self.to_json(wall=wall), indent=2))
         return path

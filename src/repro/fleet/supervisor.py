@@ -46,6 +46,14 @@ class Supervisor:
                                  heartbeat_timeout=heartbeat_timeout,
                                  straggler_factor=straggler_factor)
         self.events: List[str] = self.orch.events   # one shared event log
+        # structured dependability event log (repro.obs.EventLog) — the
+        # fleet installs its own so supervisor verdicts carry provenance;
+        # None keeps the supervisor usable standalone
+        self.event_log = None
+
+    def _emit(self, kind: str, tick: int, **fields):
+        if self.event_log is not None:
+            self.event_log.emit(kind, tick=tick, **fields)
 
     def reset(self):
         self.orch = Orchestrator(self.n_replicas,
@@ -78,6 +86,10 @@ class Supervisor:
             self.events.append(
                 f"tick {tick}: replica {replica.rid} scrub FAILED "
                 f"({len(bad)} corrupted leaves, e.g. {bad[0]})")
+            self._emit("detection", tick, site="weights",
+                       replica=replica.rid,
+                       detail={"check": "storage_scrub",
+                               "leaves": len(bad)})
             return False
         replica.last_clean_scrub_tick = tick
         return True
@@ -101,6 +113,7 @@ class Supervisor:
         t0 = time.perf_counter()
         replica.state = ReplicaState.QUARANTINED
         self.events.append(f"tick {tick}: replica {replica.rid} quarantined")
+        self._emit("quarantine", tick, replica=replica.rid)
         replica.state = ReplicaState.RECOVERING
         bad = list(replica.last_scrub_bad)
         incremental = False
@@ -118,6 +131,8 @@ class Supervisor:
             self.events.append(
                 f"tick {tick}: replica {replica.rid} DEAD "
                 f"(checkpoint restore failed: {e})")
+            self._emit("replica_dead", tick, replica=replica.rid,
+                       detail={"reason": "restore_failed"})
             return False
         still_bad = replica.scrub()
         if still_bad and incremental:
@@ -135,6 +150,8 @@ class Supervisor:
                 self.events.append(
                     f"tick {tick}: replica {replica.rid} DEAD "
                     f"(fallback reload failed: {e})")
+                self._emit("replica_dead", tick, replica=replica.rid,
+                           detail={"reason": "fallback_reload_failed"})
                 return False
             still_bad = replica.scrub()
         if still_bad:
@@ -143,6 +160,8 @@ class Supervisor:
             self.events.append(
                 f"tick {tick}: replica {replica.rid} DEAD "
                 f"(re-verify failed after restore)")
+            self._emit("replica_dead", tick, replica=replica.rid,
+                       detail={"reason": "reverify_failed"})
             return False
         seconds = time.perf_counter() - t0
         replica.state = ReplicaState.HEALTHY
@@ -151,6 +170,9 @@ class Supervisor:
         metrics.recoveries += 1
         metrics.observe_recovery(seconds, leaves=len(bad),
                                  incremental=incremental)
+        self._emit("recovery", tick, site="weights", replica=replica.rid,
+                   seconds=seconds,
+                   detail={"incremental": incremental, "leaves": len(bad)})
         how = (f"incremental restore of {len(bad)} leaves" if incremental
                else "full reload")
         self.events.append(

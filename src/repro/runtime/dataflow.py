@@ -42,6 +42,24 @@ Two drivers share the stage/queue primitives:
 Device-fault recovery (snapshot/rollback, decode-state scrubbing) lives at
 the executor level because a consistent restore spans admit bookkeeping and
 decode state together; see docs/streaming.md and docs/recovery.md.
+
+Observability (``repro.obs``) threads through the pipeline as a pure
+observer — all three hooks default off and cost nothing when absent:
+
+  * ``tracer=``    a ``SpanTracer``: per-request spans for every stage
+    residency (admit → prefill → decode → certify) plus release instants
+    and per-pump queue-depth / slot-occupancy counter tracks, keyed on the
+    executor's deterministic **tick clock** (one tick per cooperative pump
+    cycle).  Exports Chrome ``trace_event`` JSON; byte-identical across
+    same-seed runs.
+  * ``event_log=`` an ``EventLog``: typed dependability events (strike /
+    detection / rollback) with fault provenance, the substrate campaign
+    reports reconstruct injection→detection→recovery timelines from.
+  * ``metrics=``   a ``Registry``: streaming counters/gauges/histograms
+    (released requests, release-latency ticks, queue depths) — bounded
+    memory regardless of run length.
+
+See docs/observability.md.
 """
 from __future__ import annotations
 
@@ -306,6 +324,10 @@ class Request:
     output: Optional[List[int]] = None
     submitted_at: float = 0.0
     finished_at: float = 0.0
+    # deterministic tick-clock counterparts of the wall timestamps (filled
+    # only when the executor has observability attached; -1 = not stamped)
+    submitted_tick: int = -1
+    finished_tick: int = -1
 
 
 @dataclasses.dataclass
@@ -368,9 +390,14 @@ class AdmitStage(Stage):
 
     def pump(self) -> bool:
         moved = False
+        tr = self.decode.ex.tracer
         while (self.inbox.items and self.reservable() > 0
                and not self.outbox.full()):
-            self.outbox.try_put(self.inbox.items.popleft())
+            req = self.inbox.items.popleft()
+            self.outbox.try_put(req)
+            if tr is not None:
+                tr.close_span(req.uid, "admit")
+                tr.open_span(req.uid, "prefill", prompt_len=len(req.prompt))
             moved = True
         return moved
 
@@ -460,6 +487,12 @@ class DecodeStage(Stage):
         """Hand a finished request downstream, FIFO: anything already held
         goes first, and a full outbox parks the request instead of losing
         it (the unchecked ``try_put`` drop bug)."""
+        ex = self.ex
+        req.finished_tick = ex.tick
+        if ex.tracer is not None:
+            ex.tracer.close_span(req.uid, "decode",
+                                 tokens=len(req.output or ()))
+            ex.tracer.open_span(req.uid, "certify")
         self._pending.append(req)
         self.flush_pending()
 
@@ -482,6 +515,10 @@ class DecodeStage(Stage):
                 break
             req, n = item.req, item.prompt_len
             ex._since_snapshot.append(req)
+            if ex.tracer is not None:
+                ex.tracer.close_span(req.uid, "prefill")
+                ex.tracer.open_span(req.uid, "decode", slot=slot,
+                                    prompt_len=n)
             self.cache, self.tokens = _splice_slot(
                 self.cache, item.cache, self.tokens,
                 jnp.int32(slot), jnp.int32(item.first_token), jnp.int32(n))
@@ -601,6 +638,7 @@ class CertifyStage(Stage):
         while self._pending and self.outbox.try_put(self._pending[0]):
             self._pending.popleft()
             moved = True
+        tr = self.ex.tracer
         while True:
             req = self.inbox.try_get()
             if Channel.is_empty_token(req):
@@ -608,7 +646,15 @@ class CertifyStage(Stage):
             moved = True
             hook = self.ex.certify
             if hook is None or hook(req):
+                if tr is not None:
+                    tr.close_span(req.uid, "certify", certified=True)
                 self._forward(req)
+            elif tr is not None:
+                # withheld: the hook's owner (fleet) takes custody and
+                # settles out of band — close the span with the verdict
+                # rather than leaving it dangling forever
+                tr.close_span(req.uid, "certify", certified=False,
+                              withheld=True)
 
 
 class ReleaseStage(Stage):
@@ -658,7 +704,8 @@ class StreamingExecutor:
                  snapshot_every: int = 32, eos_id: int = -1,
                  compiled=None, state_scrub: str = "off",
                  certify: Optional[Callable[[Request], bool]] = None,
-                 drain_barrier: bool = False, multi_step: int = 1):
+                 drain_barrier: bool = False, multi_step: int = 1,
+                 tracer=None, event_log=None, metrics=None):
         self.cfg = cfg
         self.params = params
         self.capacity = capacity
@@ -674,6 +721,34 @@ class StreamingExecutor:
         # masks — same token streams, 1/N host syncs, joins at window edges.
         self.multi_step = multi_step
         self.stats = EngineStats()
+
+        # observability — pure observers, all optional (see repro.obs).
+        # tick is the deterministic pump-cycle clock spans/events key on;
+        # it advances once per step() and never rolls back.
+        self.tick = 0
+        self.tracer = tracer
+        self.event_log = event_log
+        self.metrics = metrics
+        if metrics is not None:
+            self._m_submitted = metrics.counter(
+                "engine_requests_submitted_total", "requests submitted")
+            self._m_released = metrics.counter(
+                "engine_requests_released_total",
+                "requests that cleared the release stage")
+            self._m_tokens = metrics.counter(
+                "engine_tokens_out_total", "decoded tokens")
+            self._m_steps = metrics.counter(
+                "engine_decode_steps_total", "decode steps executed")
+            self._m_latency = metrics.histogram(
+                "engine_release_latency_ticks",
+                "submit-to-release latency in pump ticks",
+                buckets=tuple(float(2 ** i) for i in range(14)))
+            self._m_qdepth = metrics.gauge(
+                "engine_queue_depth", "requests queued before decode")
+            self._m_slots = metrics.gauge(
+                "engine_active_slots", "occupied decode slots")
+            self._mm_steps = 0          # last stats.steps folded into counters
+            self._mm_tokens = 0
 
         if compiled is not None:
             # replica fleets share one jitted (decode, prefill) pair so N
@@ -741,6 +816,9 @@ class StreamingExecutor:
         self.decode.reset_state()
         self.certifier._pending.clear()
         self.stats = EngineStats()
+        if self.metrics is not None:
+            self._mm_steps = 0
+            self._mm_tokens = 0
         self._snapshot = None
         self._snapshot_step = 0
         self._since_snapshot = []
@@ -769,9 +847,11 @@ class StreamingExecutor:
             return True
         fresh = _state_checksums(self._device_state())
         clean = _checks_equal(fresh, self._expected_check)
+        # emit_events=False: _scrub_and_recover emits the (site-attributed)
+        # detection event itself — one detection, one event
         self.record_dependability({
             "faults_detected": jnp.int32(0 if clean else 1),
-            "checks_run": jnp.int32(1)})
+            "checks_run": jnp.int32(1)}, emit_events=False)
         return clean
 
     def _scrub_and_recover(self):
@@ -783,6 +863,12 @@ class StreamingExecutor:
             return
         event = {"step": self.stats.steps, "recovered": False,
                  "seconds": 0.0, "steps_replayed": 0}
+        if self.tracer is not None:
+            self.tracer.instant("scrub_detection", site="decode_state")
+        if self.event_log is not None:
+            self.event_log.emit("detection", tick=self.tick,
+                                site="decode_state",
+                                detail={"check": "state_scrub"})
         if self.state_scrub == "rollback" and self._snapshot is not None:
             t0 = time.perf_counter()
             try:
@@ -790,6 +876,14 @@ class StreamingExecutor:
                 event["recovered"] = True
                 event["seconds"] = time.perf_counter() - t0
                 self.record_dependability({"faults_recovered": jnp.int32(1)})
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "rollback", steps_replayed=event["steps_replayed"])
+                if self.event_log is not None:
+                    self.event_log.emit(
+                        "rollback", tick=self.tick, site="decode_state",
+                        seconds=event["seconds"],
+                        detail={"steps_replayed": event["steps_replayed"]})
             except RuntimeError:
                 # snapshot itself failed verification — leave recovered
                 # False; the supervisor's drain+replay is the fallback
@@ -804,10 +898,20 @@ class StreamingExecutor:
         ev, self.state_events = self.state_events, []
         return ev
 
-    def record_dependability(self, stats: dict):
+    def record_dependability(self, stats: dict, emit_events: bool = True):
         """Fold a DependabilityStats pytree (from dependable ops or a
-        campaign's detection verdicts) into the executor-lifetime counters."""
+        campaign's detection verdicts) into the executor-lifetime counters.
+        With an event log attached, positive detection counts from
+        core/dependability checks also surface as ``detection`` events
+        (``emit_events=False`` for callers that emit their own)."""
         self.dependability = DependabilityStats.merge(self.dependability, stats)
+        if emit_events and self.event_log is not None \
+                and isinstance(stats, dict):
+            detected = int(stats.get("faults_detected", 0))
+            if detected > 0:
+                self.event_log.emit(
+                    "detection", tick=self.tick,
+                    detail={"check": "dependability", "count": detected})
 
     # ------------------------------------------------- per-stage injection
     def strike(self, site: str, fault, key) -> None:
@@ -830,11 +934,24 @@ class StreamingExecutor:
             raise ValueError(
                 f"no stage owns fault site {site!r} "
                 f"(known: kv_cache, decode_state, weights)")
+        fault_name = getattr(fault, "name", getattr(fault, "__name__", ""))
+        if self.tracer is not None:
+            self.tracer.instant("strike", site=site, fault=fault_name)
+        if self.event_log is not None:
+            self.event_log.emit("strike", tick=self.tick, site=site,
+                                fault=fault_name)
 
     # ------------------------------------------------------------- driving
     def submit(self, req: Request):
         req.submitted_at = time.time()
+        req.submitted_tick = self.tick
         self.submit_ch.items.append(req)
+        if self.tracer is not None:
+            self.tracer.open_span(req.uid, "admit",
+                                  prompt_len=len(req.prompt),
+                                  max_new_tokens=req.max_new_tokens)
+        if self.metrics is not None:
+            self._m_submitted.inc()
 
     def cancel(self, uid: int) -> bool:
         """Evict a request from any stage it occupies (deadline/abort path).
@@ -842,6 +959,9 @@ class StreamingExecutor:
         prefill.  Also purged from snapshot bookkeeping so a later
         ``restore_snapshot`` cannot resurrect cancelled work.  Returns True
         if the request was found live in the pipeline."""
+        if self.tracer is not None:
+            for stage in ("admit", "prefill", "decode", "certify"):
+                self.tracer.cancel_span(uid, stage)
         self._since_snapshot = [r for r in self._since_snapshot
                                 if r.uid != uid]
         if self._snapshot is not None:
@@ -880,6 +1000,9 @@ class StreamingExecutor:
         snapshot cadence → decode step → certify → release.  Returns the
         requests that cleared the release stage this cycle (certify-hook
         holds excluded)."""
+        self.tick += 1
+        if self.tracer is not None:
+            self.tracer.tick_to(self.tick)
         # scrub BEFORE this cycle consumes decode state (and before a join
         # mutates it): anything that changed since the last legitimate
         # mutation is an SEU, and under "rollback" we restart from the
@@ -903,7 +1026,32 @@ class StreamingExecutor:
         # hook may re-enter the executor (fleet recalls, resets, replays)
         self.certifier.pump()
         self.release.pump()
-        return self.release.collect()
+        released = self.release.collect()
+        if self.tracer is not None:
+            for req in released:
+                self.tracer.instant("release", stage="release", uid=req.uid,
+                                    tokens=len(req.output or ()))
+            self.tracer.counter(
+                "queue_depth", submit=len(self.submit_ch),
+                admitted=len(self._admit_ch),
+                prefilled=len(self._prefill_ch),
+                parked=len(self.decode._pending)
+                + len(self.certifier._pending))
+            self.tracer.counter("slots", active=len(self.decode.active),
+                                capacity=self.capacity)
+        if self.metrics is not None:
+            self._m_released.inc(len(released))
+            self._m_steps.inc(self.stats.steps - self._mm_steps)
+            self._m_tokens.inc(self.stats.tokens_out - self._mm_tokens)
+            self._mm_steps = self.stats.steps
+            self._mm_tokens = self.stats.tokens_out
+            self._m_qdepth.set(len(self.submit_ch) + len(self._admit_ch)
+                               + len(self._prefill_ch))
+            self._m_slots.set(len(self.decode.active))
+            for req in released:
+                if req.submitted_tick >= 0:
+                    self._m_latency.observe(self.tick - req.submitted_tick)
+        return released
 
     def busy(self) -> bool:
         """Work anywhere in the pipeline before the release stage?
@@ -998,13 +1146,27 @@ class StreamingExecutor:
         resurrected = {r.uid for r in d.active.values()}
         d._pending = deque(r for r in d._pending
                            if r.uid not in resurrected)
+        tr = self.tracer
         for s, req in d.active.items():
             req.output = list(snap["outputs"][s])
             req.finished_at = 0.0
+            req.finished_tick = -1
+            if tr is not None:
+                # resurrected: back in decode; a suspect copy may have
+                # already closed its decode span and opened certify —
+                # re-open decode (restart) and drop the stale certify span
+                tr.cancel_span(req.uid, "certify")
+                tr.open_span(req.uid, "decode", slot=s, replayed=True)
         for req in reversed(self._since_snapshot):
             req.output = None
             req.finished_at = 0.0
+            req.finished_tick = -1
             self.submit_ch.items.appendleft(req)
+            if tr is not None:
+                # requeued from scratch: whatever stage it reached is void
+                for stage in ("prefill", "decode", "certify"):
+                    tr.cancel_span(req.uid, stage)
+                tr.open_span(req.uid, "admit", requeued=True)
         self._since_snapshot = []
         lost = self.stats.steps - snap["steps"]
         self.stats.steps = snap["steps"]

@@ -51,7 +51,8 @@ class Engine:
                  compiled=None, backend: Optional[str] = None,
                  state_scrub: str = "off",
                  certify: Optional[Callable[[Request], bool]] = None,
-                 drain_barrier: bool = False, multi_step: int = 1):
+                 drain_barrier: bool = False, multi_step: int = 1,
+                 tracer=None, event_log=None, metrics=None):
         # engine-level execution-backend override for the quantized hot
         # paths (core/backend registry); baked into cfg so the jitted
         # decode/prefill pair and any compiled-pair sharing stay consistent
@@ -61,7 +62,8 @@ class Engine:
             prefill_pad=prefill_pad, snapshot_every=snapshot_every,
             eos_id=eos_id, compiled=compiled, state_scrub=state_scrub,
             certify=certify, drain_barrier=drain_barrier,
-            multi_step=multi_step)
+            multi_step=multi_step, tracer=tracer, event_log=event_log,
+            metrics=metrics)
 
     # ------------------------------------------------------------- pipeline
     @property
@@ -176,6 +178,32 @@ class Engine:
     @property
     def state_events(self):
         return self._ex.state_events
+
+    # ------------------------------------------------------- observability
+    @property
+    def tick(self) -> int:
+        """The executor's deterministic pump-cycle clock."""
+        return self._ex.tick
+
+    @property
+    def tracer(self):
+        return self._ex.tracer
+
+    @tracer.setter
+    def tracer(self, value):
+        self._ex.tracer = value
+
+    @property
+    def event_log(self):
+        return self._ex.event_log
+
+    @event_log.setter
+    def event_log(self, value):
+        self._ex.event_log = value
+
+    @property
+    def metrics(self):
+        return self._ex.metrics
 
     @property
     def dependability(self):

@@ -227,7 +227,7 @@ def test_ckpt_weight_seu_incremental_restore(smollm_fleet):
     assert m.incremental_restores == 1            # partial restore served it
     assert m.full_reloads == 0
     assert m.leaves_restored >= 1
-    assert len(m.recovery_seconds) == 1 and m.recovery_seconds[0] > 0
+    assert m.recovery_seconds.count == 1 and m.recovery_seconds.sum > 0
     assert m.to_json()["recovery_mean_seconds"] > 0
     assert fleet.replicas[0].state is ReplicaState.HEALTHY
     assert [list(r.output) for r in reqs] == golden

@@ -71,6 +71,15 @@ def smoke_rewrite(cmd: str, out_dir: Path, idx: int) -> str:
                      lambda m: f"--out {out_dir / Path(m.group(1)).name}", cmd)
     elif re.search(r"-m repro\.(campaign|fleet)\.cli", cmd):
         cmd += f" --out {out_dir / f'cmd{idx:02d}'}"
+    # observability artifacts: redirect documented paths into the tmpdir —
+    # both the producing flags (--trace-out …) and tools/check_obs.py's
+    # consuming flags (--trace …), so produce-then-validate doc sequences
+    # line up on the same files
+    for flag in ("--trace-out", "--metrics-out", "--events-out",
+                 "--trace", "--events", "--bench"):
+        cmd = re.sub(
+            rf"(?<!\S){flag}\s+(\S+)",
+            lambda m, f=flag: f"{f} {out_dir / Path(m.group(1)).name}", cmd)
     return cmd
 
 

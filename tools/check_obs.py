@@ -1,0 +1,176 @@
+"""Observability artifact validation — schema + overhead gate for CI.
+
+Validates the JSON artifacts the serving stack emits against the committed
+shape contracts in ``tools/schemas/`` and enforces the tracing overhead
+budget, without any third-party dependency (the validator implements the
+JSON-Schema subset the contracts use: ``type`` (incl. union lists),
+``required``, ``properties``, ``items``, ``enum``, ``minimum``).
+
+    PYTHONPATH=src python tools/check_obs.py --trace trace.json
+    PYTHONPATH=src python tools/check_obs.py --events events.json
+    PYTHONPATH=src python tools/check_obs.py \
+        --bench BENCH_serving.json --overhead-budget 0.03
+
+Beyond the schema, ``--trace`` also checks the phase-conditional fields the
+schema subset cannot express (``X`` spans need ``ts``/``dur`` and a request
+uid; ``C``/``i`` samples need ``ts``), and ``--events`` cross-checks the
+reconstructed timelines against the raw events.
+Exit code 0 = every artifact validates; 1 = any violation (printed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SCHEMA_DIR = Path(__file__).resolve().parent / "schemas"
+
+_TYPES = {
+    "object": dict, "array": list, "string": str,
+    "integer": int, "number": (int, float), "boolean": bool,
+    "null": type(None),
+}
+
+
+def validate(instance, schema, path="$", errors=None):
+    """Hand-rolled validator for the subset of JSON Schema the committed
+    contracts use.  Appends human-readable violations to ``errors``."""
+    if errors is None:
+        errors = []
+    t = schema.get("type")
+    if t is not None:
+        types = t if isinstance(t, list) else [t]
+        py = tuple(_TYPES[x] for x in types)
+        ok = isinstance(instance, py)
+        # bool is an int subclass in Python; don't let it satisfy integer
+        if ok and isinstance(instance, bool) and "boolean" not in types:
+            ok = False
+        # JSON integers must not be floats with fractional parts
+        if not ok and "integer" in types and isinstance(instance, float) \
+                and instance.is_integer():
+            ok = True
+        if not ok:
+            errors.append(f"{path}: expected {t}, got "
+                          f"{type(instance).__name__} ({instance!r})")
+            return errors
+    if "enum" in schema and instance not in schema["enum"]:
+        errors.append(f"{path}: {instance!r} not in {schema['enum']}")
+    if "minimum" in schema and isinstance(instance, (int, float)) \
+            and not isinstance(instance, bool) \
+            and instance < schema["minimum"]:
+        errors.append(f"{path}: {instance!r} < minimum {schema['minimum']}")
+    if isinstance(instance, dict):
+        for req in schema.get("required", []):
+            if req not in instance:
+                errors.append(f"{path}: missing required key {req!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in instance:
+                validate(instance[key], sub, f"{path}.{key}", errors)
+    if isinstance(instance, list) and "items" in schema:
+        for i, item in enumerate(instance):
+            validate(item, schema["items"], f"{path}[{i}]", errors)
+    return errors
+
+
+def check_trace_semantics(doc) -> list:
+    """Phase-conditional requirements the schema subset cannot express:
+    ``X`` spans carry integer ``ts``/``dur`` and a request uid; ``C``/``i``
+    samples carry an integer ``ts``.  (Event *file order* is close order,
+    not ``ts`` order — spans are stamped with their open tick — so there is
+    deliberately no monotonicity requirement here.)"""
+    errors = []
+    for i, ev in enumerate(doc.get("traceEvents", [])):
+        ph = ev.get("ph")
+        where = f"$.traceEvents[{i}] ({ph} {ev.get('name')!r})"
+        if ph == "X":
+            for k in ("ts", "dur"):
+                if not isinstance(ev.get(k), int):
+                    errors.append(f"{where}: X span needs integer {k!r}")
+            if "uid" not in ev.get("args", {}):
+                errors.append(f"{where}: request span missing args.uid")
+        elif ph in ("C", "i"):
+            if not isinstance(ev.get("ts"), int):
+                errors.append(f"{where}: {ph} event needs integer 'ts'")
+    return errors
+
+
+def check_events_semantics(doc) -> list:
+    """Chain-consistency: every detected timeline has a detection event,
+    recovery latencies are never negative."""
+    errors = []
+    kinds = [e["kind"] for e in doc.get("events", [])]
+    n_detections = kinds.count("detection")
+    for i, tl in enumerate(doc.get("timelines", [])):
+        where = f"$.timelines[{i}]"
+        if tl["detected"] and n_detections == 0:
+            errors.append(f"{where}: detected=true but no detection events")
+        lat = tl.get("detection_latency_ticks")
+        if tl["detected"] and (lat is None or lat < 0):
+            errors.append(f"{where}: detected=true with bad latency {lat!r}")
+        rlat = tl.get("recovery_latency_ticks")
+        if tl["recovered"] and (rlat is None or rlat < 0):
+            errors.append(f"{where}: recovered=true with bad latency {rlat!r}")
+    return errors
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", action="append", default=[],
+                    help="Chrome trace_event JSON file(s) to validate")
+    ap.add_argument("--events", action="append", default=[],
+                    help="dependability event-log JSON file(s) to validate")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_serving.json with a trace_overhead_frac")
+    ap.add_argument("--overhead-budget", type=float, default=0.03,
+                    help="max tolerated tracing overhead fraction")
+    args = ap.parse_args(argv)
+    if not (args.trace or args.events or args.bench):
+        ap.error("nothing to check: pass --trace/--events/--bench")
+
+    failures = 0
+    trace_schema = _load(SCHEMA_DIR / "trace.schema.json")
+    events_schema = _load(SCHEMA_DIR / "events.schema.json")
+    for path in args.trace:
+        doc = _load(path)
+        errs = validate(doc, trace_schema) + check_trace_semantics(doc)
+        n = len(doc.get("traceEvents", []))
+        print(f"{path}: {n} trace events, "
+              f"{'ok' if not errs else f'{len(errs)} violation(s)'}")
+        for e in errs[:20]:
+            print(f"  {e}", file=sys.stderr)
+        failures += bool(errs)
+    for path in args.events:
+        doc = _load(path)
+        errs = validate(doc, events_schema) + check_events_semantics(doc)
+        print(f"{path}: {len(doc.get('events', []))} events / "
+              f"{len(doc.get('timelines', []))} timelines, "
+              f"{'ok' if not errs else f'{len(errs)} violation(s)'}")
+        for e in errs[:20]:
+            print(f"  {e}", file=sys.stderr)
+        failures += bool(errs)
+    if args.bench:
+        doc = _load(args.bench)
+        frac = doc.get("trace_overhead_frac")
+        if frac is None:
+            print(f"{args.bench}: no trace_overhead_frac (run the bench "
+                  "with --trace-out)", file=sys.stderr)
+            failures += 1
+        elif frac > args.overhead_budget:
+            print(f"{args.bench}: tracing overhead {frac * 100:.1f}% exceeds "
+                  f"budget {args.overhead_budget * 100:.1f}%",
+                  file=sys.stderr)
+            failures += 1
+        else:
+            print(f"{args.bench}: tracing overhead {frac * 100:.1f}% within "
+                  f"{args.overhead_budget * 100:.1f}% budget")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
