@@ -1,22 +1,27 @@
-"""Dependability-policy overhead bench: NONE vs ABFT vs TMR throughput.
+"""Dependability-policy overhead + adaptive-campaign bench.
 
 Measures the steady-state cost of each policy on the quantized matmul and
 conv primitives (the Safe-NEureka-style hybrid-redundancy comparison: how
-much throughput does each protection level buy its coverage with), plus the
-campaign engine's own trial rate, across the execution backends
-(``--backends jnp,pallas`` benchmarks the FPGA/VPU-style same-workload
+much throughput does each protection level buy its coverage with), the
+campaign engine's trial rate per workload, and the headline speedup of the
+adaptive engine: a sequential-sampling campaign reaching the same verdicts
+as a fixed-budget one at equal CI precision, in a fraction of the trials.
+``--backends jnp,pallas`` benchmarks the FPGA/VPU-style same-workload
 cross-backend comparison; the pallas numbers are interpreter wall-clock off
-TPU, so only the jnp rows are throughput claims there).
+TPU, so only the jnp rows are throughput claims there.
 
-    PYTHONPATH=src python -m benchmarks.campaign_bench [--fast]
+    PYTHONPATH=src python -m benchmarks.campaign_bench [--fast] \
+        [--out BENCH_campaign.json]
 
 Prints ``campaign_bench,<name>,<key>=<val>,...`` CSV-ish lines like the
-other benches.  CPU wall-clock: relative overhead is the signal, absolute
-latency is not a TPU claim.
+other benches and writes the committed summary JSON to ``--out``.  CPU
+wall-clock: relative overhead / trial-count ratios are the signal,
+absolute latency is not a TPU claim.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -86,19 +91,80 @@ def bench_conv_policy_overhead(h=32, w=32, cin=32, cout=32, reps=10,
     return rows
 
 
-def bench_trial_rate(trials=200):
-    print(f"\n=== campaign engine trial rate ({trials} trials/config) ===")
+def bench_trial_rate(trials=200, workloads=("qmatmul", "serving"), cache=None):
+    """Trials/s per workload: the kernel path amortizes across one vmapped
+    XLA call; the host-side serving path is one engine run per trial."""
     from repro.campaign import CampaignSpec, run_campaign
-    specs = [CampaignSpec("qmatmul", p, "accumulator", "single_bitflip",
-                          trials, seed=0)
-             for p in (Policy.NONE, Policy.ABFT, Policy.TMR)]
+    out = {}
+    cache = {} if cache is None else cache
+    for workload in workloads:
+        site = "accumulator" if workload == "qmatmul" else "kv_cache"
+        n = trials if workload == "qmatmul" else max(trials // 4, 10)
+        print(f"\n=== campaign trial rate: {workload} ({n} trials/config) ===")
+        specs = [CampaignSpec(workload, p, site, "single_bitflip", n, seed=0)
+                 for p in (Policy.NONE, Policy.ABFT)]
+        run_campaign(specs[:1], cache=cache)      # warm build + compile
+        t0 = time.perf_counter()
+        results = run_campaign(specs, cache=cache)
+        dt = time.perf_counter() - t0
+        total = sum(r.trials for r in results)
+        rate = total / dt
+        print(f"campaign_bench,trial_rate,workload={workload},trials={total},"
+              f"seconds={dt:.2f},trials_per_s={rate:.1f}")
+        out[workload] = {"trials": total, "seconds": round(dt, 3),
+                         "trials_per_s": round(rate, 1)}
+    return out
+
+
+def bench_adaptive_vs_fixed(trials=100, ci_halfwidth=0.1, cache=None):
+    """The adaptive engine's headline: equal-precision verdicts, fewer
+    trials.  Both runs execute prefixes of the same key stream, so the
+    adaptive run's verdict is a true early decision, not a reseed."""
+    from repro.campaign import CampaignSpec, SamplingPlan, run_campaign
+    print(f"\n=== adaptive vs fixed: serving/abft/kv_cache "
+          f"(cap {trials}, target halfwidth {ci_halfwidth:g}) ===")
+    spec = CampaignSpec("serving", Policy.ABFT, "kv_cache",
+                        "single_bitflip", trials, seed=0)
+    cache = {} if cache is None else cache
+    run_campaign([CampaignSpec("serving", Policy.ABFT, "kv_cache",
+                               "single_bitflip", 2, seed=0)], cache=cache)
+
     t0 = time.perf_counter()
-    results = run_campaign(specs)
-    dt = time.perf_counter() - t0
-    total = sum(r.trials for r in results)
-    print(f"campaign_bench,trial_rate,trials={total},seconds={dt:.2f},"
-          f"trials_per_s={total / dt:.1f}")
-    return total / dt
+    fixed = run_campaign([spec], cache=cache)[0]
+    fixed_s = time.perf_counter() - t0
+
+    plan = SamplingPlan(ci_halfwidth=ci_halfwidth, chunk=25, min_trials=25)
+    t0 = time.perf_counter()
+    adaptive = run_campaign([spec], plan=plan, cache=cache)[0]
+    adaptive_s = time.perf_counter() - t0
+
+    trial_speedup = fixed.trials / max(adaptive.trials, 1)
+    wall_speedup = fixed_s / max(adaptive_s, 1e-9)
+    verdict_match = (adaptive.sdc_rate == fixed.sdc_rate == 0.0
+                     and adaptive.detection_rate == fixed.detection_rate)
+    print(f"campaign_bench,adaptive_vs_fixed,fixed_trials={fixed.trials},"
+          f"adaptive_trials={adaptive.trials},"
+          f"trial_speedup={trial_speedup:.2f},wall_speedup={wall_speedup:.2f},"
+          f"verdict_match={verdict_match},"
+          f"adaptive_sdc_ci_hi={adaptive.sdc_ci_hi:.4f}")
+    return {
+        "workload": spec.workload, "policy": spec.policy.value,
+        "site": spec.site, "fault_model": spec.fault_model,
+        "ci_halfwidth": ci_halfwidth, "confidence": plan.confidence,
+        "ci_method": plan.ci_method,
+        "fixed": {"trials": fixed.trials, "seconds": round(fixed_s, 3),
+                  "sdc_rate": fixed.sdc_rate,
+                  "detection_rate": fixed.detection_rate},
+        "adaptive": {"trials": adaptive.trials,
+                     "seconds": round(adaptive_s, 3),
+                     "sdc_rate": adaptive.sdc_rate,
+                     "detection_rate": adaptive.detection_rate,
+                     "sdc_ci_hi": round(adaptive.sdc_ci_hi, 6),
+                     "early_stopped": adaptive.early_stopped},
+        "trial_speedup": round(trial_speedup, 2),
+        "wall_speedup": round(wall_speedup, 2),
+        "verdict_match": verdict_match,
+    }
 
 
 def main(argv=None):
@@ -107,12 +173,28 @@ def main(argv=None):
     ap.add_argument("--backends", default="jnp",
                     help="comma list of execution backends to compare "
                          "(jnp, ref, pallas)")
+    ap.add_argument("--out", default="BENCH_campaign.json",
+                    help="summary JSON path ('' skips writing)")
     args = ap.parse_args(argv)
     backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
     reps = 5 if args.fast else 20
     bench_policy_overhead(reps=reps, backends=backends)
     bench_conv_policy_overhead(reps=max(reps // 2, 3), backends=backends)
-    bench_trial_rate(trials=50 if args.fast else 200)
+    cache = {}
+    rates = bench_trial_rate(trials=50 if args.fast else 200, cache=cache)
+    adaptive = bench_adaptive_vs_fixed(trials=50 if args.fast else 100,
+                                       cache=cache)
+    if args.out:
+        doc = {
+            "bench": "campaign",
+            "fast": bool(args.fast),
+            "trial_rate": rates,
+            "adaptive_vs_fixed": adaptive,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\nwrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -4,18 +4,32 @@ DAVOS-style dependability assessment for the software-rendered rad-hard
 stack: sweep fault models × injection sites × dependability policies ×
 workloads, classify every seeded trial, and emit a per-configuration
 coverage report.  See docs/dependability.md for how to read one.
+
+The execution layer is adaptive (docs/campaign.md): ``SamplingPlan`` turns
+on sequential sampling with early stopping, ``CampaignPool`` shards
+host-side workloads across processes with bit-identical results, and
+``CampaignJournal`` makes runs crash-resumable.
 """
+from repro.campaign.engine import (
+    AbortAfter, CampaignInterrupted, CampaignPool, ChunkOutcome, run_config)
 from repro.campaign.faultload import (
     FAULT_MODELS, CampaignSpec, expand_grid, resolve_fault_model, trial_keys)
+from repro.campaign.journal import CampaignJournal
 from repro.campaign.report import (
     BitCoverageRow, ConfigResult, classify_counts, load_report, to_markdown,
     write_report)
 from repro.campaign.runner import (
-    CASES, build_case, run_bit_sweep, run_campaign)
+    CASES, build_case, kernel_workloads, run_bit_sweep, run_campaign)
+from repro.campaign.stats import (
+    SamplingPlan, binomial_interval, clopper_pearson_interval, halfwidth,
+    wilson_interval)
 
 __all__ = [
     "FAULT_MODELS", "CampaignSpec", "expand_grid", "resolve_fault_model",
     "trial_keys", "BitCoverageRow", "ConfigResult", "classify_counts",
     "load_report", "to_markdown", "write_report", "CASES", "build_case",
-    "run_bit_sweep", "run_campaign",
+    "kernel_workloads", "run_bit_sweep", "run_campaign",
+    "SamplingPlan", "binomial_interval", "clopper_pearson_interval",
+    "halfwidth", "wilson_interval", "CampaignJournal", "CampaignPool",
+    "CampaignInterrupted", "ChunkOutcome", "AbortAfter", "run_config",
 ]

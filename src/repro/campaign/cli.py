@@ -10,6 +10,13 @@ table.  Everything is deterministic in --seed.  ``--backend`` sweeps the
 execution-backend axis (jnp | ref | pallas — see docs/backends.md); kernel
 workloads additionally get a per-bit-position accumulator coverage table
 (``--bit-trials 0`` to skip).
+
+Adaptive mode (``--ci-halfwidth 0.05``) runs each configuration in chunks
+and stops at the first chunk boundary where the SDC-rate confidence
+interval is tighter than the target — ``--trials`` then acts as the hard
+cap.  ``--workers N`` fans host-side workloads across a process pool with
+bit-identical results; ``--resume <dir>`` continues a killed campaign from
+its journal.  See docs/campaign.md.
 """
 from __future__ import annotations
 
@@ -17,9 +24,12 @@ import argparse
 import sys
 import time
 
+from repro.campaign import engine as engine_mod
 from repro.campaign import faultload as fl
+from repro.campaign import journal as journal_mod
 from repro.campaign import report as report_mod
 from repro.campaign import runner
+from repro.campaign import stats as stats_mod
 from repro.core.dependability import Policy
 
 DEFAULT_FAULT_MODELS = "single_bitflip,multi_bitflip,stuck_at0,stuck_at1"
@@ -40,15 +50,50 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--sites", default="all",
                    help=f"comma list or 'all'; known: {list(fl.SITES)}")
     p.add_argument("--fault-models", default=DEFAULT_FAULT_MODELS,
-                   help="comma list (multi_bitflip@<rate> for custom rates)")
-    p.add_argument("--trials", type=int, default=200,
-                   help="seeded trials per configuration")
+                   help="comma list (multi_bitflip@<rate> for custom rates, "
+                        "mbu_burst@<elems>x<bits> for custom MBU clusters)")
+    p.add_argument("--trials", "--max-trials", dest="trials", type=int,
+                   default=200,
+                   help="seeded trials per configuration; under "
+                        "--ci-halfwidth this is the hard cap the sequential "
+                        "sampler may stop short of")
     p.add_argument("--backend", "--backends", dest="backend", default="jnp",
                    help="comma list of execution backends (jnp, ref, pallas)")
     p.add_argument("--bit-trials", type=int, default=8,
                    help="per-bit accumulator sweep trials for kernel "
-                        "workloads (0 disables the bit-coverage table)")
+                        "workloads (0 disables the bit-coverage table); "
+                        "under --ci-halfwidth this too is a cap")
     p.add_argument("--seed", type=int, default=0)
+    # ---- adaptive sequential sampling -----------------------------------
+    p.add_argument("--ci-halfwidth", type=float, default=0.0,
+                   help="stop a configuration once its SDC-rate CI "
+                        "half-width is <= this (0 = fixed budget, run all "
+                        "--trials)")
+    p.add_argument("--confidence", type=float, default=0.95,
+                   help="confidence level for the stopping CI and the "
+                        "report's CI columns")
+    p.add_argument("--ci-method", choices=("wilson", "clopper-pearson"),
+                   default="wilson",
+                   help="binomial interval: wilson (closed form) or "
+                        "clopper-pearson (exact)")
+    p.add_argument("--chunk", type=int, default=25,
+                   help="trials per chunk for host-side workloads (the "
+                        "stopping rule is checked at chunk boundaries)")
+    p.add_argument("--kernel-chunk", type=int, default=100,
+                   help="trials per compiled vmap batch for kernel "
+                        "workloads (coarser: each chunk is one XLA call)")
+    p.add_argument("--min-trials", type=int, default=25,
+                   help="never stop a configuration before this many trials")
+    # ---- sharding / resume ----------------------------------------------
+    p.add_argument("--workers", type=int, default=0,
+                   help="shard host-side workloads across N worker "
+                        "processes (0 = in-process serial); results are "
+                        "bit-identical either way")
+    p.add_argument("--resume", default=None, metavar="DIR",
+                   help="resume a previous run from DIR (its journal/ "
+                        "subdirectory); implies --out DIR")
+    p.add_argument("--no-journal", action="store_true",
+                   help="skip writing the per-config resume journal")
     p.add_argument("--out", default="reports/campaign",
                    help="output directory for campaign.json / campaign.md")
     p.add_argument("--events-out", default=None,
@@ -63,6 +108,14 @@ def main(argv=None) -> int:
     if args.trials < 1:
         print("--trials must be >= 1", file=sys.stderr)
         return 2
+    if args.ci_halfwidth < 0:
+        print("--ci-halfwidth must be >= 0", file=sys.stderr)
+        return 2
+    if args.workers < 0:
+        print("--workers must be >= 0", file=sys.stderr)
+        return 2
+    if args.resume:
+        args.out = args.resume
     log = (lambda s: None) if args.quiet else (lambda s: print(s, flush=True))
 
     workloads = sorted(runner.CASES) if args.workload == "all" \
@@ -79,20 +132,42 @@ def main(argv=None) -> int:
         print("no runnable configurations for this sweep", file=sys.stderr)
         return 2
 
-    log(f"campaign: {len(specs)} configurations × {args.trials} trials "
-        f"(seed {args.seed}, backends {','.join(backends)})")
+    plan = stats_mod.SamplingPlan(
+        ci_halfwidth=args.ci_halfwidth, confidence=args.confidence,
+        ci_method=args.ci_method, chunk=args.chunk,
+        kernel_chunk=args.kernel_chunk,
+        min_trials=args.min_trials, workers=args.workers)
+    journal = None
+    if not args.no_journal:
+        import pathlib
+        journal = journal_mod.CampaignJournal(
+            pathlib.Path(args.out) / "journal")
+
+    mode = (f"adaptive (halfwidth {args.ci_halfwidth:g} @ "
+            f"{args.confidence:g} {args.ci_method})"
+            if plan.adaptive else "fixed budget")
+    log(f"campaign: {len(specs)} configurations × ≤{args.trials} trials, "
+        f"{mode} (seed {args.seed}, backends {','.join(backends)}"
+        + (f", {args.workers} workers" if args.workers else "")
+        + (", resuming" if args.resume else "") + ")")
     t0 = time.time()
     case_cache = {}
     event_sink = [] if args.events_out else None
-    results = runner.run_campaign(specs, log=log, cache=case_cache,
-                                  event_sink=event_sink)
+    run_stats: dict = {}
+    try:
+        results = runner.run_campaign(specs, log=log, cache=case_cache,
+                                      event_sink=event_sink, plan=plan,
+                                      journal=journal, run_stats=run_stats)
+    except engine_mod.CampaignInterrupted as e:
+        print(f"campaign interrupted: {e}; resume with --resume {args.out}",
+              file=sys.stderr)
+        return 3
 
     bit_rows = []
     if args.bit_trials > 0 and "accumulator" in sites:
         for be in backends:
             for w in workloads:
-                if not isinstance(runner.CASES.get(w), type) or not issubclass(
-                        runner.CASES[w], runner._KernelCase):
+                if w not in runner.kernel_workloads():
                     continue
                 case_policies = [p for p in policies
                                  if p in runner.CASES[w].policies]
@@ -101,7 +176,7 @@ def main(argv=None) -> int:
                 bit_rows.extend(runner.run_bit_sweep(
                     w, case_policies, trials_per_bit=args.bit_trials,
                     seed=args.seed, backend=be,
-                    case=case_cache.get((w, args.seed, be))))
+                    case=case_cache.get((w, args.seed, be)), plan=plan))
     elapsed = time.time() - t0
 
     meta = {
@@ -114,6 +189,14 @@ def main(argv=None) -> int:
         "bit_trials": args.bit_trials,
         "seed": args.seed,
         "configurations": len(results),
+        "ci_halfwidth": args.ci_halfwidth,
+        "confidence": args.confidence,
+        "ci_method": args.ci_method,
+        "workers": args.workers,
+        "trials_executed": sum(r.trials for r in results),
+        "trials_live": run_stats.get("trials_live", 0),
+        "trials_resumed": run_stats.get("trials_resumed", 0),
+        "configs_resumed": run_stats.get("configs_resumed", 0),
         "elapsed_seconds": round(elapsed, 2),
     }
     jpath, mpath = report_mod.write_report(results, args.out, meta,

@@ -12,6 +12,9 @@ Fault models map 1:1 onto ``core.fault_injection`` primitives:
   multi_bitflip    fleet-scale rate model: every bit flips independently
                    (default rate 1e-4; ``multi_bitflip@3e-4`` overrides)
   stuck_at0/1      permanent fault: one random bit forced to 0 / 1
+  mbu_burst        multi-bit upset: a seeded cluster of adjacent cells —
+                   elems × bits rectangle, default 2×2 (``mbu_burst@4x1``
+                   overrides) — per the neutron-irradiation MBU signature
 """
 from __future__ import annotations
 
@@ -26,6 +29,7 @@ from repro.core.fault_injection import inject_pytree_with  # noqa: F401 — re-e
 from repro.core.dependability import Policy
 
 DEFAULT_MULTI_RATE = 1e-4
+DEFAULT_BURST = (2, 2)          # elems × bits: the smallest 2-D MBU cluster
 
 SITES = ("accumulator", "weights", "activations", "kv_cache", "decode_state")
 
@@ -44,6 +48,18 @@ def _rate_model(rate: float) -> FaultModel:
         f"each bit flips independently with p={rate:g}")
 
 
+def _burst_model(elems: int, bits: int) -> FaultModel:
+    if elems < 1 or bits < 1:
+        raise ValueError(f"mbu_burst cluster must be >= 1x1, got "
+                         f"{elems}x{bits}")
+    name = ("mbu_burst" if (elems, bits) == DEFAULT_BURST
+            else f"mbu_burst@{elems}x{bits}")
+    return FaultModel(
+        name, lambda x, key: fi.flip_burst(x, key, elems, bits),
+        f"MBU cluster: {elems} adjacent elements x {bits} adjacent bits "
+        "flipped around a seeded anchor")
+
+
 FAULT_MODELS = {
     "single_bitflip": FaultModel(
         "single_bitflip", fi.flip_one_bit,
@@ -55,17 +71,28 @@ FAULT_MODELS = {
     "stuck_at1": FaultModel(
         "stuck_at1", lambda x, key: fi.stuck_at(x, key, 1),
         "one random bit forced to 1"),
+    "mbu_burst": _burst_model(*DEFAULT_BURST),
 }
 
 
 def resolve_fault_model(name: str) -> FaultModel:
-    """Registry lookup; ``multi_bitflip@<rate>`` builds a custom-rate model."""
+    """Registry lookup; ``multi_bitflip@<rate>`` builds a custom-rate model,
+    ``mbu_burst@<elems>x<bits>`` a custom-geometry burst cluster."""
     if name in FAULT_MODELS:
         return FAULT_MODELS[name]
     if name.startswith("multi_bitflip@"):
         return _rate_model(float(name.split("@", 1)[1]))
+    if name.startswith("mbu_burst@"):
+        try:
+            elems, bits = name.split("@", 1)[1].split("x", 1)
+            return _burst_model(int(elems), int(bits))
+        except ValueError as e:
+            raise KeyError(f"bad mbu_burst geometry in {name!r}; expected "
+                           "mbu_burst@<elems>x<bits>, e.g. mbu_burst@4x1") \
+                from e
     raise KeyError(f"unknown fault model {name!r}; known: "
-                   f"{sorted(FAULT_MODELS)} or multi_bitflip@<rate>")
+                   f"{sorted(FAULT_MODELS)}, multi_bitflip@<rate>, "
+                   "or mbu_burst@<elems>x<bits>")
 
 
 @dataclasses.dataclass(frozen=True)

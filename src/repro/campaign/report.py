@@ -71,6 +71,19 @@ class ConfigResult:
     detection_ticks_max: int = 0
     recovery_ticks_mean: float = 0.0
     recovery_ticks_max: int = 0
+    # sequential-sampling columns (adaptive engine): ``trials`` above is the
+    # *executed* count; ``max_trials`` the configured cap (0 in legacy
+    # reports written before the adaptive engine).  The CI bounds are the
+    # binomial interval on the SDC / detection rates at ``ci_confidence``
+    # via ``ci_method`` (wilson or clopper-pearson).
+    max_trials: int = 0
+    early_stopped: bool = False
+    ci_method: str = ""
+    ci_confidence: float = 0.0
+    sdc_ci_lo: float = 0.0
+    sdc_ci_hi: float = 0.0
+    detection_ci_lo: float = 0.0
+    detection_ci_hi: float = 0.0
 
     @property
     def detection_rate(self) -> float:
@@ -170,10 +183,10 @@ def to_markdown(results: Sequence[ConfigResult], meta: dict | None = None,
         lines.append("")
     lines += [
         "| workload | backend | policy | site | fault model | trials | masked "
-        "| det-corr | det-unc | SDC | det. rate | SDC rate | coverage "
-        "| recovered | rec. mean ms | det. lat ticks (mean/max) "
+        "| det-corr | det-unc | SDC | det. rate | SDC rate | SDC 95% CI "
+        "| coverage | recovered | rec. mean ms | det. lat ticks (mean/max) "
         "| rec. lat ticks (mean/max) |",
-        "|---|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:"
+        "|---|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:"
         "|---:|---:|---:|---:|",
     ]
     for r in results:
@@ -182,13 +195,21 @@ def to_markdown(results: Sequence[ConfigResult], meta: dict | None = None,
                    if r.detections_logged else "—")
         rec_lat = (f"{r.recovery_ticks_mean:.1f}/{r.recovery_ticks_max}"
                    if r.faults_recovered and r.strikes_logged else "—")
+        trials = (f"{r.trials}*" if r.early_stopped else f"{r.trials}")
+        sdc_ci = (f"[{r.sdc_ci_lo:.3f}, {r.sdc_ci_hi:.3f}]"
+                  if r.ci_method else "—")
         lines.append(
             f"| {r.workload} | {r.backend} | {r.policy} | {r.site} "
             f"| {r.fault_model} "
-            f"| {r.trials} | {r.masked} | {r.detected_corrected} "
+            f"| {trials} | {r.masked} | {r.detected_corrected} "
             f"| {r.detected_uncorrected} | {r.sdc} "
-            f"| {r.detection_rate:.3f} | {r.sdc_rate:.3f} | {r.coverage:.3f} "
+            f"| {r.detection_rate:.3f} | {r.sdc_rate:.3f} | {sdc_ci} "
+            f"| {r.coverage:.3f} "
             f"| {r.faults_recovered} | {rec_ms} | {det_lat} | {rec_lat} |")
+    if any(r.early_stopped for r in results):
+        lines.append("")
+        lines.append("\\* stopped early: SDC-rate CI half-width reached the "
+                     "requested precision before the trial cap.")
     lines.append("")
     if bit_coverage:
         lines += [

@@ -55,7 +55,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.campaign import engine as engine_mod
 from repro.campaign import faultload as fl
+from repro.campaign import stats as stats_mod
 from repro.campaign.report import BitCoverageRow, ConfigResult, classify_counts
 from repro.core import abft as abft_mod
 from repro.core import fault_injection as fi
@@ -119,13 +121,18 @@ class _RecoveryLog:
         self.count = 0
         self.seconds: List[float] = []
 
-    def drain(self) -> dict:
-        secs = self.seconds
-        out = {"faults_recovered": self.count,
-               "recovery_ms_mean": float(np.mean(secs) * 1e3) if secs else 0.0,
-               "recovery_ms_max": float(np.max(secs) * 1e3) if secs else 0.0}
+    def drain_raw(self) -> Tuple[int, List[float]]:
+        """(count, wall seconds) since the last drain — the chunk-shippable
+        form the adaptive engine merges across workers."""
+        count, secs = self.count, self.seconds
         self.count, self.seconds = 0, []
-        return out
+        return count, secs
+
+    def drain(self) -> dict:
+        count, secs = self.drain_raw()
+        return {"faults_recovered": count,
+                "recovery_ms_mean": float(np.mean(secs) * 1e3) if secs else 0.0,
+                "recovery_ms_max": float(np.max(secs) * 1e3) if secs else 0.0}
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +153,9 @@ class _KernelCase:
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR, Policy.CKPT)
 
     backend = "jnp"
+    # pure-JAX cases scale by widening the vmapped trial batch, not by
+    # fanning chunks across processes (SamplingPlan.kernel_chunk)
+    shardable = False
 
     def _op(self, policy: Policy, x_q, w_q, inject, w_check):
         raise NotImplementedError
@@ -295,6 +305,7 @@ class ShipdetCase:
     name = "shipdet"
     sites = ("accumulator", "weights", "activations")
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR, Policy.CKPT)
+    shardable = True          # host-side trial loop: chunks fan across a pool
 
     def __init__(self, key: jax.Array, backend: str = "jnp"):
         from repro.models import shipdet
@@ -379,6 +390,7 @@ class TransformerCase:
     name = "transformer"
     sites = ("weights", "activations")
     policies = (Policy.NONE, Policy.DMR, Policy.TMR)
+    shardable = True
 
     def __init__(self, key: jax.Array, backend: str = "jnp",
                  arch: str = "smollm-135m"):
@@ -463,6 +475,9 @@ class ServingCase:
     sites = ("weights", "kv_cache", "decode_state")
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR, Policy.CKPT)
     quant_kv = False    # subclass hook: run on the int8-quantized KV cache
+    shardable = True          # host-side trial loop: chunks fan across a pool
+    event_logged = True       # emits real EventLog chains (no synthesis)
+    recovery_logged = True    # host recovery accounting in _RecoveryLog
 
     # the tick (engine step) after which mid-run state strikes land; >0 so
     # prefill and at least one decode step have populated real state
@@ -658,6 +673,9 @@ class FleetCase:
     name = "fleet"
     sites = ("weights", "kv_cache", "decode_state")
     policies = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.CKPT)
+    shardable = True
+    event_logged = True
+    recovery_logged = True
 
     def __init__(self, key: jax.Array, backend: str = "jnp",
                  arch: str = "smollm-135m"):
@@ -763,85 +781,167 @@ def build_case(workload: str, seed: int = 0, backend: str = "jnp"):
     return CASES[workload](jax.random.key(seed), backend)
 
 
+def _spec_supported(spec: fl.CampaignSpec, cls: type) -> bool:
+    """Class-level support check — no case instance needed, so sharded
+    campaigns can filter the grid without paying a parent-side build."""
+    supported = (spec.site in cls.sites and spec.policy in cls.policies)
+    if supported and hasattr(cls, "supports"):
+        supported = cls.supports(spec.policy, spec.site)
+    return supported
+
+
+def _finalize_config(spec: fl.CampaignSpec, cls: type,
+                     acc: "engine_mod.ConfigAccumulator",
+                     plan: stats_mod.SamplingPlan,
+                     event_sink: List[dict] | None) -> ConfigResult:
+    """Reduce an accumulator (however its chunks were executed) to a report
+    row: classification, recovery columns, timeline columns, CI columns."""
+    detected = np.asarray(acc.detected, bool)
+    mismatch = np.asarray(acc.mismatch, bool)
+    counts = classify_counts(detected, mismatch)
+    n = acc.n
+    if getattr(cls, "recovery_logged", False):
+        secs = acc.recovery_seconds
+        recovery = {
+            "faults_recovered": acc.recovery_count,
+            "recovery_ms_mean": float(np.mean(secs) * 1e3) if secs else 0.0,
+            "recovery_ms_max": float(np.max(secs) * 1e3) if secs else 0.0}
+    elif spec.policy == Policy.CKPT:
+        # in-graph rollback (kernel/shipdet workloads): every corrected
+        # trial was a rollback re-execution; latency is in-op, not host
+        recovery = {"faults_recovered": counts["detected_corrected"]}
+    else:
+        recovery = {}
+    if getattr(cls, "event_logged", False):
+        # real chains, merged from the chunk outcomes (worker-drained when
+        # sharded) in key order — identical to what a serial run logs
+        elog = EventLog()
+        elog.events.extend(acc.events)
+        tl_cols, tls = _timeline_columns(elog)
+    else:
+        # in-graph trials (kernels, model forwards) cannot emit host
+        # events mid-vmap — synthesize the equivalent chains from the
+        # trial verdicts: strike at trial index i, same-tick detection
+        # (the in-op check verdict lands within the op call itself)
+        synth = EventLog(policy=spec.policy.value, site=spec.site,
+                         fault=spec.fault_model)
+        for i, (det, mis) in enumerate(zip(detected, mismatch)):
+            synth.emit("strike", tick=i)
+            if det:
+                synth.emit("detection", tick=i, detail={"check": "in_op"})
+                if spec.policy == Policy.CKPT and not mis:
+                    synth.emit("recovery", tick=i,
+                               detail={"action": "in_op_rollback"})
+        tl_cols, tls = _timeline_columns(synth)
+    if event_sink is not None:
+        event_sink.append({"config": spec.label(), "timelines": tls})
+    sdc_lo, sdc_hi = plan.sdc_interval(counts["sdc"], n)
+    det_lo, det_hi = stats_mod.binomial_interval(
+        counts["detected_corrected"] + counts["detected_uncorrected"], n,
+        plan.confidence, plan.ci_method)
+    return ConfigResult(
+        workload=spec.workload, policy=spec.policy.value, site=spec.site,
+        fault_model=spec.fault_model, trials=n, backend=spec.backend,
+        max_trials=spec.trials, early_stopped=acc.early_stopped,
+        ci_method=plan.ci_method, ci_confidence=plan.confidence,
+        sdc_ci_lo=sdc_lo, sdc_ci_hi=sdc_hi,
+        detection_ci_lo=det_lo, detection_ci_hi=det_hi,
+        **counts, **recovery, **tl_cols)
+
+
 def run_campaign(specs: Sequence[fl.CampaignSpec],
                  log: Callable[[str], None] = lambda s: None,
                  cache: Dict[Tuple[str, int, str], object] | None = None,
                  event_sink: List[dict] | None = None,
+                 plan: stats_mod.SamplingPlan | None = None,
+                 journal: "engine_mod.CampaignJournal | None" = None,
+                 pool: "engine_mod.CampaignPool | None" = None,
+                 run_stats: dict | None = None,
+                 _abort_after_chunks: int | None = None,
                  ) -> List[ConfigResult]:
     """Execute every configuration; returns one ConfigResult per spec.
 
-    Deterministic: results depend only on (specs, their seeds).  Workload
-    cases are cached per (workload, seed, backend) so all configurations of
-    one workload share data, params, and compiled functions; pass ``cache``
-    (a dict, populated in place) to reuse the built cases afterwards, e.g.
-    for a ``run_bit_sweep`` over the same workloads.
+    Deterministic: results depend only on (specs, their seeds, the plan's
+    stopping rule) — never on how trials were scheduled.  Chunked, sharded
+    (``plan.workers``), and resumed (``journal``) executions all merge the
+    same key slices in the same order, so their counts, CI columns, and
+    timeline columns are bit-identical to a serial run.
+
+    Workload cases are cached per (workload, seed, backend) so all
+    configurations of one workload share data, params, and compiled
+    functions; pass ``cache`` (a dict, populated in place) to reuse the
+    built cases afterwards, e.g. for a ``run_bit_sweep`` over the same
+    workloads.  Sharded host-side cases are built inside the pool workers
+    instead and never appear in ``cache``.
+
+    ``plan`` selects fixed-budget (default) or sequential-sampling
+    execution — see ``stats.SamplingPlan``.  ``journal`` makes the run
+    resumable; ``run_stats`` (a dict, populated in place) reports
+    ``{"trials_live", "trials_resumed", "configs_resumed"}``.
 
     Every configuration also yields injection→detection→recovery timelines:
     the engine/fleet cases maintain a live ``repro.obs.EventLog`` during
-    their trials, and for the in-graph cases (kernels, model forwards) the
-    runner synthesizes the equivalent chains from the trial verdicts (strike
-    at trial index i, same-tick detection — in-op checks verdict within the
-    op call).  The reduced latency distributions land in each
-    ``ConfigResult``'s timeline columns; pass ``event_sink`` (a list,
-    appended in place) to also capture the raw per-configuration chains,
-    e.g. for ``--events-out``.
+    their trials (drained per chunk, shipped across the pool when sharded),
+    and for the in-graph cases (kernels, model forwards) the runner
+    synthesizes the equivalent chains from the trial verdicts.  The reduced
+    latency distributions land in each ``ConfigResult``'s timeline columns;
+    pass ``event_sink`` (a list, appended in place) to also capture the raw
+    per-configuration chains, e.g. for ``--events-out``.
     """
     if cache is None:
         cache = {}
+    if plan is None:
+        plan = stats_mod.SamplingPlan()
+    if run_stats is None:
+        run_stats = {}
+    run_stats.setdefault("trials_live", 0)
+    run_stats.setdefault("trials_resumed", 0)
+    run_stats.setdefault("configs_resumed", 0)
+    abort = engine_mod.AbortAfter(_abort_after_chunks) \
+        if _abort_after_chunks is not None else None
+    own_pool = None
+    if pool is None and plan.workers > 0 and any(
+            getattr(CASES.get(s.workload), "shardable", False)
+            for s in specs):
+        own_pool = pool = engine_mod.CampaignPool(plan.workers)
     results: List[ConfigResult] = []
-    for spec in specs:
-        cache_key = (spec.workload, spec.seed, spec.backend)
-        case = cache.get(cache_key)
-        if case is None:
-            case = build_case(spec.workload, spec.seed, spec.backend)
-            cache[cache_key] = case
-        supported = (spec.site in case.sites and spec.policy in case.policies)
-        if supported and hasattr(case, "supports"):
-            supported = case.supports(spec.policy, spec.site)
-        if not supported:
-            log(f"skip {spec.label()}: unsupported for workload")
-            continue
-        fault = fl.resolve_fault_model(spec.fault_model)
-        keys = fl.trial_keys(spec)
-        detected, mismatch = case.run_trials(spec.policy, spec.site,
-                                             fault.apply, keys)
-        counts = classify_counts(detected, mismatch)
-        if hasattr(case, "drain_recovery_stats"):
-            recovery = case.drain_recovery_stats()
-        elif spec.policy == Policy.CKPT:
-            # in-graph rollback (kernel/shipdet workloads): every corrected
-            # trial was a rollback re-execution; latency is in-op, not host
-            recovery = {"faults_recovered": counts["detected_corrected"]}
-        else:
-            recovery = {}
-        if getattr(case, "events", None) is not None:
-            tl_cols, tls = _timeline_columns(case.events)
-        else:
-            # in-graph trials (kernels, model forwards) cannot emit host
-            # events mid-vmap — synthesize the equivalent chains from the
-            # trial verdicts: strike at trial index i, same-tick detection
-            # (the in-op check verdict lands within the op call itself)
-            synth = EventLog(policy=spec.policy.value, site=spec.site,
-                             fault=spec.fault_model)
-            for i, (det, mis) in enumerate(zip(detected, mismatch)):
-                synth.emit("strike", tick=i)
-                if det:
-                    synth.emit("detection", tick=i,
-                               detail={"check": "in_op"})
-                    if spec.policy == Policy.CKPT and not mis:
-                        synth.emit("recovery", tick=i,
-                                   detail={"action": "in_op_rollback"})
-            tl_cols, tls = _timeline_columns(synth)
-        if event_sink is not None:
-            event_sink.append({"config": spec.label(), "timelines": tls})
-        res = ConfigResult(
-            workload=spec.workload, policy=spec.policy.value, site=spec.site,
-            fault_model=spec.fault_model, trials=spec.trials,
-            backend=spec.backend, **counts, **recovery, **tl_cols)
-        log(f"{spec.label()}: det={res.detection_rate:.3f} "
-            f"sdc={res.sdc_rate:.3f} cov={res.coverage:.3f}"
-            + (f" rec={res.faults_recovered}" if res.faults_recovered else ""))
-        results.append(res)
+    try:
+        for spec in specs:
+            if spec.workload not in CASES:
+                raise KeyError(f"unknown workload {spec.workload!r}; "
+                               f"known: {sorted(CASES)}")
+            cls = CASES[spec.workload]
+            if not _spec_supported(spec, cls):
+                log(f"skip {spec.label()}: unsupported for workload")
+                continue
+            sharded = pool is not None and getattr(cls, "shardable", False)
+            case = None
+            if not sharded:
+                cache_key = (spec.workload, spec.seed, spec.backend)
+                case = cache.get(cache_key)
+                if case is None:
+                    case = build_case(spec.workload, spec.seed, spec.backend)
+                    cache[cache_key] = case
+            chunk_size = plan.kernel_chunk if issubclass(cls, _KernelCase) \
+                else plan.chunk
+            acc = engine_mod.run_config(
+                spec, plan, chunk_size, case=case,
+                pool=pool if sharded else None, journal=journal, abort=abort)
+            run_stats["trials_resumed"] += acc.resumed_trials
+            run_stats["trials_live"] += acc.n - acc.resumed_trials
+            if acc.resumed_trials and acc.resumed_trials == acc.n:
+                run_stats["configs_resumed"] += 1
+            res = _finalize_config(spec, cls, acc, plan, event_sink)
+            log(f"{spec.label()}: det={res.detection_rate:.3f} "
+                f"sdc={res.sdc_rate:.3f} cov={res.coverage:.3f} "
+                f"n={res.trials}/{res.max_trials}"
+                + (" (early stop)" if res.early_stopped else "")
+                + (f" rec={res.faults_recovered}"
+                   if res.faults_recovered else ""))
+            results.append(res)
+    finally:
+        if own_pool is not None:
+            own_pool.close()
     return results
 
 
@@ -852,9 +952,16 @@ def run_campaign(specs: Sequence[fl.CampaignSpec],
 ACC_BITS = 32          # the accumulator site is int32
 
 
+def kernel_workloads() -> List[str]:
+    """Workloads with a vmappable accumulator hook (bit-sweepable)."""
+    return sorted(n for n, c in CASES.items() if issubclass(c, _KernelCase))
+
+
 def run_bit_sweep(workload: str, policies: Sequence[Policy],
                   trials_per_bit: int = 8, seed: int = 0,
-                  backend: str = "jnp", case=None) -> List[BitCoverageRow]:
+                  backend: str = "jnp", case=None,
+                  plan: stats_mod.SamplingPlan | None = None,
+                  ) -> List[BitCoverageRow]:
     """Targeted accumulator sweep: for every int32 bit position, inject
     ``trials_per_bit`` flips at that exact bit (random element each time)
     and classify.  The resulting table separates the two masking regimes —
@@ -863,12 +970,26 @@ def run_bit_sweep(workload: str, policies: Sequence[Policy],
     detects.  Kernel-shaped workloads only (the sweep vmaps over (bit,
     trial) in one compile, ~``ACC_BITS × trials_per_bit`` trials per
     policy).
+
+    Under an adaptive ``plan`` the sweep runs in trial chunks and stops —
+    per policy — at the first chunk boundary where *every* bit position's
+    SDC-rate CI half-width is within ``plan.ci_halfwidth``; rows then carry
+    the executed (not requested) trial count.  Keys are split by the
+    ``trials_per_bit`` cap and sliced per chunk, so adaptive and fixed
+    sweeps inject identical faults on their shared prefix.
     """
+    cls = CASES.get(workload) if case is None else type(case)
+    if cls is None:
+        raise KeyError(f"unknown workload {workload!r}; known: {sorted(CASES)}")
+    if not issubclass(cls, _KernelCase):
+        raise ValueError(
+            f"bit sweep is only supported for the kernel workloads "
+            f"{kernel_workloads()} (they expose a vmappable accumulator "
+            f"hook); got {workload!r}")
     if case is None:
         case = build_case(workload, seed, backend)
-    if not isinstance(case, _KernelCase):
-        raise ValueError(f"bit sweep needs a kernel-shaped workload "
-                         f"(vmappable accumulator hook); {workload!r} is not")
+    if plan is None:
+        plan = stats_mod.SamplingPlan()
     rows: List[BitCoverageRow] = []
     base = jax.random.key(seed)
     for policy in policies:
@@ -887,13 +1008,30 @@ def run_bit_sweep(workload: str, policies: Sequence[Policy],
             y, det = case._one(policy, "accumulator", fault, key)
             return det, _bitwise_mismatch(y, golden)
 
-        det, mis = jax.jit(jax.vmap(jax.vmap(trial, in_axes=(None, 0)),
-                                    in_axes=(0, 0)))(
-            jnp.arange(ACC_BITS), keys)
-        det, mis = np.asarray(det), np.asarray(mis)
+        sweep = jax.jit(jax.vmap(jax.vmap(trial, in_axes=(None, 0)),
+                                 in_axes=(0, 0)))
+        bits = jnp.arange(ACC_BITS)
+        det = np.zeros((ACC_BITS, 0), bool)
+        mis = np.zeros((ACC_BITS, 0), bool)
+        step = min(plan.chunk, trials_per_bit) if plan.adaptive \
+            else trials_per_bit
+        lo = 0
+        while lo < trials_per_bit:
+            hi = min(lo + step, trials_per_bit)
+            d, m = sweep(bits, keys[:, lo:hi])
+            det = np.concatenate([det, np.asarray(d, bool)], axis=1)
+            mis = np.concatenate([mis, np.asarray(m, bool)], axis=1)
+            lo = hi
+            if plan.adaptive and lo < trials_per_bit \
+                    and lo >= min(plan.min_trials, trials_per_bit):
+                sdc = np.sum(mis & ~det, axis=1)
+                if all(stats_mod.halfwidth(plan.sdc_interval(int(k), lo))
+                       <= plan.ci_halfwidth for k in sdc):
+                    break
+        n = det.shape[1]
         for b in range(ACC_BITS):
             counts = classify_counts(det[b], mis[b])
             rows.append(BitCoverageRow(
                 workload=workload, policy=policy.value, backend=backend,
-                bit=b, trials=trials_per_bit, **counts))
+                bit=b, trials=n, **counts))
     return rows

@@ -64,6 +64,35 @@ def flip_bit_at(x: jax.Array, key: jax.Array, bit) -> jax.Array:
     return jax.lax.bitcast_convert_type(flat.reshape(x.shape), x.dtype)
 
 
+def flip_burst(x: jax.Array, key: jax.Array, elems: int = 2,
+               bits: int = 2) -> jax.Array:
+    """MBU burst: flip a seeded cluster of physically adjacent cells — the
+    multi-bit upset signature neutron irradiation produces in dense SRAM
+    (one particle strike upsetting neighbouring cells, not independent
+    random bits).  The cluster is an ``elems × bits`` rectangle: the same
+    ``bits`` adjacent bit positions flipped in ``elems`` adjacent elements
+    of the flattened tensor, anchored at a uniformly-random (element, bit)
+    and clamped inside the tensor/word so every burst has the same size.
+    jit/vmap-safe for static (elems, bits).
+    """
+    bit_words, u = _as_bits(x)
+    flat = bit_words.reshape(-1)
+    n = flat.shape[0]
+    width = x.dtype.itemsize * 8
+    span_e = min(elems, n)
+    span_b = min(bits, width)
+    k1, k2 = jax.random.split(key)
+    e0 = jnp.minimum(jax.random.randint(k1, (), 0, n),
+                     jnp.asarray(n - span_e, jnp.int32))
+    b0 = jax.random.randint(k2, (), 0, width - span_b + 1)
+    mask = jnp.zeros((), u)
+    for db in range(span_b):
+        mask = mask | (jnp.ones((), u) << (b0 + db).astype(u)).astype(u)
+    for de in range(span_e):
+        flat = flat.at[e0 + de].set(flat[e0 + de] ^ mask)
+    return jax.lax.bitcast_convert_type(flat.reshape(x.shape), x.dtype)
+
+
 def flip_bits_at_rate(x: jax.Array, key: jax.Array, rate: float) -> jax.Array:
     """Flip each bit independently with probability ``rate`` (fleet-scale SEU model)."""
     bits, u = _as_bits(x)

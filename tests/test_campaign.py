@@ -196,9 +196,18 @@ def test_bit_sweep_separates_masked_and_detected_bits():
 
 
 def test_bit_sweep_rejects_model_workloads():
-    from repro.campaign.runner import run_bit_sweep
-    with pytest.raises(ValueError, match="kernel-shaped"):
+    """The error must name the supported kernel workloads, not leak
+    internals — it is the user's cue for what --workload to pass."""
+    from repro.campaign.runner import kernel_workloads, run_bit_sweep
+    with pytest.raises(ValueError) as ei:
         run_bit_sweep("transformer", [Policy.NONE], trials_per_bit=1)
+    msg = str(ei.value)
+    assert "'transformer'" in msg
+    for w in kernel_workloads():
+        assert w in msg
+    assert kernel_workloads() == ["flashattn", "qconv2d", "qmatmul"]
+    with pytest.raises(KeyError, match="unknown workload"):
+        run_bit_sweep("nope", [Policy.NONE], trials_per_bit=1)
 
 
 def test_backend_axis_in_grid_and_report(tmp_path):

@@ -1,0 +1,423 @@
+"""Adaptive campaign engine: sequential sampling, sharding, resume, MBU.
+
+The paper-scale claims this file certifies:
+  * the sequential sampler reaches the same dependability verdicts as a
+    fixed-budget campaign with measurably fewer trials (DAVOS-style
+    iterative statistical injection);
+  * sharded execution is bit-identical to serial — same counts, same CI
+    columns, same event-derived timeline columns — because workers run key
+    *slices* of the same deterministic stream and the stopping rule is
+    evaluated in key order;
+  * a killed campaign resumes from its crash-consistent journal and ends
+    with results bit-identical to an uninterrupted run;
+  * the mbu_burst fault model injects seeded clusters of adjacent cells,
+    and TMR's majority vote still yields zero SDC against them.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.campaign import (
+    CampaignInterrupted, CampaignJournal, CampaignPool, CampaignSpec,
+    ChunkOutcome, ConfigResult, SamplingPlan, binomial_interval,
+    clopper_pearson_interval, halfwidth, resolve_fault_model, run_campaign,
+    wilson_interval, write_report, load_report)
+from repro.campaign import engine as engine_mod
+from repro.campaign import runner
+from repro.campaign import stats as stats_mod
+from repro.core import fault_injection as fi
+from repro.core.dependability import Policy
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# (a) interval math — dependency-free binomial CIs
+# ---------------------------------------------------------------------------
+
+
+def test_wilson_interval_basics():
+    lo, hi = wilson_interval(0, 25, 0.95)
+    assert lo == 0.0 and 0.0 < hi < 0.25      # never zero-width at p̂ = 0
+    lo1, hi1 = wilson_interval(25, 25, 0.95)
+    assert hi1 == 1.0 and 0.75 < lo1 < 1.0    # symmetric at p̂ = 1
+    # symmetric complements: CI(k, n) mirrors CI(n-k, n)
+    lo2, hi2 = wilson_interval(5, 50, 0.95)
+    lo3, hi3 = wilson_interval(45, 50, 0.95)
+    assert lo2 == pytest.approx(1.0 - hi3) and hi2 == pytest.approx(1.0 - lo3)
+    # more trials ⇒ tighter interval
+    assert halfwidth(wilson_interval(0, 400)) < halfwidth(wilson_interval(0, 25))
+
+
+def test_clopper_pearson_matches_closed_form_at_boundary():
+    # k = 0: the exact upper bound has the closed form 1 - (α/2)^(1/n)
+    for n in (10, 25, 100):
+        lo, hi = clopper_pearson_interval(0, n, 0.95)
+        assert lo == 0.0
+        assert hi == pytest.approx(1.0 - 0.025 ** (1.0 / n), abs=1e-9)
+    # k = n mirrors it
+    lo, hi = clopper_pearson_interval(25, 25, 0.95)
+    assert hi == 1.0
+    assert lo == pytest.approx(0.025 ** (1.0 / 25), abs=1e-9)
+
+
+def test_clopper_pearson_is_wider_than_wilson():
+    """CP is the conservative (exact) interval: never tighter than Wilson,
+    so a CP-stopped campaign never stops earlier than a Wilson-stopped one
+    at the same target half-width."""
+    for k, n in ((0, 25), (1, 25), (3, 50), (10, 100), (50, 100), (99, 100)):
+        w = wilson_interval(k, n, 0.95)
+        cp = clopper_pearson_interval(k, n, 0.95)
+        assert halfwidth(cp) >= halfwidth(w) - 1e-12
+
+
+def test_interval_validation():
+    with pytest.raises(ValueError, match="unknown CI method"):
+        binomial_interval(1, 10, method="wald")
+    with pytest.raises(ValueError, match="unsupported confidence"):
+        wilson_interval(1, 10, confidence=0.5)
+    assert binomial_interval(0, 0) == (0.0, 1.0)
+
+
+def test_sampling_plan_stopping_rule():
+    fixed = SamplingPlan()
+    assert not fixed.adaptive
+    assert not fixed.should_stop(0, 99, 100)      # fixed mode: only the cap
+    assert fixed.should_stop(0, 100, 100)
+    adaptive = SamplingPlan(ci_halfwidth=0.1, min_trials=25)
+    assert adaptive.adaptive
+    assert not adaptive.should_stop(0, 10, 1000)  # below the min-trials floor
+    assert adaptive.should_stop(0, 100, 1000)     # hw(0/100) ≈ 0.026 ≤ 0.1
+    assert not adaptive.should_stop(5, 25, 1000)  # hw(5/25) ≈ 0.15 > 0.1
+    with pytest.raises(ValueError):
+        SamplingPlan(ci_halfwidth=-1)
+    with pytest.raises(ValueError):
+        SamplingPlan(ci_method="wald")
+
+
+# ---------------------------------------------------------------------------
+# (b) adaptive early stopping reaches fixed-budget verdicts, cheaper
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_matches_fixed_verdicts_with_fewer_trials():
+    """The acceptance claim: the adaptive run reproduces the paper verdict
+    (ABFT accumulator detection = 1.0, SDC = 0) that a fixed 100-trial
+    campaign certifies, in a fraction of the trials."""
+    spec100 = CampaignSpec("qmatmul", Policy.ABFT, "accumulator",
+                           "single_bitflip", trials=100)
+    fixed = run_campaign([spec100])[0]
+    assert fixed.trials == 100 and not fixed.early_stopped
+    assert fixed.detection_rate == 1.0 and fixed.sdc == 0
+
+    plan = SamplingPlan(ci_halfwidth=0.1, chunk=25, kernel_chunk=25,
+                        min_trials=25)
+    spec = CampaignSpec("qmatmul", Policy.ABFT, "accumulator",
+                        "single_bitflip", trials=100)
+    adaptive = run_campaign([spec], plan=plan)[0]
+    assert adaptive.early_stopped
+    assert adaptive.trials == 25                 # stops at the first boundary
+    assert adaptive.trials < fixed.trials
+    assert adaptive.detection_rate == 1.0 and adaptive.sdc == 0
+    assert adaptive.max_trials == 100
+    assert halfwidth((adaptive.sdc_ci_lo, adaptive.sdc_ci_hi)) <= 0.1
+    assert adaptive.ci_method == "wilson" and adaptive.ci_confidence == 0.95
+
+
+def test_adaptive_executes_exact_prefix_of_key_stream():
+    """Early-stopped trials are the first N keys of the same stream the
+    full-budget run uses — not a differently-seeded shorter campaign."""
+    spec = CampaignSpec("qmatmul", Policy.NONE, "accumulator",
+                        "single_bitflip", trials=80)
+    case = runner.build_case("qmatmul")
+    full = engine_mod.run_config_chunk(case, spec, 0, 80)
+    plan = SamplingPlan(ci_halfwidth=0.5, chunk=20, kernel_chunk=20,
+                        min_trials=20)
+    acc = engine_mod.run_config(spec, plan, 20, case=case)
+    assert acc.early_stopped and acc.n < 80
+    assert acc.detected == full.detected[:acc.n]
+    assert acc.mismatch == full.mismatch[:acc.n]
+
+
+def test_nonzero_rate_needs_more_trials_than_zero_rate():
+    """Sequential sampling spends trials where the estimate is noisy: a
+    policy with SDC ≈ 0 certifies earlier than an unprotected one at the
+    same target precision."""
+    plan = SamplingPlan(ci_halfwidth=0.12, chunk=25, kernel_chunk=25,
+                        min_trials=25)
+    mk = lambda pol: CampaignSpec("qmatmul", pol, "accumulator",
+                                  "single_bitflip", trials=400)
+    abft, none = run_campaign([mk(Policy.ABFT), mk(Policy.NONE)], plan=plan)
+    assert abft.sdc == 0 and abft.trials == 25
+    assert none.sdc_rate > 0.2                  # unprotected: wide interval
+    assert none.trials > abft.trials
+
+
+# ---------------------------------------------------------------------------
+# (c) mbu_burst fault model
+# ---------------------------------------------------------------------------
+
+
+def test_flip_burst_flips_adjacent_cluster():
+    x = jax.random.randint(jax.random.key(1), (16, 16), -1000, 1000,
+                           dtype=jax.numpy.int32)
+    key = jax.random.key(7)
+    y = fi.flip_burst(x, key, elems=2, bits=2)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    xf, yf = np.asarray(x).ravel(), np.asarray(y).ravel()
+    changed = np.nonzero(xf != yf)[0]
+    assert len(changed) == 2
+    assert changed[1] - changed[0] == 1          # adjacent elements
+    diffs = xf[changed] ^ yf[changed]
+    assert (diffs == diffs[0]).all()             # same mask on both cells
+    bits_set = np.nonzero([(int(diffs[0]) >> b) & 1 for b in range(32)])[0]
+    assert len(bits_set) == 2 and bits_set[1] - bits_set[0] == 1
+    # deterministic in the key
+    y2 = fi.flip_burst(x, key, elems=2, bits=2)
+    assert (np.asarray(y) == np.asarray(y2)).all()
+
+
+def test_flip_burst_clamps_to_tensor_and_word():
+    x = jax.numpy.asarray([[3]], dtype=jax.numpy.int32)
+    y = fi.flip_burst(x, jax.random.key(0), elems=4, bits=64)
+    assert y.shape == x.shape
+    assert int(y[0, 0]) != 3                     # burst still landed
+    # vmap over keys compiles (static cluster geometry)
+    keys = jax.random.split(jax.random.key(0), 5)
+    big = jax.random.normal(jax.random.key(2), (8, 8), jax.numpy.float32)
+    out = jax.vmap(lambda k: fi.flip_burst(big, k, 3, 2))(keys)
+    assert out.shape == (5, 8, 8)
+
+
+def test_mbu_burst_model_resolution():
+    assert resolve_fault_model("mbu_burst").name == "mbu_burst"
+    assert resolve_fault_model("mbu_burst@3x2").name == "mbu_burst@3x2"
+    # default geometry spelled explicitly normalizes to the default name
+    assert resolve_fault_model("mbu_burst@2x2").name == "mbu_burst"
+    with pytest.raises(KeyError, match="mbu_burst@<elems>x<bits>"):
+        resolve_fault_model("mbu_burst@banana")
+    with pytest.raises(KeyError):
+        resolve_fault_model("mbu_burst@0x2")
+
+
+def test_mbu_burst_campaign_tmr_zero_sdc():
+    """Majority vote is burst-agnostic: a whole cluster corrupts only one
+    replica, so TMR still yields zero SDC — while the unprotected kernel
+    shows the burst is genuinely more damaging than a single flip."""
+    mk = lambda pol, fm: CampaignSpec("qmatmul", pol, "accumulator", fm,
+                                      trials=40)
+    tmr, none_burst = run_campaign([
+        mk(Policy.TMR, "mbu_burst"),
+        mk(Policy.NONE, "mbu_burst")])
+    assert tmr.sdc == 0
+    assert none_burst.sdc > 0
+    # deterministic replay
+    again = run_campaign([mk(Policy.NONE, "mbu_burst")])[0]
+    assert again == none_burst
+
+
+def test_mbu_burst_on_serving_kv_cache():
+    spec = CampaignSpec("serving", Policy.ABFT, "kv_cache", "mbu_burst",
+                        trials=6)
+    r = run_campaign([spec])[0]
+    assert r.trials == 6
+    assert r.sdc == 0                   # kv guard catches the whole cluster
+    assert r.detection_rate == 1.0
+
+
+# ---------------------------------------------------------------------------
+# (d) resume from the crash-consistent journal
+# ---------------------------------------------------------------------------
+
+
+def _qm_spec(trials=48):
+    return CampaignSpec("qmatmul", Policy.NONE, "accumulator",
+                        "single_bitflip", trials=trials)
+
+
+def test_resume_after_midconfig_kill_is_bit_identical(tmp_path):
+    plan = SamplingPlan(chunk=16, kernel_chunk=16)
+    uninterrupted = run_campaign([_qm_spec()], plan=plan)[0]
+
+    journal = CampaignJournal(tmp_path / "journal")
+    with pytest.raises(CampaignInterrupted):
+        run_campaign([_qm_spec()], plan=plan, journal=journal,
+                     _abort_after_chunks=1)
+    rec = journal.load(_qm_spec())
+    assert rec is not None and not rec["done"]
+    assert rec["trials_done"] == 16
+
+    stats: dict = {}
+    resumed = run_campaign([_qm_spec()], plan=plan, journal=journal,
+                           run_stats=stats)[0]
+    assert resumed == uninterrupted
+    assert stats["trials_resumed"] == 16 and stats["trials_live"] == 32
+    # a third run touches nothing: the record is done
+    stats2: dict = {}
+    final = run_campaign([_qm_spec()], plan=plan, journal=journal,
+                         run_stats=stats2)[0]
+    assert final == uninterrupted
+    assert stats2["trials_live"] == 0 and stats2["configs_resumed"] == 1
+
+
+def test_journal_discards_mismatched_spec(tmp_path):
+    """jax.random.split is not prefix-stable across counts: a record written
+    under a different trial cap must be discarded, never continued."""
+    journal = CampaignJournal(tmp_path)
+    plan = SamplingPlan(chunk=16, kernel_chunk=16)
+    run_campaign([_qm_spec(48)], plan=plan, journal=journal)
+    assert journal.load(_qm_spec(48)) is not None
+    assert journal.load(_qm_spec(64)) is None
+    stats: dict = {}
+    run_campaign([_qm_spec(64)], plan=plan, journal=journal, run_stats=stats)
+    assert stats["trials_resumed"] == 0 and stats["trials_live"] == 64
+
+
+def test_journal_tolerates_corruption(tmp_path):
+    journal = CampaignJournal(tmp_path)
+    spec = _qm_spec()
+    path = journal.path_for(spec)
+    path.write_text("{ torn json")
+    assert journal.load(spec) is None
+    assert journal.records() == {}
+    # a stale .tmp from a crash mid-publish is simply ignored
+    path.with_suffix(".tmp").write_text("garbage")
+    journal.publish(spec, [], done=False)
+    assert journal.load(spec)["trials_done"] == 0
+
+
+def test_chunk_outcome_roundtrips_events():
+    from repro.obs.events import Event
+    oc = ChunkOutcome(lo=5, hi=7, detected=[True, False],
+                      mismatch=[False, True], recovery_count=1,
+                      recovery_seconds=[0.25],
+                      events=[Event(tick=3, kind="strike", site="kv_cache",
+                                    policy="abft", fault="mbu_burst",
+                                    detail={"x": 1})])
+    back = ChunkOutcome.from_doc(json.loads(json.dumps(oc.to_doc())))
+    assert back == oc
+
+
+# ---------------------------------------------------------------------------
+# (e) sharded execution — bit-identical to serial (subprocess pool)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pool():
+    with CampaignPool(2) as p:
+        yield p
+
+
+@pytest.mark.slow
+def test_sharded_bit_identical_to_serial(pool):
+    spec = CampaignSpec("shipdet", Policy.TMR, "weights",
+                        "single_bitflip", trials=12)
+    serial = run_campaign([spec], plan=SamplingPlan(chunk=4))[0]
+    sharded = run_campaign([spec], plan=SamplingPlan(chunk=4, workers=2),
+                           pool=pool)[0]
+    assert sharded == serial
+
+
+@pytest.mark.slow
+def test_sharded_adaptive_stops_at_serial_boundary(pool):
+    """Speculative chunks computed past the stopping boundary are discarded:
+    the sharded adaptive run executes exactly the serial trial set."""
+    spec = CampaignSpec("shipdet", Policy.TMR, "weights",
+                        "single_bitflip", trials=12)
+    plan = SamplingPlan(ci_halfwidth=0.2, chunk=4, min_trials=4)
+    serial = run_campaign([spec], plan=plan)[0]
+    sharded = run_campaign([spec],
+                           plan=SamplingPlan(ci_halfwidth=0.2, chunk=4,
+                                             min_trials=4, workers=2),
+                           pool=pool)[0]
+    assert serial.early_stopped and serial.trials < 12
+    assert sharded == serial
+
+
+@pytest.mark.slow
+def test_sharded_resume_bit_identical(pool, tmp_path):
+    spec = CampaignSpec("shipdet", Policy.TMR, "weights",
+                        "single_bitflip", trials=12)
+    plan = SamplingPlan(chunk=4, workers=2)
+    uninterrupted = run_campaign([spec], plan=plan, pool=pool)[0]
+    journal = CampaignJournal(tmp_path / "journal")
+    with pytest.raises(CampaignInterrupted):
+        run_campaign([spec], plan=plan, pool=pool, journal=journal,
+                     _abort_after_chunks=1)
+    stats: dict = {}
+    resumed = run_campaign([spec], plan=plan, pool=pool, journal=journal,
+                           run_stats=stats)[0]
+    assert resumed == uninterrupted
+    assert stats["trials_resumed"] == 4
+
+
+# ---------------------------------------------------------------------------
+# (f) adaptive bit sweep + report/CLI round trips
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_bit_sweep_stops_early_per_policy():
+    from repro.campaign.runner import ACC_BITS, run_bit_sweep
+    plan = SamplingPlan(ci_halfwidth=0.5, chunk=4, min_trials=4)
+    rows = run_bit_sweep("qmatmul", [Policy.NONE], trials_per_bit=16,
+                         plan=plan)
+    assert len(rows) == ACC_BITS
+    assert all(r.trials == rows[0].trials for r in rows)
+    assert rows[0].trials < 16                   # stopped before the cap
+    fixed = run_bit_sweep("qmatmul", [Policy.NONE], trials_per_bit=16)
+    assert all(r.trials == 16 for r in fixed)
+    # the adaptive sweep's verdict structure matches the fixed one
+    assert {r.bit: r.sdc > 0 for r in rows}[31] \
+        == {r.bit: r.sdc > 0 for r in fixed}[31]
+
+
+def test_config_result_ci_columns_roundtrip(tmp_path):
+    plan = SamplingPlan(ci_halfwidth=0.1, chunk=25, kernel_chunk=25,
+                        min_trials=25, ci_method="clopper-pearson")
+    res = run_campaign([CampaignSpec("qmatmul", Policy.ABFT, "accumulator",
+                                     "single_bitflip", trials=100)],
+                       plan=plan)
+    write_report(res, tmp_path, {"note": "ci"})
+    _, loaded = load_report(tmp_path / "campaign.json")
+    assert loaded[0] == res[0]
+    assert loaded[0].ci_method == "clopper-pearson"
+    assert loaded[0].early_stopped and loaded[0].max_trials == 100
+    # legacy reports (no CI columns) still load, with inert defaults
+    legacy = ConfigResult.from_dict({
+        "workload": "qmatmul", "policy": "abft", "site": "accumulator",
+        "fault_model": "single_bitflip", "trials": 10, "masked": 0,
+        "detected_corrected": 10, "detected_uncorrected": 0, "sdc": 0})
+    assert legacy.max_trials == 0 and legacy.ci_method == ""
+
+
+def test_cli_adaptive_run_and_resume(tmp_path):
+    from repro.campaign import cli
+    out = tmp_path / "camp"
+    argv = ["--workload", "qmatmul", "--policies", "none,abft",
+            "--sites", "accumulator", "--fault-models", "single_bitflip",
+            "--trials", "60", "--ci-halfwidth", "0.12", "--chunk", "20",
+            "--kernel-chunk", "20", "--min-trials", "20",
+            "--bit-trials", "0", "--quiet", "--out", str(out)]
+    assert cli.main(argv) == 0
+    meta, rows = load_report(out / "campaign.json")
+    assert meta["ci_halfwidth"] == 0.12 and meta["ci_method"] == "wilson"
+    abft = [r for r in rows if r.policy == "abft"][0]
+    assert abft.early_stopped and abft.trials < 60
+    assert (out / "journal").is_dir()
+
+    # resume: everything is already journaled — zero live trials, same rows
+    argv2 = ["--workload", "qmatmul", "--policies", "none,abft",
+             "--sites", "accumulator", "--fault-models", "single_bitflip",
+             "--trials", "60", "--ci-halfwidth", "0.12", "--chunk", "20",
+             "--kernel-chunk", "20", "--min-trials", "20",
+             "--bit-trials", "0", "--quiet", "--resume", str(out)]
+    assert cli.main(argv2) == 0
+    meta2, rows2 = load_report(out / "campaign.json")
+    assert meta2["trials_live"] == 0
+    assert meta2["configs_resumed"] == len(rows2) == len(rows)
+    assert rows2 == rows

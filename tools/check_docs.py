@@ -64,8 +64,10 @@ def runnable(cmd: str) -> bool:
 
 def smoke_rewrite(cmd: str, out_dir: Path, idx: int) -> str:
     cmd = re.sub(r"--trials\s+\d+", "--trials 5", cmd)
+    cmd = re.sub(r"--max-trials\s+\d+", "--max-trials 8", cmd)
     cmd = re.sub(r"--bit-trials\s+\d+", "--bit-trials 2", cmd)
     cmd = re.sub(r"--requests\s+\d+", "--requests 3", cmd)
+    cmd = re.sub(r"--workers\s+\d+", "--workers 2", cmd)
     if "--out" in cmd:
         cmd = re.sub(r"--out\s+(\S+)",
                      lambda m: f"--out {out_dir / Path(m.group(1)).name}", cmd)
@@ -75,8 +77,11 @@ def smoke_rewrite(cmd: str, out_dir: Path, idx: int) -> str:
     # both the producing flags (--trace-out …) and tools/check_obs.py's
     # consuming flags (--trace …), so produce-then-validate doc sequences
     # line up on the same files
+    # --resume is a directory a previous documented command wrote with
+    # --out: both rewrite to the same tmpdir basename, so documented
+    # run-then-resume sequences line up on the same journal
     for flag in ("--trace-out", "--metrics-out", "--events-out",
-                 "--trace", "--events", "--bench"):
+                 "--trace", "--events", "--bench", "--resume"):
         cmd = re.sub(
             rf"(?<!\S){flag}\s+(\S+)",
             lambda m, f=flag: f"{f} {out_dir / Path(m.group(1)).name}", cmd)
