@@ -16,7 +16,13 @@ reports HPDP 112×–660× faster.  We reproduce the comparison three ways:
      which proves the kernel computes the right thing; wall time on the CPU
      interpreter is NOT a latency claim).
 
-Usage: PYTHONPATH=src python -m benchmarks.table1_conv [--check]
+``--bit-sweep`` runs the campaign engine's per-bit accumulator sweep at
+(reduced) Table-1 layer geometry: every int32 accumulator bit position is
+flipped ``--bit-trials`` times under none and abft, classifying which bits
+the requantization rescale masks and which the ABFT checksum catches.  The
+report lands under ``reports/table1_bitsweep/``.
+
+Usage: PYTHONPATH=src python -m benchmarks.table1_conv [--check] [--bit-sweep]
 """
 from __future__ import annotations
 
@@ -90,11 +96,70 @@ def correctness_check() -> bool:
     return ok
 
 
+# (layer, reduced geometry) pairs for the --bit-sweep mode: the first and
+# last Table-1 layers, spatially shrunk so the vmapped sweep compiles fast
+# while keeping the layer's channel/kernel shape (what the checksum sees)
+BIT_SWEEP_GEOMETRIES = [
+    ("qconv2d_t1_conv1", dict(h=24, w=24, cin=24, cout=24, kh=3, kw=3)),
+    ("qconv2d_t1_conv4", dict(h=12, w=12, cin=96, cout=96, kh=1, kw=1)),
+]
+
+
+def bit_sweep(trials_per_bit: int, seed: int, out_dir: str) -> int:
+    """Per-bit accumulator fault sweep at Table-1 conv geometry."""
+    import jax
+    from repro.campaign import stats as stats_mod
+    from repro.campaign.report import write_report
+    from repro.campaign.runner import QConv2dCase, run_bit_sweep
+    from repro.core.dependability import Policy
+
+    plan = stats_mod.SamplingPlan(ci_halfwidth=0.05, min_trials=4, chunk=4)
+    rows = []
+    for label, geom in BIT_SWEEP_GEOMETRIES:
+        case = QConv2dCase(jax.random.key(seed), **geom)
+        rows += run_bit_sweep(label, [Policy.NONE, Policy.ABFT],
+                              trials_per_bit=trials_per_bit, seed=seed,
+                              case=case, plan=plan)
+        print(f"{label}: swept 32 bits × ≤{trials_per_bit} trials "
+              f"× 2 policies", flush=True)
+    meta = {
+        "bench": "table1_bitsweep",
+        "seed": seed,
+        "trials_per_bit": trials_per_bit,
+        "geometries": {label: geom for label, geom in BIT_SWEEP_GEOMETRIES},
+        "plan": {"ci_halfwidth": plan.ci_halfwidth,
+                 "min_trials": plan.min_trials, "chunk": plan.chunk},
+    }
+    jpath, mpath = write_report([], out_dir, meta, basename="table1_bitsweep",
+                                bit_coverage=rows)
+    sdc_bits = {}
+    for r in rows:
+        if r.sdc > 0:
+            sdc_bits.setdefault((r.workload, r.policy), []).append(r.bit)
+    for (wl, pol), bits in sorted(sdc_bits.items()):
+        print(f"  {wl}/{pol}: SDC at bits {bits}")
+    abft_sdc = sum(r.sdc for r in rows if r.policy == "abft")
+    print(f"abft residual SDC across all bits: {abft_sdc}")
+    print(f"wrote {jpath} and {mpath}")
+    return 1 if abft_sdc else 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
                     help="also run kernel-vs-oracle correctness on each layer")
+    ap.add_argument("--bit-sweep", action="store_true",
+                    help="per-bit accumulator SEU sweep at Table-1 geometry "
+                         "(writes reports/table1_bitsweep/)")
+    ap.add_argument("--bit-trials", type=int, default=8,
+                    help="fault injections per bit position per policy")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="reports/table1_bitsweep",
+                    help="output directory for the --bit-sweep report")
     args = ap.parse_args()
+
+    if args.bit_sweep:
+        raise SystemExit(bit_sweep(args.bit_trials, args.seed, args.out))
 
     hdr = (f"{'layer':<18} {'MACs':>9} | {'HPDP ms':>9} {'model':>8} "
            f"{'GR740 ms':>10} {'model':>9} | {'speedup':>7} {'model':>6} "

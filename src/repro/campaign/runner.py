@@ -237,11 +237,12 @@ class QConv2dCase(_KernelCase):
     name = "qconv2d"
 
     def __init__(self, key: jax.Array, backend: str = "jnp",
-                 h: int = 12, w: int = 12, cin: int = 8, cout: int = 8):
+                 h: int = 12, w: int = 12, cin: int = 8, cout: int = 8,
+                 kh: int = 3, kw: int = 3):
         self.backend = backend
-        kx, kw, kb = jax.random.split(key, 3)
+        kx, kkw, kb = jax.random.split(key, 3)
         self.x_q = jax.random.randint(kx, (1, h, w, cin), -128, 128).astype(jnp.int8)
-        self.w_q = jax.random.randint(kw, (3, 3, cin, cout), -127, 128).astype(jnp.int8)
+        self.w_q = jax.random.randint(kkw, (kh, kw, cin, cout), -127, 128).astype(jnp.int8)
         self.bias = jax.random.randint(kb, (cout,), -100, 100).astype(jnp.int32)
         self.x_zp = jnp.int32(2)
         self.out_zp = jnp.int32(0)
@@ -676,6 +677,8 @@ class FleetCase:
     shardable = True
     event_logged = True
     recovery_logged = True
+    transport = "inproc"
+    max_new_tokens = 4
 
     def __init__(self, key: jax.Array, backend: str = "jnp",
                  arch: str = "smollm-135m"):
@@ -690,7 +693,7 @@ class FleetCase:
         self.fleet = Fleet(self.cfg, self.params, n_replicas=2,
                            policy=Policy.NONE, capacity=2, max_len=64,
                            prefill_pad=8, scrub_every=3, snapshot_every=2,
-                           backend=backend)
+                           backend=backend, transport=self.transport)
         self.prompts = [[5, 9, 2], [3, 1, 4, 1], [2, 7]]
         self._recovery = _RecoveryLog()
         # accumulates the fleet's per-trial dependability events (fleet-tick
@@ -709,7 +712,8 @@ class FleetCase:
     def _serve(self, policy: Policy, site: str, fault, key):
         fleet = self.fleet
         fleet.reset(policy=policy)
-        reqs = [self._Request(uid=i, prompt=list(p), max_new_tokens=4)
+        reqs = [self._Request(uid=i, prompt=list(p),
+                              max_new_tokens=self.max_new_tokens)
                 for i, p in enumerate(self.prompts)]
         for r in reqs:
             fleet.submit(r)
@@ -721,6 +725,12 @@ class FleetCase:
             fleet.tick()
             fleet.strike(0, site, fault, key)
         fleet.run()
+        return self._collect(reqs)
+
+    def _collect(self, reqs):
+        """Reduce a finished trial to (released streams, detected flag) and
+        fold recovery/timeline accounting into the case's logs."""
+        fleet = self.fleet
         outs = tuple(
             tuple(fleet.released[r.uid].output) if r.uid in fleet.released
             else None
@@ -757,6 +767,64 @@ class FleetCase:
         return self._recovery.drain()
 
 
+class FleetMPCase(FleetCase):
+    """The ``rolling_deploy`` scenario on the process-isolation transport:
+    a 2-replica fleet whose engines live in spawned worker processes
+    (``fleet/transport.py``) performs a zero-drain rolling weight deploy
+    *while serving*, and the SEU strikes **during the in-flight swap** —
+    ``mid_swap`` fires while replica 1 is out of the router being patched,
+    and the strike lands on replica 0, which is already swapped and
+    carrying the fleet alone at that instant.
+
+    This is the ROADMAP's campaign gate for the multi-host fleet: under
+    ABFT/CKPT the certify-before-release scrub (against the *new* storage
+    checksums) catches the corruption before any token ships — SDC = 0
+    through the deploy window; under NONE the corrupted stream releases.
+
+    ``shardable = False``: each trial drives real worker processes, so the
+    case must own them — the campaign pool would fork chaos.  One fleet
+    (and its two workers) is reused across all trials via ``Fleet.reset``.
+    """
+
+    name = "fleet_mp"
+    sites = ("weights",)
+    policies = (Policy.NONE, Policy.ABFT, Policy.CKPT)
+    shardable = False
+    transport = "proc"
+    max_new_tokens = 6
+
+    def _serve(self, policy: Policy, site: str, fault, key):
+        fleet = self.fleet
+        fleet.reset(policy=policy)
+        reqs = [self._Request(uid=i, prompt=list(p),
+                              max_new_tokens=self.max_new_tokens)
+                for i, p in enumerate(self.prompts)]
+        for r in reqs:
+            fleet.submit(r)
+        fleet.tick()
+        fleet.tick()
+        strike = fault is not _IDENTITY
+
+        def mid_swap(rid):
+            # replica 1 is mid-swap (out of the router, weights half new):
+            # strike the already-swapped replica 0 — the only one serving
+            if strike and rid == 1:
+                fleet.strike(0, "weights", fault, key)
+
+        fleet.deploy(params=self.params, mid_swap=mid_swap)
+        fleet.run()
+        return self._collect(reqs)
+
+    def close(self):
+        self.fleet.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:       # noqa: BLE001 — interpreter teardown
+            pass
+
+
 # ---------------------------------------------------------------------------
 # Campaign driver
 # ---------------------------------------------------------------------------
@@ -770,6 +838,7 @@ CASES: Dict[str, type] = {
     "serving": ServingCase,
     "serving_int8kv": ServingInt8KVCase,
     "fleet": FleetCase,
+    "fleet_mp": FleetMPCase,
 }
 
 SUPPORTED = {name: (cls.sites, cls.policies) for name, cls in CASES.items()}

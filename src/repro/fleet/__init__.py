@@ -5,13 +5,15 @@ recovery, DMR pair-serving, and bit-exact failover.
 See docs/fleet.md for the architecture and the recovery state machine, and
 ``python -m repro.fleet.cli --help`` for the drill runner.
 """
-from repro.fleet.fleet import FLEET_POLICIES, Fleet
+from repro.fleet.fleet import FLEET_POLICIES, TRANSPORTS, Fleet
 from repro.fleet.metrics import FleetMetrics
 from repro.fleet.replica import Replica, ReplicaState
 from repro.fleet.router import Router
 from repro.fleet.supervisor import Supervisor
+from repro.fleet.transport import ProcReplica, TransportDead, WorkerHandle
 
 __all__ = [
-    "FLEET_POLICIES", "Fleet", "FleetMetrics", "Replica", "ReplicaState",
-    "Router", "Supervisor",
+    "FLEET_POLICIES", "TRANSPORTS", "Fleet", "FleetMetrics", "ProcReplica",
+    "Replica", "ReplicaState", "Router", "Supervisor", "TransportDead",
+    "WorkerHandle",
 ]

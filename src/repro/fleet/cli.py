@@ -17,6 +17,12 @@ manifesting faults, and abft/dmr/ckpt must always exit 0.
 transient state mid-serve: DMR catches the divergence by pair-comparison,
 ABFT by the decode-state scrub (drain + failover), and CKPT by the scrub
 with an in-place engine snapshot rollback (docs/recovery.md).
+
+``--transport proc`` runs every replica in its own worker process over the
+framed pipe transport (docs/multihost.md); the verdict contract is
+identical.  ``--deploy`` performs a zero-drain rolling weight deploy
+mid-serve in both passes; combined with ``--inject weights`` the drill
+strikes replica 0 *while replica 1 is mid-swap* — the hardest window.
 """
 from __future__ import annotations
 
@@ -30,7 +36,7 @@ import numpy as np
 
 from repro.core import fault_injection as fi
 from repro.core.dependability import Policy
-from repro.fleet.fleet import FLEET_POLICIES, Fleet
+from repro.fleet.fleet import FLEET_POLICIES, TRANSPORTS, Fleet
 from repro.fleet.router import POLICIES as ROUTER_POLICIES
 from repro.obs import SpanTracer, dump_merged
 from repro.runtime.serving import Request
@@ -59,6 +65,13 @@ def build_parser() -> argparse.ArgumentParser:
                         "serving, or its decode-state buffer mid-serve")
     p.add_argument("--kill", type=int, default=-1, metavar="RID",
                    help="kill replica RID mid-serve (failover drill)")
+    p.add_argument("--transport", default="inproc", choices=list(TRANSPORTS),
+                   help="replica isolation: inproc (threads of one process) "
+                        "or proc (one worker process per replica)")
+    p.add_argument("--deploy", action="store_true",
+                   help="rolling weight deploy mid-serve in both passes; "
+                        "with --inject weights the strike lands during the "
+                        "swap window")
     p.add_argument("--backend", default=None,
                    help="execution backend for every replica's quantized "
                         "hot paths (jnp | ref | pallas; default: cfg's)")
@@ -79,13 +92,14 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def _serve(fleet: Fleet, prompts, max_new_tokens: int, *,
-           inject: str = "none", kill: int = -1, key=None):
+           inject: str = "none", kill: int = -1, key=None,
+           deploy: bool = False):
     fleet.reset()
     reqs = [Request(uid=i, prompt=list(p), max_new_tokens=max_new_tokens)
             for i, p in enumerate(prompts)]
     for r in reqs:
         fleet.submit(r)
-    if inject == "weights":
+    if inject == "weights" and not deploy:
         fleet.strike(0, "weights", fi.flip_one_bit, key)
     mid_drill = inject in ("kv_cache", "decode_state") or kill >= 0
     if mid_drill:
@@ -95,6 +109,20 @@ def _serve(fleet: Fleet, prompts, max_new_tokens: int, *,
             fleet.strike(0, inject, fi.flip_one_bit, key)
         if kill >= 0:
             fleet.kill_replica(kill)
+    if deploy:
+        for _ in range(2):
+            fleet.tick()
+        mid_swap = None
+        if inject == "weights":
+            struck = []
+
+            def mid_swap(rid):
+                # strike replica 0's weights while a *different* replica is
+                # mid-swap — the in-flight-deploy SEU window (once per pass)
+                if rid != 0 and not struck:
+                    struck.append(rid)
+                    fleet.strike(0, "weights", fi.flip_one_bit, key)
+        fleet.deploy(params=fleet._params0, mid_swap=mid_swap)
     fleet.run()
     outputs = tuple(
         tuple(fleet.released[r.uid].output) if r.uid in fleet.released
@@ -121,28 +149,32 @@ def main(argv=None) -> int:
     fleet = Fleet(cfg, params, n_replicas=args.replicas,
                   policy=Policy(args.policy), router=args.router,
                   scrub_every=args.scrub_every, capacity=args.capacity,
-                  max_len=96, prefill_pad=8, backend=args.backend)
+                  max_len=96, prefill_pad=8, backend=args.backend,
+                  transport=args.transport)
 
     log(f"fleet: {args.replicas}×{cfg.name} replicas, policy={args.policy}, "
-        f"router={args.router}")
-    log("golden pass (fault-free) …")
-    golden = _serve(fleet, prompts, args.max_new_tokens)
+        f"router={args.router}, transport={args.transport}")
+    log("golden pass (fault-free%s) …"
+        % (", rolling deploy" if args.deploy else ""))
+    golden = _serve(fleet, prompts, args.max_new_tokens, deploy=args.deploy)
 
     drill = args.inject != "none" or args.kill >= 0
     if drill:
         log(f"drill pass (inject={args.inject}, kill="
             f"{args.kill if args.kill >= 0 else 'none'}) …")
     tracers = []
-    if args.trace_out:
+    if args.trace_out and args.transport == "inproc":
         # one tracer per replica engine (pid = replica id) — attached after
-        # the golden pass so the trace covers exactly the drill
+        # the golden pass so the trace covers exactly the drill.  (proc
+        # replicas run their engine in another process; spans stay there.)
         for r in fleet.replicas:
             tr = SpanTracer(name=f"replica{r.rid}", pid=r.rid)
             r.engine.tracer = tr
             tracers.append(tr)
     observed = _serve(fleet, prompts, args.max_new_tokens,
                       inject=args.inject, kill=args.kill,
-                      key=jax.random.key(args.seed + 1))
+                      key=jax.random.key(args.seed + 1),
+                      deploy=args.deploy)
 
     report = fleet.report()
     report["arch"] = cfg.name
@@ -150,7 +182,9 @@ def main(argv=None) -> int:
     report["seed"] = args.seed
     report["inject"] = args.inject
     report["kill"] = args.kill
+    report["deploy"] = bool(args.deploy)
     report["outputs_match_golden"] = observed == golden
+    fleet.close()
 
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)

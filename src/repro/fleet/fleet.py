@@ -56,6 +56,23 @@ the property the campaign workload certifies statistically.
 Everything advances on an integer ``tick`` (one engine step per healthy
 replica) and every decision is a pure function of fleet state, so a trial
 replays bit-for-bit from its seed.
+
+Two orthogonal capabilities ride on that contract (docs/multihost.md):
+
+  * ``transport="proc"`` runs every replica's engine in a spawned worker
+    process behind ``fleet/transport.py`` — same Fleet/Supervisor/Router
+    code, real process isolation, token streams bit-identical to inproc.
+    A dead worker (SIGKILL, crash, missed RPC deadline) takes the same
+    quarantine → restore → re-verify → replay path a failed scrub does.
+  * The supervisor's straggler verdicts drive **speculative backup
+    dispatch**: a straggler's in-flight requests are re-issued to a warm
+    spare, the first finisher wins, and the loser's copy is cancelled at
+    release — certify-before-release applies to whichever copy wins.
+  * ``Fleet.deploy`` performs **zero-drain rolling weight deploys**: one
+    replica at a time leaves the router (still decoding what it owns),
+    has the changed leaves patched into its live engine, re-verifies
+    against the *new* storage checksums, and rejoins — the fleet serves
+    throughout, and a strike landing mid-swap is caught by the re-verify.
 """
 from __future__ import annotations
 
@@ -68,12 +85,15 @@ from typing import Dict, List, Optional
 from repro.core.dependability import Policy
 from repro.fleet.metrics import FleetMetrics
 from repro.obs import EventLog
-from repro.fleet.replica import Replica, ReplicaState
+from repro.fleet.replica import Replica, ReplicaState, _checksums_jit
 from repro.fleet.router import Router
 from repro.fleet.supervisor import Supervisor
+from repro.fleet.transport import TransportDead
 from repro.models.config import ArchConfig
 from repro.runtime.serving import Request
 from repro.train import checkpoint as ckpt_mod
+
+TRANSPORTS = ("inproc", "proc")
 
 FLEET_POLICIES = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.CKPT)
 
@@ -100,6 +120,8 @@ class _Tracked:
     shadow: Optional[Request]         # DMR twin, served on a different replica
     primary_rid: int
     shadow_rid: int = -1
+    backup: Optional[Request] = None  # speculative copy on a warm spare
+    backup_rid: int = -1
     submitted_tick: int = 0
     deadline_ticks: Optional[int] = None
     primary_done: bool = False
@@ -123,7 +145,10 @@ class Fleet:
                  capacity: int = 4, max_len: int = 128, prefill_pad: int = 8,
                  snapshot_every: int = 16, eos_id: int = -1,
                  heartbeat_timeout: float = 25.0, ckpt_dir: Optional[str] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, transport: str = "inproc"):
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}; "
+                             f"known: {TRANSPORTS}")
         if policy not in FLEET_POLICIES:
             raise ValueError(
                 f"fleet policy must be one of {[p.value for p in FLEET_POLICIES]}"
@@ -134,31 +159,57 @@ class Fleet:
         self.cfg = cfg
         self.policy = policy
         self.scrub_every = scrub_every
+        self.transport = transport
 
         # golden state: checkpoint for reload-recovery, checksums for scrub
         self._params0 = params
         self._owns_ckpt_dir = ckpt_dir is None
         self.ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix="fleet-golden-")
         ckpt_mod.save(self.ckpt_dir, 0, params)
+        self._current_step = 0      # the checkpoint step replicas serve from
 
         # every replica serves on the same execution backend: bit-identical
         # failover (the fleet's core guarantee) holds *across* backends too,
         # but certify-before-release compares like for like within a fleet
         scrub_mode = _state_scrub_mode(policy)
-        first = Replica(0, cfg, params, capacity=capacity, max_len=max_len,
-                        prefill_pad=prefill_pad, snapshot_every=snapshot_every,
-                        eos_id=eos_id, backend=backend,
+        if transport == "proc":
+            # each replica's engine lives in a spawned worker process; the
+            # workers restore the golden checkpoint themselves (crc32-
+            # verified, so byte-identical to ``params``) and compile in
+            # parallel — spawn all first, then wait on each
+            from repro.fleet.transport import ProcReplica
+            self.replicas: List[Replica] = [
+                ProcReplica(i, cfg, ckpt_dir=self.ckpt_dir, step=0,
+                            capacity=capacity, max_len=max_len,
+                            prefill_pad=prefill_pad,
+                            snapshot_every=snapshot_every, eos_id=eos_id,
+                            backend=backend, state_scrub=scrub_mode)
+                for i in range(n_replicas)]
+            for r in self.replicas:
+                r.wait_ready()
+            self._golden0 = _checksums_jit(params)
+        else:
+            first = Replica(0, cfg, params, capacity=capacity,
+                            max_len=max_len, prefill_pad=prefill_pad,
+                            snapshot_every=snapshot_every,
+                            eos_id=eos_id, backend=backend,
+                            state_scrub=scrub_mode)
+            self.replicas = [first] + [
+                Replica(i, cfg, params, capacity=capacity, max_len=max_len,
+                        prefill_pad=prefill_pad,
+                        snapshot_every=snapshot_every,
+                        eos_id=eos_id, golden=first.golden,
+                        compiled=first.engine.compiled, backend=backend,
                         state_scrub=scrub_mode)
-        self.replicas: List[Replica] = [first] + [
-            Replica(i, cfg, params, capacity=capacity, max_len=max_len,
-                    prefill_pad=prefill_pad, snapshot_every=snapshot_every,
-                    eos_id=eos_id, golden=first.golden,
-                    compiled=first.engine.compiled, backend=backend,
-                    state_scrub=scrub_mode)
-            for i in range(1, n_replicas)]
-        # the fleet's release gate runs inside each engine's certify stage
+                for i in range(1, n_replicas)]
+            self._golden0 = first.golden
+        # the fleet's release gate runs inside each engine's certify stage;
+        # ckpt_step pins which checkpoint step each replica's golden
+        # checksums correspond to (it moves per-replica during a rolling
+        # deploy, so recovery always restores what the replica certifies)
         for r in self.replicas:
             r.install_certifier(self._certify_finished)
+            r.ckpt_step = 0
         self.router = Router(router, admit_limit)
         self.supervisor = Supervisor(n_replicas, scrub_every=scrub_every,
                                      heartbeat_timeout=heartbeat_timeout)
@@ -227,12 +278,20 @@ class Fleet:
             if r.state is not ReplicaState.HEALTHY or r.paused:
                 continue
             t0 = time.perf_counter()
-            r.engine.step()
+            try:
+                r.engine.step()
+            except TransportDead:
+                self._recover_transport(r)
+                continue
             self.metrics.engine_steps += 1
+            # for the proc transport the step time is the RPC round trip —
+            # a worker fighting its host shows up as a straggler naturally
             self.supervisor.heartbeat(r.rid, r.engine.stats.steps,
                                       time.perf_counter() - t0, self.tick_no)
             self._settle_state_events(r)
-        self.supervisor.stragglers()      # straggler log (advisory in-process)
+        stragglers = self.supervisor.stragglers()
+        if stragglers:
+            self._dispatch_backups(stragglers)
 
         for rid in self.supervisor.newly_dead(self.tick_no):
             r = self.replicas[rid]
@@ -314,10 +373,12 @@ class Fleet:
         if rec is None or rec.terminal:
             return False
         is_primary = req is rec.req
-        if not is_primary and req is not rec.shadow:
+        is_shadow = rec.shadow is not None and req is rec.shadow
+        is_backup = rec.backup is not None and req is rec.backup
+        if not (is_primary or is_shadow or is_backup):
             return False                             # stale pre-replay copy
         if self.policy in _SCRUB_GATED:
-            if is_primary:
+            if is_primary or is_backup:
                 replica.uncertified.append(req)
             return False       # withheld until a clean post-finish scrub
         if self.policy == Policy.DMR and rec.shadow is not None:
@@ -331,17 +392,33 @@ class Fleet:
                     return True
                 self._dmr_mismatch(rec)
             return False
-        # Policy.NONE (or degraded DMR): release on finish
-        if is_primary:
-            self._release(rec)
+        # Policy.NONE (or degraded DMR): release on finish — primary or
+        # speculative backup, whichever finished first
+        if is_primary or is_backup:
+            self._release(rec, req)
             return True
         return False
 
-    def _release(self, rec: _Tracked):
+    def _release(self, rec: _Tracked, req: Optional[Request] = None):
+        """Certified release.  ``req`` is the winning copy (primary by
+        default; the speculative backup when it finished/certified first) —
+        the loser of a backup race is cancelled wherever it still runs, so
+        its eventual release is suppressed."""
+        req = rec.req if req is None else req
         rec.released = True
-        self.released[rec.req.uid] = rec.req
+        self.released[rec.req.uid] = req
         self.metrics.observe_release(self.tick_no - rec.submitted_tick,
-                                     len(rec.req.output or []))
+                                     len(req.output or []))
+        if rec.backup is not None:
+            won = req is rec.backup
+            if won:
+                self.metrics.backups_won += 1
+            loser_rid = rec.primary_rid if won else rec.backup_rid
+            if 0 <= loser_rid < len(self.replicas):
+                loser = self.replicas[loser_rid]
+                loser.engine.cancel(rec.req.uid)
+                loser.uncertified = [q for q in loser.uncertified
+                                     if q.uid != rec.req.uid]
 
     # ------------------------------------------------------------ ABFT path
     def _scrub_and_settle(self, replica: Replica):
@@ -352,7 +429,7 @@ class Fleet:
             for req in replica.uncertified:
                 rec = self.records.get(req.uid)
                 if rec is not None and not rec.terminal:
-                    self._release(rec)
+                    self._release(rec, req)
             replica.uncertified = []
         else:
             self._fail_replica(replica, reason="weight scrub failed",
@@ -379,6 +456,40 @@ class Fleet:
                 self._fail_replica(r, reason="weight scrub failed "
                                    "(DMR attribution)", recover=True)
         self._replay(rec)
+
+    # ------------------------------------------------- speculative backups
+    def _dispatch_backups(self, stragglers: List[int]):
+        """Re-issue a straggler's in-flight requests to a warm spare; first
+        finisher wins at the certify gate, the loser's release is
+        suppressed.  Decode determinism makes the copies interchangeable —
+        a backup that wins releases the exact bytes the primary would have.
+        DMR requests already run doubled, so they are left alone."""
+        for rid in stragglers:
+            straggler = self.replicas[rid]
+            if not straggler.healthy:
+                continue
+            for req in straggler.in_flight():
+                rec = self.records.get(req.uid)
+                if (rec is None or rec.terminal or rec.backup is not None
+                        or rec.shadow is not None
+                        or rec.primary_rid != rid):
+                    continue
+                spare = self.router.pick(req.uid, self.replicas,
+                                         exclude=(rid,))
+                if spare is None:
+                    continue
+                rec.backup = Request(uid=rec.req.uid,
+                                     prompt=list(rec.req.prompt),
+                                     max_new_tokens=rec.req.max_new_tokens)
+                rec.backup_rid = spare.rid
+                spare.engine.submit(rec.backup)
+                self.metrics.backup_dispatches += 1
+                self.supervisor.events.append(
+                    f"tick {self.tick_no}: uid {rec.req.uid} speculative "
+                    f"backup on replica {spare.rid} (straggler {rid})")
+                self.event_log.emit(
+                    "backup_dispatch", tick=self.tick_no, uid=rec.req.uid,
+                    replica=spare.rid, detail={"straggler": rid})
 
     # ------------------------------------------------------------ injection
     def strike(self, rid: int, site: str, fault, key) -> None:
@@ -416,7 +527,9 @@ class Fleet:
             f"{len(drained)} requests drained")
         if recover:
             self.supervisor.recover(replica, self.ckpt_dir, self.metrics,
-                                    self.tick_no)
+                                    self.tick_no,
+                                    step=getattr(replica, "ckpt_step",
+                                                 self._current_step))
         else:
             replica.state = ReplicaState.DEAD
             self.metrics.replicas_lost += 1
@@ -425,6 +538,66 @@ class Fleet:
             self.event_log.emit("replica_dead", tick=self.tick_no,
                                 replica=replica.rid,
                                 detail={"reason": reason})
+        for req in drained:
+            rec = self.records.get(req.uid)
+            if rec is not None and not rec.terminal:
+                self._replay(rec)
+
+    def _recover_transport(self, replica):
+        """A worker process died mid-RPC (SIGKILL, crash, missed deadline).
+        The parent-side request registry survives the worker, so custody is
+        intact: drain it, respawn the worker from the current golden
+        checkpoint step, re-verify the restored weights, readmit, and
+        replay the drained work — the same chain a failed scrub takes, with
+        process loss as the detection."""
+        drained = replica.in_flight() + replica.uncertified
+        replica.uncertified = []
+        self.metrics.detections += 1
+        self.supervisor.events.append(
+            f"tick {self.tick_no}: replica {replica.rid} transport lost; "
+            f"{len(drained)} requests drained")
+        self.event_log.emit(
+            "detection", tick=self.tick_no, replica=replica.rid,
+            detail={"check": "transport", "reason": "peer_dead"})
+        replica.state = ReplicaState.QUARANTINED
+        self.event_log.emit("quarantine", tick=self.tick_no,
+                            replica=replica.rid)
+        step = getattr(replica, "ckpt_step", self._current_step)
+        t0 = time.perf_counter()
+        replica.state = ReplicaState.RECOVERING
+        try:
+            replica.reset_from_ckpt(self.ckpt_dir, step)
+            still_bad = replica.scrub()
+        except Exception as e:                        # noqa: BLE001
+            replica.state = ReplicaState.DEAD
+            self.metrics.replicas_lost += 1
+            self.supervisor.events.append(
+                f"tick {self.tick_no}: replica {replica.rid} DEAD "
+                f"(worker respawn failed: {e})")
+            self.event_log.emit("replica_dead", tick=self.tick_no,
+                                replica=replica.rid,
+                                detail={"reason": "respawn_failed"})
+            still_bad = None                      # exception path: DEAD above
+        if still_bad:
+            replica.state = ReplicaState.DEAD
+            self.metrics.replicas_lost += 1
+            self.event_log.emit("replica_dead", tick=self.tick_no,
+                                replica=replica.rid,
+                                detail={"reason": "reverify_failed"})
+        elif still_bad is not None:
+            seconds = time.perf_counter() - t0
+            replica.state = ReplicaState.HEALTHY
+            replica.last_clean_scrub_tick = self.tick_no
+            replica.recoveries += 1
+            self.metrics.recoveries += 1
+            self.metrics.observe_recovery(seconds)   # full restore by respawn
+            self.event_log.emit(
+                "recovery", tick=self.tick_no, replica=replica.rid,
+                seconds=seconds,
+                detail={"incremental": False, "action": "worker_respawn"})
+            self.supervisor.events.append(
+                f"tick {self.tick_no}: replica {replica.rid} worker "
+                f"respawned + re-verified ({seconds * 1e3:.1f} ms)")
         for req in drained:
             rec = self.records.get(req.uid)
             if rec is not None and not rec.terminal:
@@ -442,6 +615,10 @@ class Fleet:
         self.metrics.lost_tokens += len(rec.req.output or [])
         if rec.shadow is not None:
             self.metrics.lost_tokens += len(rec.shadow.output or [])
+        if rec.backup is not None:
+            self.metrics.lost_tokens += len(rec.backup.output or [])
+        rec.backup = None
+        rec.backup_rid = -1
         # evict any copy still resident somewhere (queued on a replica that
         # did not fail, half of a DMR pair, …)
         for r in self.replicas:
@@ -521,6 +698,118 @@ class Fleet:
                     return True
         return False
 
+    # ------------------------------------------------------ rolling deploy
+    def deploy(self, params=None, *, ckpt_dir: Optional[str] = None,
+               step: Optional[int] = None, mid_swap=None,
+               ticks_between: int = 2) -> dict:
+        """Zero-drain rolling weight deploy.
+
+        The new weights (``params``, or a checkpoint read from an external
+        ``ckpt_dir``/``step``) are first written to the fleet's own golden
+        store — deploy truth is always the crc32-verified *storage* copy,
+        and the new scrub checksums are computed from that round trip,
+        never from live memory.  Then the fleet walks its healthy replicas
+        one at a time:
+
+          1. settle output certified under the *old* checksums,
+          2. leave the router (``routable=False``; in-flight decodes keep
+             running — nothing drains),
+          3. patch exactly the changed leaves (manifest-path diff of old vs
+             new storage checksums → ``restore_leaves``) into the live
+             engine,
+          4. re-verify against the **new** storage checksums before the
+             replica takes new work again.  A strike landing mid-swap fails
+             this re-verify and takes the standard quarantine → incremental
+             restore (from the new step) → re-verify → replay path.
+
+        ``mid_swap(rid)`` is a test/campaign hook invoked between patch and
+        re-verify — the window the rolling-deploy campaign strikes SEUs
+        into.  ``ticks_between`` fleet ticks run between replica swaps so
+        the fleet demonstrably serves throughout.  Returns a summary dict.
+        """
+        import jax
+        import numpy as np
+        if (params is None) == (ckpt_dir is None):
+            raise ValueError("deploy needs exactly one of params= or "
+                             "ckpt_dir=")
+        new_step = (ckpt_mod.latest_step(self.ckpt_dir) or 0) + 1
+        if params is None:
+            _, params = ckpt_mod.restore(ckpt_dir, step)
+        ckpt_mod.save(self.ckpt_dir, new_step, params)
+        _, new_params = ckpt_mod.restore(self.ckpt_dir, new_step)
+        new_golden = _checksums_jit(new_params)
+
+        def _by_path(tree):
+            flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+            return {ckpt_mod.path_str(p): np.asarray(v) for p, v in flat}
+
+        old_sums, new_sums = _by_path(self._golden0), _by_path(new_golden)
+        changed = [p for p in ckpt_mod.manifest_paths(self.ckpt_dir,
+                                                      new_step)
+                   if p not in old_sums
+                   or not np.array_equal(old_sums[p], new_sums[p])]
+        leaves = ckpt_mod.restore_leaves(self.ckpt_dir, changed,
+                                         step=new_step)
+        self.metrics.deploys += 1
+        self.event_log.emit(
+            "deploy_start", tick=self.tick_no,
+            detail={"step": new_step, "changed": len(changed)})
+        self.supervisor.events.append(
+            f"tick {self.tick_no}: deploy of step {new_step} started "
+            f"({len(changed)} changed leaves)")
+
+        swapped: List[int] = []
+        failed: List[int] = []
+        for r in self.replicas:
+            if r.state is not ReplicaState.HEALTHY:
+                continue
+            # settle output that certifies against the old checksums while
+            # they are still the truth
+            if self.policy in _SCRUB_GATED and r.uncertified:
+                self._scrub_and_settle(r)
+                if r.state is not ReplicaState.HEALTHY:
+                    failed.append(r.rid)
+                    continue
+            r.routable = False
+            # ckpt_step moves first: a worker that dies mid-patch respawns
+            # with a *full* restore of the new step (golden recomputed from
+            # the restored weights), which completes the swap the hard way
+            r.ckpt_step = new_step
+            try:
+                r.patch_leaves(leaves, golden=new_golden)
+                if mid_swap is not None:
+                    mid_swap(r.rid)
+                clean = self.supervisor.scrub(r, self.metrics, self.tick_no)
+            except TransportDead:
+                self._recover_transport(r)
+                clean = r.state is ReplicaState.HEALTHY
+            if not clean and r.state is ReplicaState.HEALTHY:
+                # a strike landed during the swap (or the patch tore):
+                # caught before the replica rejoined the router
+                self._fail_replica(r, reason="deploy re-verify failed",
+                                   recover=True)
+            if r.state is ReplicaState.HEALTHY:
+                r.routable = True
+                self.metrics.replicas_swapped += 1
+                self.event_log.emit(
+                    "replica_swapped", tick=self.tick_no, replica=r.rid,
+                    detail={"step": new_step, "reverified": True,
+                            "recovered": not clean})
+                self.supervisor.events.append(
+                    f"tick {self.tick_no}: replica {r.rid} swapped to step "
+                    f"{new_step} (re-verified)")
+                swapped.append(r.rid)
+            else:
+                failed.append(r.rid)
+            for _ in range(ticks_between):
+                self.tick()
+
+        self._params0 = new_params
+        self._golden0 = new_golden
+        self._current_step = new_step
+        return {"step": new_step, "changed": len(changed),
+                "swapped": swapped, "failed": failed}
+
     # --------------------------------------------------------------- reset
     def reset(self, policy: Optional[Policy] = None):
         """Return the fleet to a fresh, fully-healthy state with the golden
@@ -533,8 +822,18 @@ class Fleet:
             self.policy = policy
         scrub_mode = _state_scrub_mode(self.policy)
         for r in self.replicas:
-            r.engine.state_scrub = scrub_mode
-            r.reset(params=self._params0)
+            if hasattr(r, "reset_from_ckpt"):
+                # proc replica: the worker restores the current golden step
+                # itself (cached per step, crc32-verified — byte-identical
+                # to ``self._params0``); a dead worker is respawned
+                r.reset_from_ckpt(self.ckpt_dir, self._current_step)
+                r.engine.state_scrub = scrub_mode
+            else:
+                r.engine.state_scrub = scrub_mode
+                r.reset(params=self._params0)
+                r.golden = self._golden0
+                r.routable = True
+            r.ckpt_step = self._current_step
         self.supervisor.reset()
         self.metrics = FleetMetrics(
             lost_work_bound_tokens=self.metrics.lost_work_bound_tokens)
@@ -545,8 +844,15 @@ class Fleet:
         self.released = {}
 
     def close(self):
-        """Delete the golden checkpoint directory if this fleet created it
-        (a caller-supplied ckpt_dir is the caller's to manage)."""
+        """Shut down worker processes (proc transport) and delete the golden
+        checkpoint directory if this fleet created it (a caller-supplied
+        ckpt_dir is the caller's to manage)."""
+        for r in self.replicas:
+            if hasattr(r, "handle"):
+                try:
+                    r.close()
+                except Exception:       # noqa: BLE001 — teardown best effort
+                    pass
         if self._owns_ckpt_dir:
             shutil.rmtree(self.ckpt_dir, ignore_errors=True)
             self._owns_ckpt_dir = False
@@ -564,6 +870,8 @@ class Fleet:
         ``FleetMetrics.to_json``)."""
         out = self.metrics.to_json(wall=wall)
         out["policy"] = self.policy.value
+        out["transport"] = self.transport
+        out["ckpt_step"] = self._current_step
         out["replicas"] = [
             {"rid": r.rid, "state": r.state.value,
              "recoveries": r.recoveries,

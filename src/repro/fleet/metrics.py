@@ -52,6 +52,11 @@ _COUNTERS = (
     "state_scrub_detections",  # decode-state checksum mismatches (transients)
     "state_rollbacks",        # engine snapshot rollbacks (CKPT recovery)
     "state_drains",           # drain+replay transient recoveries (ABFT detect)
+    # multi-host: speculative backups + rolling weight deploys
+    "backup_dispatches",      # straggler requests re-issued to a warm spare
+    "backups_won",            # releases where the backup copy finished first
+    "deploys",                # rolling weight deploys started
+    "replicas_swapped",       # replicas that swapped + re-verified clean
 )
 
 # latency in fleet ticks: power-of-two edges 1..8192

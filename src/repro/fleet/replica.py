@@ -57,6 +57,7 @@ class Replica:
                              state_scrub=state_scrub)
         self.state = ReplicaState.HEALTHY
         self.paused = False          # test hook: stop heartbeating (looks dead)
+        self.routable = True         # False while a rolling deploy swaps us
         self.golden = golden if golden is not None else _checksums_jit(params)
         self.uncertified: List[Request] = []   # finished, awaiting clean scrub
         self.recoveries = 0
@@ -124,6 +125,27 @@ class Replica:
             patched.append(leaf)
         self.engine.reset(params=jax.tree_util.tree_unflatten(treedef, patched))
         self.uncertified = []
+
+    def patch_leaves(self, leaves: Dict[str, np.ndarray], golden=None):
+        """Live weight swap for zero-drain rolling deploys: patch the named
+        leaves into the running engine *without* resetting its pipeline —
+        params are traced arguments of the compiled step fns, so in-flight
+        decodes simply see the new weights on their next step.  ``golden``
+        (the new deploy's storage checksums, computed from the checkpoint
+        store, never from live weights) replaces the scrub baseline so
+        re-verification certifies against what was *deployed*."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            self.engine.params)
+        patched = []
+        for path, leaf in flat:
+            p = ckpt_mod.path_str(path)
+            if p in leaves:
+                leaf = jnp.asarray(leaves[p], dtype=leaf.dtype).reshape(
+                    leaf.shape)
+            patched.append(leaf)
+        self.engine.params = jax.tree_util.tree_unflatten(treedef, patched)
+        if golden is not None:
+            self.golden = golden
 
     def reset(self, params=None):
         """Full revival for a new trial/run: fresh engine state, HEALTHY."""

@@ -44,9 +44,15 @@ class Router:
 
         ``exclude``: rids to avoid (DMR shadow placement, failover away from
         the replica that just lost the request).
+
+        A replica mid-swap in a rolling deploy advertises ``routable=False``
+        — healthy (it keeps decoding what it owns) but closed to new work
+        until it re-verifies against the new checksums.
         """
         healthy: List[Replica] = [
-            r for r in replicas if r.healthy and r.rid not in exclude]
+            r for r in replicas
+            if r.healthy and getattr(r, "routable", True)
+            and r.rid not in exclude]
         if not healthy:
             return None
         if self.policy == "hash":

@@ -95,12 +95,13 @@ class Supervisor:
         return True
 
     # ------------------------------------------------------------- recovery
-    def _full_reload(self, replica: Replica, ckpt_dir) -> None:
-        _, params = ckpt_mod.restore(ckpt_dir)       # crc32-verified read
+    def _full_reload(self, replica: Replica, ckpt_dir,
+                     step: Optional[int] = None) -> None:
+        _, params = ckpt_mod.restore(ckpt_dir, step)  # crc32-verified read
         replica.reload(params)
 
     def recover(self, replica: Replica, ckpt_dir, metrics: FleetMetrics,
-                tick: int) -> bool:
+                tick: int, step: Optional[int] = None) -> bool:
         """quarantine → restore → re-verify → readmit.  Returns True when
         the replica is HEALTHY again; on any failure it is left DEAD.
 
@@ -109,7 +110,11 @@ class Supervisor:
         are re-read from the golden checkpoint and patched in.  If the
         partial restore cannot cover the verdict, or re-verification still
         fails afterwards (e.g. the corruption moved while we restored), the
-        supervisor escalates to a full reload before giving up."""
+        supervisor escalates to a full reload before giving up.
+
+        ``step`` pins which checkpoint step is golden — after a rolling
+        deploy the fleet's current step moves, and recovering a replica
+        from an older step would re-verify against the wrong checksums."""
         t0 = time.perf_counter()
         replica.state = ReplicaState.QUARANTINED
         self.events.append(f"tick {tick}: replica {replica.rid} quarantined")
@@ -119,12 +124,12 @@ class Supervisor:
         incremental = False
         try:
             if bad:
-                leaves = ckpt_mod.restore_leaves(ckpt_dir, bad)
+                leaves = ckpt_mod.restore_leaves(ckpt_dir, bad, step=step)
                 if set(leaves) == set(bad):
                     replica.reload_leaves(leaves)
                     incremental = True
             if not incremental:
-                self._full_reload(replica, ckpt_dir)
+                self._full_reload(replica, ckpt_dir, step)
         except Exception as e:                        # noqa: BLE001
             replica.state = ReplicaState.DEAD
             metrics.replicas_lost += 1
@@ -143,7 +148,7 @@ class Supervisor:
                 f"falling back to full reload")
             incremental = False
             try:
-                self._full_reload(replica, ckpt_dir)
+                self._full_reload(replica, ckpt_dir, step)
             except Exception as e:                    # noqa: BLE001
                 replica.state = ReplicaState.DEAD
                 metrics.replicas_lost += 1
@@ -165,6 +170,7 @@ class Supervisor:
             return False
         seconds = time.perf_counter() - t0
         replica.state = ReplicaState.HEALTHY
+        replica.routable = True
         replica.last_clean_scrub_tick = tick
         replica.recoveries += 1
         metrics.recoveries += 1

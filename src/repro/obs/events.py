@@ -20,6 +20,12 @@ Event kinds (``EventLog.KINDS``):
   ``quarantine``  a replica was pulled from service pending recovery
   ``failover``    a request was replayed on another replica
   ``replica_dead``a replica left service permanently
+  ``deploy_start``a rolling weight deploy began (fleet scope): target
+                  checkpoint step + changed-leaf count
+  ``replica_swapped`` one replica finished its swap and re-verified clean
+                  against the *new* storage checksums (rejoins the router)
+  ``backup_dispatch`` a straggler's in-flight request was speculatively
+                  re-issued to a warm spare (first finisher wins)
 
 Every event carries a ``tick`` on the emitting layer's deterministic clock
 (engine steps for the executor, fleet ticks for the fleet) plus provenance
@@ -44,7 +50,8 @@ from typing import Dict, List, Optional
 
 
 KINDS = ("strike", "detection", "rollback", "recovery", "quarantine",
-         "failover", "replica_dead")
+         "failover", "replica_dead", "deploy_start", "replica_swapped",
+         "backup_dispatch")
 
 
 @dataclasses.dataclass

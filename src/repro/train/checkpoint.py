@@ -308,6 +308,23 @@ def restore_leaves(ckpt_dir: str | Path, paths: Sequence[str],
     return out
 
 
+def manifest_paths(ckpt_dir: str | Path,
+                   step: Optional[int] = None) -> List[str]:
+    """Every leaf path addressable in the newest (or given) checkpoint, in
+    manifest order.  This is the manifest-addressed fetch surface the
+    fleet's rolling deploys diff against: the deploy walks these paths,
+    compares storage checksums old-vs-new, and feeds exactly the changed
+    subset to ``restore_leaves`` — no tree flattening, no weight reads."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    manifest = json.loads((_step_dir(ckpt_dir, step) / MANIFEST).read_text())
+    key = "leaves" if manifest.get("format", 1) >= 2 else "entries"
+    return [e["path"] for e in manifest[key]]
+
+
 class IncrementalCheckpointer:
     """Async, incremental, crash-consistent checkpointer.
 

@@ -416,3 +416,38 @@ def test_serving_int8kv_scrub_covers_kv_cache():
         assert detected.all(), f"{policy} missed an int8 kv_cache strike"
         if policy == Policy.CKPT:
             assert not mismatch.any(), "CKPT rollback left a corrupt stream"
+
+
+def test_table1_bitsweep_report_round_trips():
+    """Regression for the committed Table-1 conv bit-sweep artifact
+    (``benchmarks/table1_conv.py --bit-sweep``): the report must load
+    through the standard loader, round-trip its bit-coverage rows exactly,
+    and preserve the headline result — zero residual SDC under abft at
+    every accumulator bit of both Table-1 layer geometries."""
+    import json
+    import pathlib
+    from repro.campaign.report import bit_coverage_from_json_dict
+    jpath = pathlib.Path(__file__).parent.parent / "reports" / \
+        "table1_bitsweep" / "table1_bitsweep.json"
+    if not jpath.exists():
+        pytest.skip("reports/table1_bitsweep not generated in this checkout")
+    raw = json.loads(jpath.read_text())
+    meta, results = load_report(jpath)
+    assert results == [] and meta["bench"] == "table1_bitsweep"
+    rows = bit_coverage_from_json_dict(raw)
+    assert [r.to_dict() for r in rows] == raw["bit_coverage"]
+    by_cfg = {}
+    for r in rows:
+        by_cfg.setdefault((r.workload, r.policy), []).append(r)
+    assert set(by_cfg) == {
+        (wl, pol)
+        for wl in ("qconv2d_t1_conv1", "qconv2d_t1_conv4")
+        for pol in ("none", "abft")}
+    for (wl, pol), cfg_rows in by_cfg.items():
+        assert sorted(r.bit for r in cfg_rows) == list(range(32))
+        assert all(r.trials > 0 for r in cfg_rows)
+        if pol == "abft":
+            assert sum(r.sdc for r in cfg_rows) == 0
+    # the none rows are what abft is protecting against: the sweep must
+    # actually have produced silent corruptions somewhere to be meaningful
+    assert sum(r.sdc for r in rows if r.policy == "none") > 0

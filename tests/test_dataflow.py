@@ -440,3 +440,113 @@ def test_failover_bit_exact_hybrid_family():
         assert replayed == golden
     finally:
         fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# Channel property tests: randomized interleavings (seeded, deterministic)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_channel_random_interleaving_fifo_no_loss_no_dup(seed):
+    """Property: under any seeded schedule of try_put/try_get, a channel
+    never loses, duplicates, or reorders an item — accepted puts come out
+    exactly once, in order, and rejections happen iff the channel was full
+    (/empty) at the call."""
+    import random
+    rng = random.Random(seed)
+    cap = rng.choice([0, 1, 2, 5])
+    ch = df.Channel(cap, f"prop{seed}")
+    sent, got = [], []
+    nxt = 0
+    for _ in range(500):
+        if rng.random() < 0.5:
+            was_full = ch.full()
+            accepted = ch.try_put(nxt)
+            assert accepted == (not was_full)
+            if accepted:
+                sent.append(nxt)
+                nxt += 1
+        else:
+            was_empty = len(ch) == 0
+            item = ch.try_get()
+            if was_empty:
+                assert df.Channel.is_empty_token(item)
+            else:
+                assert not df.Channel.is_empty_token(item)
+                got.append(item)
+    assert got + ch.drain() == sent
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_channel_streaming_close_propagates_exactly_once(seed):
+    """Property: closing a channel under concurrent blocking put/get wakes
+    both sides, each side sees ``Closed`` exactly once, and every item the
+    producer successfully put is delivered (close never drops queued
+    work)."""
+    import random
+    rng = random.Random(seed)
+    ch = df.Channel(rng.choice([1, 2, 4]), f"close{seed}")
+    produced, consumed = [], []
+    closed_seen = {"producer": 0, "consumer": 0}
+
+    def producer():
+        i = 0
+        while True:
+            try:
+                ch.put(i)
+            except df.Closed:
+                closed_seen["producer"] += 1
+                return
+            produced.append(i)
+            i += 1
+
+    def consumer():
+        while True:
+            try:
+                consumed.append(ch.get())
+            except df.Closed:
+                closed_seen["consumer"] += 1
+                return
+
+    tp = threading.Thread(target=producer)
+    tc = threading.Thread(target=consumer)
+    tp.start()
+    tc.start()
+    time.sleep(0.01 + rng.random() * 0.03)
+    ch.close()
+    tp.join(timeout=5)
+    tc.join(timeout=5)
+    assert not tp.is_alive() and not tc.is_alive()
+    assert closed_seen == {"producer": 1, "consumer": 1}
+    # no loss, no dup, FIFO: the consumer drained everything that was put
+    assert consumed == produced
+
+
+def test_channel_cooperative_spsc_threaded_no_loss():
+    """The cooperative API's lock-free claim, exercised for real: one
+    producer spinning try_put against a bounded channel, one consumer
+    spinning try_get — every item arrives exactly once, in order."""
+    ch = df.Channel(4, "spsc")
+    n = 2000
+    got = []
+
+    def produce():
+        i = 0
+        while i < n:
+            if ch.try_put(i):
+                i += 1
+
+    def consume():
+        while len(got) < n:
+            item = ch.try_get()
+            if not df.Channel.is_empty_token(item):
+                got.append(item)
+
+    tp = threading.Thread(target=produce)
+    tc = threading.Thread(target=consume)
+    tp.start()
+    tc.start()
+    tp.join(timeout=30)
+    tc.join(timeout=30)
+    assert got == list(range(n))

@@ -401,3 +401,285 @@ def test_fleet_ckpt_weight_seu_recovers_incrementally(fleet_case):
     assert m.incremental_restores >= 1             # partial restore, not reload
     assert m.full_reloads == 0
     assert m.leaves_restored >= 1
+
+
+# ---------------------------------------------------------------------------
+# Process transport: framing, wire round trips, cross-process bit identity
+# ---------------------------------------------------------------------------
+
+
+def test_transport_frame_round_trip():
+    from repro.fleet import transport as tp
+    arrays = {
+        "i32": np.arange(6, dtype=np.int32).reshape(2, 3),
+        "f32": np.asarray([[1.5, -2.25]], np.float32),
+        "i8": np.asarray([-128, 127], np.int8),
+        "scalar": np.asarray(3.0, np.float64),
+    }
+    payload = {"x": 1, "s": "y", "nested": {"a": [1, 2]}}
+    buf = tp.encode_frame(7, "step", payload, arrays)
+    seq, op, got_payload, got_arrays = tp.decode_frame(buf)
+    assert (seq, op, got_payload) == (7, "step", payload)
+    assert set(got_arrays) == set(arrays)
+    for name, a in arrays.items():
+        g = got_arrays[name]
+        assert g.dtype == a.dtype and g.shape == a.shape
+        assert np.array_equal(g, a)
+
+
+def test_transport_frame_rejects_garbage():
+    from repro.fleet import transport as tp
+    good = tp.encode_frame(0, "ping", {}, {})
+    with pytest.raises(tp.ProtocolError):
+        tp.decode_frame(b"XXXX" + good[4:])        # bad magic
+    with pytest.raises(tp.ProtocolError):
+        tp.decode_frame(good[:-1])                 # truncated
+    with pytest.raises(tp.ProtocolError):
+        tp.decode_frame(good + b"\x00")            # trailing bytes
+
+
+def test_pipe_channel_enforces_consecutive_seq():
+    import multiprocessing as mp_proc
+    from repro.fleet import transport as tp
+    a, b = mp_proc.Pipe()
+    ch = tp.PipeChannel(a, "seqtest")
+    b.send_bytes(tp.encode_frame(1, "first", {}, {}))
+    op, _, _ = ch.get(5)
+    assert op == "first"
+    b.send_bytes(tp.encode_frame(3, "gap", {}, {}))  # skipped seq 2
+    with pytest.raises(tp.ProtocolError):
+        ch.get(5)
+    a.close()
+    b.close()
+
+
+def test_request_wire_doc_round_trip():
+    req = Request(uid=3, prompt=[1, 2, 3], max_new_tokens=5)
+    clone = Request.from_doc(req.to_doc())
+    assert (clone.uid, clone.prompt, clone.max_new_tokens) == (3, [1, 2, 3], 5)
+    finished = Request.from_doc(req.to_doc())
+    finished.output = [9, 8]
+    finished.finished_tick = 4
+    req.sync_from_doc(finished.to_doc())
+    assert req.output == [9, 8] and req.finished_tick == 4
+
+
+@pytest.mark.parametrize("arch", [
+    "smollm-135m",
+    pytest.param("rwkv6-1.6b", marks=pytest.mark.slow),
+])
+def test_proc_fleet_bit_identical_with_failover(arch):
+    """The transport acceptance gate: a 3-replica process fleet releases
+    byte-identical token streams to the in-process fleet — including when
+    one worker is SIGKILLed mid-run and its work fails over."""
+    cfg = reduced(registry.get(arch))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    prompts = PROMPTS[:3]
+
+    def serve(fleet, kill=False):
+        fleet.reset()
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            assert fleet.submit(r)
+        if kill:
+            fleet.tick()
+            fleet.tick()
+            fleet.replicas[0].handle.proc.kill()     # SIGKILL, no goodbye
+        fleet.run()
+        return [tuple(fleet.released[r.uid].output) for r in reqs]
+
+    ref = Fleet(cfg, params, n_replicas=3, policy=Policy.NONE,
+                capacity=2, max_len=96, prefill_pad=8)
+    try:
+        golden = serve(ref)
+    finally:
+        ref.close()
+
+    fleet = Fleet(cfg, params, n_replicas=3, policy=Policy.NONE,
+                  capacity=2, max_len=96, prefill_pad=8, transport="proc")
+    try:
+        assert serve(fleet) == golden                # clean cross-process pass
+        assert serve(fleet, kill=True) == golden     # mid-run worker loss
+        assert fleet.metrics.recoveries + fleet.metrics.failovers > 0
+        assert all(r.state is ReplicaState.HEALTHY for r in fleet.replicas)
+    finally:
+        fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# Zero-drain rolling weight deploys
+# ---------------------------------------------------------------------------
+
+
+def _deploy_fleet(policy=Policy.ABFT):
+    cfg = reduced(registry.get("smollm-135m"))
+    pa = model_api.init_params(cfg, jax.random.key(0))
+    fleet = Fleet(cfg, pa, n_replicas=2, policy=policy,
+                  capacity=2, max_len=96, prefill_pad=8, scrub_every=3)
+    return cfg, pa, fleet
+
+
+def _serve_with_deploy(fleet, prompts, n_new, deploy_to=None, mid_swap=None):
+    fleet.reset()
+    reqs = [Request(uid=i, prompt=list(p), max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert fleet.submit(r)
+    summary = None
+    if deploy_to is not None:
+        fleet.tick()
+        fleet.tick()
+        summary = fleet.deploy(params=deploy_to, mid_swap=mid_swap)
+    fleet.run()
+    outs = [tuple(fleet.released[r.uid].output) if r.uid in fleet.released
+            else None for r in reqs]
+    return outs, summary
+
+
+def test_rolling_deploy_swaps_weights_without_draining():
+    """Deploying genuinely different weights mid-serve: every in-flight
+    request still releases (zero drain), both replicas re-verify against
+    the *new* checksums, and the released tokens change — proof the swap
+    reached the live engines."""
+    cfg, pa, fleet = _deploy_fleet()
+    pb = model_api.init_params(cfg, jax.random.key(1))
+    try:
+        golden_a, _ = _serve_with_deploy(fleet, PROMPTS[:3], 5)
+        mixed, summary = _serve_with_deploy(fleet, PROMPTS[:3], 5,
+                                            deploy_to=pb)
+        assert summary["swapped"] == [0, 1] and not summary["failed"]
+        assert summary["changed"] > 0                # a real weight diff
+        assert None not in mixed                     # zero drain: all released
+        assert mixed != golden_a                     # new weights are live
+        assert fleet.metrics.deploys == 1
+        assert fleet.metrics.replicas_swapped == 2
+        # ABFT certify gating ran scrubs against the *new* golden the whole
+        # time — any stale-checksum bug would have shown up as a detection
+        assert fleet.metrics.detections == 0
+        kinds = [e.kind for e in fleet.event_log]
+        assert kinds.count("deploy_start") == 1
+        assert kinds.count("replica_swapped") == 2
+        # the fleet now serves the new weights steady-state
+        post, _ = _serve_with_deploy(fleet, PROMPTS[:3], 5)
+        assert post != golden_a
+        assert all(r.routable and r.state is ReplicaState.HEALTHY
+                   for r in fleet.replicas)
+    finally:
+        fleet.close()
+
+
+def test_rolling_deploy_mid_swap_strike_detected_and_healed():
+    """An SEU striking replica 0 while replica 1 is mid-swap — the hardest
+    window — must be detected by the post-deploy certify gating and healed,
+    with the released stream still byte-identical to the fault-free run."""
+    cfg, pa, fleet = _deploy_fleet()
+    try:
+        golden, _ = _serve_with_deploy(fleet, PROMPTS[:3], 6, deploy_to=pa)
+
+        def mid_swap(rid):
+            if rid == 1:
+                fleet.strike(0, "weights", fi.flip_one_bit,
+                             jax.random.key(11))
+
+        struck, summary = _serve_with_deploy(fleet, PROMPTS[:3], 6,
+                                             deploy_to=pa, mid_swap=mid_swap)
+        assert struck == golden
+        assert fleet.metrics.detections >= 1
+        assert fleet.metrics.recoveries >= 1
+        assert all(r.state is ReplicaState.HEALTHY and r.routable
+                   for r in fleet.replicas)
+        kinds = [e.kind for e in fleet.event_log]
+        assert "strike" in kinds and "recovery" in kinds
+        # the strike landed inside the deploy window
+        assert kinds.index("deploy_start") < kinds.index("strike")
+    finally:
+        fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# Speculative backup dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_backup_wins_when_primary_stalls(smollm_fleet):
+    """A straggling primary gets its in-flight request re-issued to a warm
+    spare; when the primary stalls outright, the backup's release wins and
+    carries the exact bytes the primary would have produced."""
+    cfg, params, fleet = smollm_fleet
+    fleet.reset()
+    prompt = [5, 9, 2]
+    req = Request(uid=0, prompt=list(prompt), max_new_tokens=5)
+    assert fleet.submit(req)
+    fleet.tick()                                     # request is in flight
+    # synthetic step-time history: replica 0 is 900× slower than the median
+    for i in range(5):
+        for rid, dt in ((0, 9.0), (1, 0.01), (2, 0.01)):
+            fleet.supervisor.heartbeat(rid, i + 1, dt, fleet.tick_no)
+    assert fleet.supervisor.stragglers() == [0]
+    fleet._dispatch_backups([0])
+    rec = fleet.records[0]
+    assert rec.backup is not None and rec.backup_rid != 0
+    assert fleet.metrics.backup_dispatches == 1
+    assert [e.kind for e in fleet.event_log].count("backup_dispatch") == 1
+    fleet.replicas[0].paused = True                  # primary stalls outright
+    fleet.run()
+    fleet.replicas[0].paused = False
+    assert fleet.metrics.backups_won == 1
+    assert fleet.released[0] is rec.backup           # the backup's copy won
+    assert list(fleet.released[0].output) == greedy_reference(
+        cfg, params, prompt, 5)
+
+
+# ---------------------------------------------------------------------------
+# Chaos: SIGKILL under load and mid-deploy (slow tier)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_proc_fleet_chaos_sigkill_mid_decode_and_mid_deploy():
+    """Soak the worst windows: SIGKILL one worker mid-decode, then SIGKILL
+    another *during its own weight swap*.  Both must come back through
+    quarantine → restore → re-verify, every replayed token must match the
+    fault-free run, and the event log must record the full chain."""
+    cfg = reduced(registry.get("smollm-135m"))
+    params = model_api.init_params(cfg, jax.random.key(0))
+    fleet = Fleet(cfg, params, n_replicas=2, policy=Policy.ABFT,
+                  capacity=2, max_len=96, prefill_pad=8, scrub_every=3,
+                  transport="proc")
+    try:
+        golden, _ = _serve_with_deploy(fleet, PROMPTS[:3], 6, deploy_to=params)
+
+        fleet.reset()
+        reqs = [Request(uid=i, prompt=list(p), max_new_tokens=6)
+                for i, p in enumerate(PROMPTS[:3])]
+        for r in reqs:
+            assert fleet.submit(r)
+        fleet.tick()
+        fleet.tick()
+        fleet.replicas[0].handle.proc.kill()         # chaos 1: mid-decode
+        fleet.tick()                                 # detect, respawn, replay
+
+        def mid_swap(rid):
+            if rid == 1:
+                fleet.replicas[1].handle.proc.kill() # chaos 2: mid-own-swap
+        summary = fleet.deploy(params=params, mid_swap=mid_swap)
+        fleet.run()
+
+        outs = [tuple(fleet.released[r.uid].output) for r in reqs]
+        assert outs == golden                        # replay is bit-exact
+        assert summary["step"] == 2
+        assert fleet.metrics.recoveries >= 2
+        assert all(r.state is ReplicaState.HEALTHY and r.routable and r.alive
+                   for r in fleet.replicas)
+        kinds = [e.kind for e in fleet.event_log]
+        assert kinds.count("detection") >= 2         # both transport deaths
+        assert kinds.count("quarantine") >= 2
+        assert kinds.count("recovery") >= 2
+        # the second death happened inside the deploy window and the swap
+        # still completed (recovery respawned onto the *new* step)
+        dep = kinds.index("deploy_start")
+        assert "detection" in kinds[dep:] and "recovery" in kinds[dep:]
+        assert kinds[dep:].count("replica_swapped") == 2
+    finally:
+        fleet.close()
