@@ -41,7 +41,16 @@ def _time(f, *args, reps: int = 20):
     return (time.perf_counter() - t0) / reps
 
 
+# every policy, so selective-hardening consumers (the DSE cost oracle) and
+# the printed table read one number set — not the markdown-era NONE/ABFT/TMR
+# subset
+BENCH_POLICIES = (Policy.NONE, Policy.ABFT, Policy.DMR, Policy.TMR,
+                  Policy.CKPT)
+
+
 def bench_policy_overhead(m=256, k=512, n=256, reps=20, backends=("jnp",)):
+    """Per-policy qmatmul cost; returns machine-readable rows (one dict per
+    backend × policy) that main() embeds verbatim in the summary JSON."""
     print(f"\n=== policy overhead: qmatmul ({m}x{k}x{n} int8) ===")
     rng = np.random.default_rng(0)
     x_q = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int32), jnp.int8)
@@ -53,13 +62,16 @@ def bench_policy_overhead(m=256, k=512, n=256, reps=20, backends=("jnp",)):
     rows = []
     for backend in backends:
         base = None
-        for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
+        for policy in BENCH_POLICIES:
             f = jax.jit(lambda xq, wq, p=policy, be=backend: dependable_qmatmul(
                 p, xq, zp, wq, bias, scale, zp, backend=be)[0])
             t = _time(f, x_q, w_q, reps=reps)
             base = base or t
             gmacs = m * k * n / t / 1e9
-            rows.append((backend, policy.value, t, t / base, gmacs))
+            rows.append({"backend": backend, "policy": policy.value,
+                         "ms": round(t * 1e3, 4),
+                         "overhead_x": round(t / base, 3),
+                         "gmacs": round(gmacs, 2)})
             print(f"campaign_bench,qmatmul_policy={policy.value},"
                   f"backend={backend},ms={t * 1e3:.3f},"
                   f"overhead_x={t / base:.2f},gmacs={gmacs:.2f}")
@@ -79,12 +91,14 @@ def bench_conv_policy_overhead(h=32, w=32, cin=32, cout=32, reps=10,
     rows = []
     for backend in backends:
         base = None
-        for policy in (Policy.NONE, Policy.ABFT, Policy.TMR):
+        for policy in BENCH_POLICIES:
             f = jax.jit(lambda xq, wq, p=policy, be=backend: dependable_qconv2d(
                 p, xq, zp, wq, bias, scale, zp, backend=be)[0])
             t = _time(f, x_q, w_q, reps=reps)
             base = base or t
-            rows.append((backend, policy.value, t, t / base))
+            rows.append({"backend": backend, "policy": policy.value,
+                         "ms": round(t * 1e3, 4),
+                         "overhead_x": round(t / base, 3)})
             print(f"campaign_bench,qconv2d_policy={policy.value},"
                   f"backend={backend},ms={t * 1e3:.3f},"
                   f"overhead_x={t / base:.2f}")
@@ -178,8 +192,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
     backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
     reps = 5 if args.fast else 20
-    bench_policy_overhead(reps=reps, backends=backends)
-    bench_conv_policy_overhead(reps=max(reps // 2, 3), backends=backends)
+    qm_shape = (256, 512, 256)
+    conv_shape = (32, 32, 32, 32)
+    qm_rows = bench_policy_overhead(*qm_shape, reps=reps, backends=backends)
+    conv_rows = bench_conv_policy_overhead(
+        *conv_shape, reps=max(reps // 2, 3), backends=backends)
     cache = {}
     rates = bench_trial_rate(trials=50 if args.fast else 200, cache=cache)
     adaptive = bench_adaptive_vs_fixed(trials=50 if args.fast else 100,
@@ -188,6 +205,14 @@ def main(argv=None):
         doc = {
             "bench": "campaign",
             "fast": bool(args.fast),
+            # the per-policy overhead tables the printed CSV shows, as JSON
+            # — the DSE cost oracle (repro/dse/cost.py) and humans read the
+            # same numbers
+            "policy_overhead": {
+                "qmatmul": {"shape_mkn": list(qm_shape), "rows": qm_rows},
+                "qconv2d": {"shape_hwcc": list(conv_shape),
+                            "rows": conv_rows},
+            },
             "trial_rate": rates,
             "adaptive_vs_fixed": adaptive,
         }

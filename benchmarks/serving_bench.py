@@ -81,14 +81,17 @@ def _latency_stats(latencies):
 
 def run_engine(cfg, params, trace, capacity, max_len, prefill_pad,
                drain_barrier=False, compiled=None, multi_step=1,
-               tracer=None, metrics=None):
+               tracer=None, metrics=None, policy_map=None):
     """Serve the trace through the staged engine (continuous batching, or
     the pad-and-step baseline under ``drain_barrier``); returns
-    (report, reqs, compiled-pair)."""
+    (report, reqs, compiled-pair).  ``policy_map`` engages the per-site
+    dependability policies (in-graph FFN hardening + the engine's derived
+    scrub schedules) — mapped engines compile their own decode graphs, so
+    never share ``compiled`` across different maps."""
     eng = Engine(cfg, params, capacity=capacity, max_len=max_len,
                  prefill_pad=prefill_pad, drain_barrier=drain_barrier,
                  compiled=compiled, multi_step=multi_step,
-                 tracer=tracer, metrics=metrics)
+                 tracer=tracer, metrics=metrics, policy_map=policy_map)
 
     def serve():
         eng.reset()
@@ -134,6 +137,15 @@ def main(argv=None) -> int:
     ap.add_argument("--check-bit-identity", action="store_true",
                     help="also verify streamed outputs == greedy reference "
                          "(slow: one reference decode per request)")
+    ap.add_argument("--policy-map", default=None, metavar="JSON",
+                    help="selective-hardening comparison: serve the trace "
+                         "on the W8A8 FFN path under this per-site policy "
+                         "map (path or inline JSON, e.g. "
+                         "reports/dse/best_map.json), against the "
+                         "uniform-ABFT and unprotected corners — reports "
+                         "the mapped-vs-uniform speedup and asserts all "
+                         "three decode streams are bit-identical "
+                         "(docs/dse.md)")
     ap.add_argument("--trace-out", default=None,
                     help="re-serve the streamed trace with span tracing on "
                          "and write the Chrome trace_event JSON; also "
@@ -203,6 +215,49 @@ def main(argv=None) -> int:
         if reg is not None:
             reg.dump(args.metrics_out)
 
+    policy_map_section = None
+    policy_map_speedup = None
+    if args.policy_map:
+        import dataclasses
+        from repro.core.dependability import Policy
+        from repro.core.policy_map import PolicyMap, as_policy_map
+        pm = as_policy_map(args.policy_map)
+        # all three corners serve the same quantized path (the mapped ffn.*
+        # sites only exist there), so the ratio prices the policies alone
+        qcfg = dataclasses.replace(cfg, quant="w8a8_ffn")
+        qparams = model_api.init_params(qcfg, jax.random.key(args.seed))
+        runs = {}
+        reqs_by = {}
+        for label, this_map in (
+                ("none", None),
+                ("mapped", pm),
+                ("uniform_abft", PolicyMap.uniform(Policy.ABFT))):
+            runs[label], reqs_by[label], _ = run_engine(
+                qcfg, qparams, trace, args.capacity, args.max_len,
+                args.prefill_pad, multi_step=args.multi_step,
+                policy_map=this_map)
+        # the dependability contract: policies never change clean tokens —
+        # mapped and uniform streams must equal the unprotected stream
+        map_bit_identical = all(
+            all(a.output == b.output
+                for a, b in zip(reqs_by["none"], reqs_by[label]))
+            for label in ("mapped", "uniform_abft"))
+        assert map_bit_identical, \
+            "policy map changed clean decode tokens vs uniform/unprotected"
+        policy_map_speedup = round(
+            runs["mapped"]["tokens_per_s"]
+            / max(runs["uniform_abft"]["tokens_per_s"], 1e-9), 3)
+        none_tps = max(runs["none"]["tokens_per_s"], 1e-9)
+        policy_map_section = {
+            "map": pm.to_doc(),
+            "quant": "w8a8_ffn",
+            "runs": runs,
+            "overhead_vs_none": {
+                label: round(none_tps / max(r["tokens_per_s"], 1e-9), 3)
+                for label, r in runs.items()},
+            "bit_identical": map_bit_identical,
+        }
+
     speedup = streamed["tokens_per_s"] / max(padded["tokens_per_s"], 1e-9)
     result = {
         "arch": cfg.name,
@@ -223,6 +278,8 @@ def main(argv=None) -> int:
         "decode_bit_identical": bit_identical,
         "traced": traced,
         "trace_overhead_frac": trace_overhead_frac,
+        "policy_map": policy_map_section,
+        "policy_map_speedup": policy_map_speedup,
     }
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2) + "\n")
@@ -242,6 +299,13 @@ def main(argv=None) -> int:
     if traced is not None:
         print(f"traced:   {traced['tokens_per_s']:8.1f} tok/s  "
               f"(overhead {trace_overhead_frac * 100:.1f}%)")
+    if policy_map_section is not None:
+        r = policy_map_section["runs"]
+        print(f"policy map (w8a8): none {r['none']['tokens_per_s']:.1f} | "
+              f"mapped {r['mapped']['tokens_per_s']:.1f} | "
+              f"uniform-abft {r['uniform_abft']['tokens_per_s']:.1f} tok/s"
+              f"  -> mapped vs uniform {policy_map_speedup:.2f}x "
+              f"(bit-identical: {policy_map_section['bit_identical']})")
     print(f"wrote {out}")
     return 0
 

@@ -496,6 +496,10 @@ class ServingCase:
         self.cfg = reduced(registry.get(arch))
         if self.quant_kv:
             self.cfg = dataclasses.replace(self.cfg, quant_kv=True)
+        # subclass hook (e.g. the DSE's policy-mapped case): adjust the
+        # config before params/engine are built — quant toggles, baked-in
+        # policy maps — without re-plumbing the constructor
+        self.cfg = self._customize_cfg(self.cfg)
         self.params = model_api.init_params(self.cfg, key)
         # structured dependability events on the engine's tick clock: engine
         # strikes/scrubs/rollbacks emit into it directly; weight-site
@@ -509,6 +513,9 @@ class ServingCase:
         self._verify_storage = jax.jit(abft_api.verify_storage)
         self.prompts = [[5, 9, 2], [3, 1, 4, 1]]
         self._recovery = _RecoveryLog()
+
+    def _customize_cfg(self, cfg):
+        return cfg
 
     @staticmethod
     def supports(policy: Policy, site: str) -> bool:

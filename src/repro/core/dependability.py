@@ -197,6 +197,85 @@ def dependable_qmatmul(
     return run(inject), stats
 
 
+def dependable_matmul_acc(
+    policy: Policy,
+    x_q: jax.Array, w_q: jax.Array,
+    *, inject=None, stats: Optional[dict] = None, w_check=None,
+    backend: backend_mod.BackendLike = None,
+):
+    """Bare int32 accumulator ``x_q @ w_q`` under a dependability policy —
+    the building block :class:`~repro.core.policy_map.PolicyMap` threads
+    into hot paths that own their *own* dequant epilogue (the transformer's
+    W8A8 FFN ``_qdot``), where ``dependable_qmatmul``'s zero-point/requant
+    algebra does not apply.
+
+    All policies are bit-identical to the plain ``be.matmul_acc`` on clean
+    runs: the math is exact integer, checks never fire, votes of equal
+    replicas are the replica.  Per policy:
+
+      ABFT  Huang–Abraham row-checksum verify; flagged *rows* recompute
+            under ``lax.cond`` (exact math ⇒ bit-stable) and the fresh rows
+            are selected in.  Heals transient accumulator faults in place.
+      CKPT  same detection; rollback re-executes the *whole* op from the
+            live operands under ``lax.cond``.
+      DMR   dual execution; detect-only.  NOTE: inside a ``lax.scan`` layer
+            stack the alarm has no surface to escape through, so the
+            serving DSE search space excludes DMR at FFN sites — the stats
+            counter is the only witness.
+      TMR   triple execution + bitwise majority vote.  Under jit, XLA CSE
+            may collapse bit-identical clean replicas — temporal redundancy
+            is modeled, not physically enforced; the measured cost oracle
+            (repro/dse/cost.py) reports whatever the compiled program
+            actually costs.
+
+    Returns ``(acc int32, stats)``.
+    """
+    if stats is None:
+        stats = DependabilityStats.zero()
+    be = backend_mod.resolve(backend)
+
+    if policy in (Policy.ABFT, Policy.CKPT):
+        wc = w_check if w_check is not None else abft_mod.checksum_vector(w_q)
+        acc, want = be.matmul_acc_checksum(x_q, w_q, wc)
+        if inject is not None:
+            acc = inject(acc)
+        row_bad = jnp.sum(acc, axis=1) != want
+        detected = jnp.any(row_bad)
+
+        if policy == Policy.ABFT:
+            def recover(a):
+                fresh = be.matmul_acc(x_q, w_q)
+                return jnp.where(row_bad[:, None], fresh, a)
+            acc = jax.lax.cond(detected, recover, lambda a: a, acc)
+        else:
+            def rollback(_):
+                return be.matmul_acc(x_q, w_q)
+            acc = jax.lax.cond(detected, rollback, lambda a: a, acc)
+        healed = detected & jnp.all(jnp.sum(acc, axis=1) == want)
+        corrected = healed if policy == Policy.ABFT else False
+        recovered = healed if policy == Policy.CKPT else False
+        return acc, _bump(stats, detected, corrected, recovered)
+
+    def run(inj):
+        acc = be.matmul_acc(x_q, w_q)
+        if inj is not None:
+            acc = inj(acc)
+        return acc
+
+    if policy == Policy.DMR:
+        acc = run(inject)
+        detected = ~redundancy.agree([acc, run(None)])
+        return acc, _bump(stats, detected, False)
+
+    if policy == Policy.TMR:
+        r0, r1 = run(inject), run(None)
+        disagreed = ~redundancy.agree([r0, r1])
+        acc = redundancy.vote([r0, r1, run(None)])
+        return acc, _bump(stats, disagreed, disagreed)
+
+    return run(inject), stats
+
+
 def dependable_attention(
     policy: Policy,
     q: jax.Array, k: jax.Array, v: jax.Array,

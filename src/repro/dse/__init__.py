@@ -1,0 +1,23 @@
+"""Selective-hardening design-space exploration (docs/dse.md).
+
+Per-layer policy maps (``repro.core.policy_map``) define the design
+space; this package searches it: a measured cost oracle (``cost``),
+campaign-backed fitness with exact per-site memoization (``fitness``),
+an NSGA-lite Pareto loop (``search``), and the committed artifacts
+(``report``, ``cli``) — the paper's "SDC = 0 at minimum overhead"
+criterion made an executable decision rule.
+"""
+from repro.dse.space import SERVING_SPACE, SearchSpace, get_space
+from repro.dse.cost import CostModel, measure
+from repro.dse.fitness import Evaluator, MapServingCase, MapShipdetCase
+from repro.dse.search import (
+    Candidate, SearchResult, dominates, non_dominated_sort, pick_best,
+    search)
+
+__all__ = [
+    "SERVING_SPACE", "SearchSpace", "get_space",
+    "CostModel", "measure",
+    "Evaluator", "MapServingCase", "MapShipdetCase",
+    "Candidate", "SearchResult", "dominates", "non_dominated_sort",
+    "pick_best", "search",
+]

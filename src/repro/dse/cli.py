@@ -1,0 +1,256 @@
+"""Selective-hardening DSE CLI: measure → search → certify.
+
+    # 1. microbenchmark every (site × policy) into the cost oracle
+    PYTHONPATH=src python -m repro.dse.cli measure --out reports/dse
+
+    # 2. Pareto-search policy-map genomes (campaign-backed fitness,
+    #    resumable via the journal under <out>/journal)
+    PYTHONPATH=src python -m repro.dse.cli search --space serving \
+        --generations 6 --population 12 --trials 60 --ci-halfwidth 0.08 \
+        --out reports/dse
+
+    # 3. re-certify the selected map at full budget and write BENCH_dse.json
+    PYTHONPATH=src python -m repro.dse.cli certify --trials 150 \
+        --out reports/dse --bench-out BENCH_dse.json
+
+``certify``'s exit code is the gate CI relies on: 0 only when the map's
+certification campaigns observe SDC = 0 **and** its predicted cost is
+below the uniform-ABFT corner — the "minimum overhead at SDC = 0" claim,
+checked, not asserted.  The end-to-end throughput ratio comes from
+``benchmarks/serving_bench --policy-map reports/dse/best_map.json``; pass
+its summary via ``--serving-bench`` to fold the measured speedup into
+BENCH_dse.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _add_common(p):
+    p.add_argument("--out", default="reports/dse",
+                   help="artifact directory (cost model, frontier, journal)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--backend", default="jnp")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.dse.cli",
+        description="Selective hardening DSE: per-layer policy maps, "
+                    "measured cost oracle, Pareto search (docs/dse.md)")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    m = sub.add_parser("measure", help="microbenchmark the cost oracle")
+    _add_common(m)
+    m.add_argument("--arch", default="smollm-135m")
+    m.add_argument("--batch", type=int, default=8,
+                   help="decode batch for the FFN site shapes")
+    m.add_argument("--reps", type=int, default=30)
+    m.add_argument("--spaces", default="serving,shipdet",
+                   help="comma list of spaces to measure")
+
+    s = sub.add_parser("search", help="NSGA-lite Pareto search")
+    _add_common(s)
+    s.add_argument("--space", default="serving",
+                   choices=("serving", "shipdet"))
+    s.add_argument("--arch", default="smollm-135m")
+    s.add_argument("--generations", type=int, default=8)
+    s.add_argument("--population", type=int, default=16)
+    s.add_argument("--mutation-rate", type=float, default=0.25)
+    s.add_argument("--trials", type=int, default=60,
+                   help="per-site campaign trial cap during search")
+    s.add_argument("--ci-halfwidth", type=float, default=0.08,
+                   help="adaptive early-stop CI half-width for search "
+                        "campaigns (0 = fixed budget)")
+    s.add_argument("--fault-model", default="single_bitflip")
+    s.add_argument("--cost-model", default=None,
+                   help="cost oracle JSON (default <out>/cost_model.json; "
+                        "measured on the fly if absent)")
+    s.add_argument("--no-journal", action="store_true",
+                   help="skip the crash-consistent campaign journal")
+
+    c = sub.add_parser("certify", help="re-certify a map at full budget")
+    _add_common(c)
+    c.add_argument("--space", default="serving",
+                   choices=("serving", "shipdet"))
+    c.add_argument("--arch", default="smollm-135m")
+    c.add_argument("--map", default=None,
+                   help="PolicyMap JSON to certify "
+                        "(default <out>/best_map.json)")
+    c.add_argument("--trials", type=int, default=150)
+    c.add_argument("--ci-halfwidth", type=float, default=0.0,
+                   help="0 = fixed budget (tightest committed CI)")
+    c.add_argument("--fault-model", default="single_bitflip")
+    c.add_argument("--cost-model", default=None)
+    c.add_argument("--serving-bench", default=None,
+                   help="BENCH_serving.json from `serving_bench "
+                        "--policy-map` — folds the measured end-to-end "
+                        "speedup into BENCH_dse.json")
+    c.add_argument("--bench-out", default=None,
+                   help="write the BENCH_dse.json summary here")
+    c.add_argument("--allow-sdc", action="store_true",
+                   help="exit 0 even if certification observes SDC > 0")
+    return p
+
+
+def _cost_model(args, out: pathlib.Path, log):
+    from repro.dse.cost import CostModel, measure
+    path = pathlib.Path(args.cost_model) if args.cost_model \
+        else out / "cost_model.json"
+    if path.exists():
+        return CostModel.load(path), path
+    log(f"cost model {path} absent - measuring (reduced reps) ...")
+    cm = measure(arch=args.arch, reps=10, backend=args.backend,
+                 seed=args.seed, spaces=(args.space,))
+    cm.save(path)
+    return cm, path
+
+
+def cmd_measure(args, log) -> int:
+    from repro.dse.cost import measure
+    spaces = tuple(s.strip() for s in args.spaces.split(",") if s.strip())
+    cm = measure(arch=args.arch, batch=args.batch, reps=args.reps,
+                 backend=args.backend, seed=args.seed, spaces=spaces)
+    path = cm.save(pathlib.Path(args.out) / "cost_model.json")
+    log(f"wrote {path}")
+    for space in spaces:
+        for uniform in ("none", "abft", "tmr", "ckpt"):
+            try:
+                from repro.dse.space import get_space
+                sp = get_space(space)
+                genes = sp.genes(sp.uniform_genome(uniform))
+                log(f"  {space}: uniform {uniform:5s} -> "
+                    f"{cm.predict(space, genes):.4f} ms")
+            except KeyError:
+                pass
+    return 0
+
+
+def cmd_search(args, log) -> int:
+    from repro.campaign.journal import CampaignJournal
+    from repro.campaign.stats import SamplingPlan
+    from repro.dse import report as report_mod
+    from repro.dse.fitness import Evaluator
+    from repro.dse.search import search
+    from repro.dse.space import get_space
+    out = pathlib.Path(args.out)
+    space = get_space(args.space)
+    cm, cm_path = _cost_model(args, out, log)
+    journal = None if args.no_journal else CampaignJournal(out / "journal")
+    plan = SamplingPlan(ci_halfwidth=args.ci_halfwidth,
+                        chunk=max(args.trials // 3, 10),
+                        min_trials=min(20, args.trials))
+    ev = Evaluator(space, cm, seed=args.seed, backend=args.backend,
+                   arch=args.arch, fault_model=args.fault_model,
+                   trials=args.trials, plan=plan, journal=journal, log=log)
+    log(f"searching {args.space} space ({space.size()} designs) ...")
+    result = search(space, ev, generations=args.generations,
+                    population=args.population, seed=args.seed,
+                    mutation_rate=args.mutation_rate, log=log)
+    meta = {"seed": args.seed, "arch": args.arch, "backend": args.backend,
+            "fault_model": args.fault_model, "trials": args.trials,
+            "ci_halfwidth": args.ci_halfwidth,
+            "population": args.population,
+            "cost_model": str(cm_path),
+            "campaigns_run": ev.campaigns_run}
+    report_mod.write_pareto(out, space, result, meta=meta)
+    log(f"wrote {out / 'pareto.json'}, {out / 'pareto.md'}"
+        + ("" if result.best is None else f", {out / 'best_map.json'}"))
+    if result.best is None:
+        log("search produced no candidates")
+        return 1
+    b = result.best.fitness
+    log(f"best: {b.genes}  sdc_max={b.sdc_max:g} "
+        f"cost={b.cost_ms:.4f}ms det={b.detection_ticks:.2f} ticks")
+    return 0
+
+
+def cmd_certify(args, log) -> int:
+    from repro.campaign.stats import SamplingPlan
+    from repro.core.policy_map import as_policy_map
+    from repro.dse import report as report_mod
+    from repro.dse.fitness import Evaluator
+    from repro.dse.space import get_space
+    out = pathlib.Path(args.out)
+    space = get_space(args.space)
+    map_path = pathlib.Path(args.map) if args.map else out / "best_map.json"
+    pm = as_policy_map(str(map_path))
+    genome = space.from_policy_map(pm)
+    cm, _ = _cost_model(args, out, log)
+    genes = space.genes(genome)
+    cost_ms = cm.predict(args.space, genes)
+    uniform_abft = cm.predict(
+        args.space, space.genes(space.uniform_genome("abft")))
+    plan = SamplingPlan(ci_halfwidth=args.ci_halfwidth,
+                        chunk=max(args.trials // 3, 10))
+    ev = Evaluator(space, cm, seed=args.seed, backend=args.backend,
+                   arch=args.arch, fault_model=args.fault_model,
+                   trials=args.trials, plan=plan, journal=None, log=log)
+    log(f"certifying {map_path} on the {args.space} space "
+        f"({args.trials} trials/site, mapped engine) ...")
+    rows = ev.certify(genome, trials=args.trials, plan=plan)
+
+    pareto_doc = None
+    ppath = out / "pareto.json"
+    if ppath.exists():
+        pareto_doc = json.loads(ppath.read_text())
+    serving = None
+    if args.serving_bench:
+        sb = json.loads(pathlib.Path(args.serving_bench).read_text())
+        pm_sec = sb.get("policy_map") or {}
+        runs = pm_sec.get("runs", {})
+        serving = {
+            "source": args.serving_bench,
+            "policy_map_speedup": sb.get("policy_map_speedup"),
+            "bit_identical": pm_sec.get("bit_identical"),
+            "mapped_tokens_per_s": runs.get("mapped", {})
+            .get("tokens_per_s"),
+            "uniform_abft_tokens_per_s": runs.get("uniform_abft", {})
+            .get("tokens_per_s"),
+        }
+    doc = report_mod.bench_doc(
+        space_name=args.space, map_doc=pm.to_doc(), certify_rows=rows,
+        cost={"best_ms": round(cost_ms, 5),
+              "uniform_abft_ms": round(uniform_abft, 5),
+              "vs_uniform_abft": round(cost_ms / uniform_abft, 4)
+              if uniform_abft else None},
+        pareto_doc=pareto_doc, serving=serving)
+    sdc = doc["certify"]["sdc_max"]
+    log(f"certified: sdc_max={sdc} over {doc['certify']['trials']} trials, "
+        f"cost {cost_ms:.4f} ms vs uniform-abft {uniform_abft:.4f} ms "
+        f"({doc['cost']['vs_uniform_abft']}x)")
+    if args.bench_out:
+        bpath = pathlib.Path(args.bench_out)
+        bpath.parent.mkdir(parents=True, exist_ok=True)
+        bpath.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        log(f"wrote {bpath}")
+
+    ok = True
+    if sdc > 0 and not args.allow_sdc:
+        print(f"certification FAILED: observed SDC rate {sdc:g} > 0",
+              file=sys.stderr)
+        ok = False
+    if uniform_abft and cost_ms >= uniform_abft and not space.genes(
+            genome) == space.genes(space.uniform_genome("abft")):
+        print(f"certification FAILED: map costs {cost_ms:.4f} ms, not "
+              f"below uniform ABFT ({uniform_abft:.4f} ms)",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    log = lambda s: print(s, flush=True)                  # noqa: E731
+    if args.cmd == "measure":
+        return cmd_measure(args, log)
+    if args.cmd == "search":
+        return cmd_search(args, log)
+    return cmd_certify(args, log)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,338 @@
+"""Fitness oracle for the selective-hardening DSE.
+
+A design point (genome → :class:`~repro.core.policy_map.PolicyMap`) is
+scored on three minimized objectives:
+
+  1. **SDC upper bound** — the worst per-site ``sdc_ci_hi`` from adaptive
+     fault-injection campaigns (the same engine, stopping rule, and journal
+     as ``repro.campaign``): nothing in the frontier is a modeled number.
+  2. **Cost** — the measured cost oracle's prediction for the genome
+     (``repro.dse.cost.CostModel``), built from per-site microbenchmarks.
+  3. **Detection latency** — mean detection ticks across the covered
+     sites' reconstructed event timelines (how long a fault lives before
+     an alarm), the recovery axis the paper's checkpoint spacing trades.
+
+The serving space exploits a structural decomposition: campaign outcomes
+at one injection site depend only on (site, that site's effective policy)
+— never on the other genes.  In-graph FFN policies are bit-identical on
+clean data (exact integer math), so they cannot change what a *state*
+strike does to the token stream; and the engine's scrub machinery never
+looks at FFN genes.  The evaluator therefore memoizes one campaign per
+(site, policy) pair — the whole genetic search touches at most
+``Σ_site |choices(site)|`` campaigns (≤ 21 for the serving space) no
+matter how many genomes it visits, and the journal makes even those
+resumable across runs.  FFN genes are scored by the kernel-level
+accumulator campaign (``qmatmul`` workload) at the policy the gene names:
+the compute-path coverage axis the serving campaign's state sites do not
+strike.
+
+The shipdet space has true per-layer structure (a strike lands in one
+layer; the map decides that layer's fate), so it is evaluated per genome
+(memoized by digest) through :class:`MapShipdetCase` — per-trial random
+strike layers, the mapped forward, deploy-time checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.campaign import engine as engine_mod
+from repro.campaign import faultload as fl
+from repro.campaign import stats as stats_mod
+from repro.campaign.report import ConfigResult
+from repro.campaign.runner import (
+    ServingCase, ShipdetCase, _bitwise_mismatch, _finalize_config, build_case)
+from repro.core.dependability import Policy
+from repro.core.policy_map import PolicyMap
+
+FFN_SITES = ("ffn.wg", "ffn.wi", "ffn.wd")
+
+
+class MapServingCase(ServingCase):
+    """ServingCase on the W8A8 FFN path with an optional baked-in policy
+    map — the engine the DSE certifies its best map on.  With
+    ``policy_map=None`` the engine runs the same quantized forward with no
+    in-graph policies: bit-identical to any mapped engine on clean data,
+    which is what makes the evaluator's per-(site, policy) memoization
+    exact rather than approximate."""
+
+    name = "serving_map"
+
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 arch: str = "smollm-135m", policy_map: PolicyMap = None):
+        self._pm = policy_map
+        super().__init__(key, backend, arch)
+
+    def _customize_cfg(self, cfg):
+        cfg = dataclasses.replace(cfg, quant="w8a8_ffn")
+        if self._pm is not None:
+            from repro.models import api as model_api
+            cfg = model_api.with_policy_map(cfg, self._pm)
+        return cfg
+
+
+class MapShipdetCase(ShipdetCase):
+    """ShipdetCase driven by a per-layer policy map instead of one uniform
+    policy.  The ``policy`` argument of ``run_trials`` is ignored (specs
+    carry ``Policy.NONE`` as a placeholder); coverage comes from what the
+    map assigns to the layer each trial happens to strike:
+
+    ``accumulator``
+        the strike layer is drawn per trial from the trial key (uniform
+        over layers), and the int32 accumulator of exactly that layer is
+        faulted — so a genome's detection rate is the fault-weighted mix
+        of its layers' in-op policies.
+    ``weights``
+        host pytree surgery over the per-layer ``w_q`` leaves (uniform
+        over weight *elements*, so big layers absorb proportionally more
+        strikes); ABFT layers detect against the deploy-time checksums,
+        CKPT layers roll back to the shipped golden weights, DMR/TMR
+        layers replicate *compute*, not storage — a weight-memory SEU
+        corrupts every replica identically and sails through (the map
+        search discovers this, rather than being told).
+    """
+
+    name = "shipdet_map"
+
+    def __init__(self, key: jax.Array, backend: str = "jnp",
+                 policy_map: PolicyMap = None):
+        super().__init__(key, backend)
+        self.policy_map = policy_map or PolicyMap.uniform(Policy.NONE)
+
+    def _fwd(self, params, x, inject=None, layer=None):
+        out, st = self._shipdet.forward(
+            self.specs, params, x, policy_map=self.policy_map,
+            inject=inject, inject_layer=layer, backend=self.backend,
+            w_checks=self.w_checks, golden_wq=self.golden_wq)
+        return out, st["faults_detected"] > 0
+
+    def run_trials(self, policy, site, fault, keys):
+        detected_l, mismatch_l = [], []
+        if site == "weights":
+            run = jax.jit(lambda p, x: self._fwd(p, x))
+            golden, _ = run(self.params, self.x)
+            for k in keys:
+                wq = fl.inject_pytree_with(
+                    self._wq_pytree(self.params), k, fault)
+                out, det = run(self._with_wq(wq), self.x)
+                detected_l.append(bool(det))
+                mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
+        elif site == "accumulator":
+            golden, _ = jax.jit(lambda: self._fwd(self.params, self.x))()
+            n_layers = len(self.specs)
+            jitted: Dict[int, object] = {}
+            for k in keys:
+                layer = int(jax.random.randint(
+                    jax.random.fold_in(k, 0x10ad), (), 0, n_layers))
+                if layer not in jitted:
+                    jitted[layer] = jax.jit(
+                        lambda key, L=layer: self._fwd(
+                            self.params, self.x,
+                            inject=lambda acc: fault(acc, key), layer=L))
+                out, det = jitted[layer](k)
+                detected_l.append(bool(det))
+                mismatch_l.append(bool(_bitwise_mismatch(out, golden)))
+        else:
+            raise ValueError(f"unsupported mapped shipdet site {site!r}")
+        return np.asarray(detected_l), np.asarray(mismatch_l)
+
+
+@dataclasses.dataclass
+class Fitness:
+    """One genome's evaluated objectives + the evidence behind them."""
+
+    genes: Dict[str, str]
+    objectives: Tuple[float, float, float]   # (sdc_ci_hi, cost_ms, det_ticks)
+    sdc_max: float                            # worst observed per-site rate
+    cost_ms: float
+    detection_ticks: float
+    trials: int
+    site_rows: Dict[str, dict]               # site -> ConfigResult doc
+    # sites left at "none": structural coverage gap.  A lucky small-trial
+    # campaign makes an unprotected site *statistically* indistinguishable
+    # from a protected one (0 SDC observed at both); the tie-break in
+    # pick_best prefers the design that detects every injected fault over
+    # the one that merely hasn't been caught yet.
+    uncovered: int = 0
+
+    def to_doc(self) -> dict:
+        return {"genes": self.genes, "objectives": list(self.objectives),
+                "sdc_max": self.sdc_max, "cost_ms": self.cost_ms,
+                "detection_ticks": self.detection_ticks,
+                "trials": self.trials, "uncovered": self.uncovered,
+                "site_rows": self.site_rows}
+
+
+class Evaluator:
+    """Campaign-backed fitness with per-(site, policy) memoization.
+
+    Every campaign row is produced by ``engine_mod.run_config`` under the
+    given :class:`~repro.campaign.stats.SamplingPlan` (early-stopped CIs)
+    and, when a journal is given, is crash-consistent and reusable across
+    search runs — re-running the same search resumes every row from disk.
+    """
+
+    def __init__(self, space, cost_model, *, seed: int = 0,
+                 backend: str = "jnp", arch: str = "smollm-135m",
+                 fault_model: str = "single_bitflip", trials: int = 60,
+                 plan: Optional[stats_mod.SamplingPlan] = None,
+                 journal=None, log=lambda s: None):
+        self.space = space
+        self.cost_model = cost_model
+        self.seed = seed
+        self.backend = backend
+        self.arch = arch
+        self.fault_model = fault_model
+        self.trials = trials
+        self.plan = plan or stats_mod.SamplingPlan(
+            ci_halfwidth=0.08, chunk=20, min_trials=20)
+        self.journal = journal
+        self.log = log
+        self._rows: Dict[Tuple[str, str, str], ConfigResult] = {}
+        self._cases: Dict[str, object] = {}
+        self._genomes: Dict[str, Fitness] = {}
+        self.campaigns_run = 0
+
+    # -- campaign plumbing -------------------------------------------------
+
+    def _run(self, spec: fl.CampaignSpec, case) -> ConfigResult:
+        acc = engine_mod.run_config(spec, self.plan, self.plan.chunk,
+                                    case=case, journal=self.journal)
+        self.campaigns_run += 1
+        res = _finalize_config(spec, type(case), acc, self.plan, None)
+        self.log(f"  campaign {spec.label()}: sdc={res.sdc_rate:.3f} "
+                 f"(ci_hi={res.sdc_ci_hi:.3f}) det={res.detection_rate:.3f} "
+                 f"n={res.trials}")
+        return res
+
+    def _serving_row(self, site: str, gene: str) -> ConfigResult:
+        key = ("serving_map", site, gene)
+        if key not in self._rows:
+            case = self._cases.get("serving_map")
+            if case is None:
+                case = MapServingCase(jax.random.key(self.seed),
+                                      self.backend, self.arch)
+                self._cases["serving_map"] = case
+            spec = fl.CampaignSpec("serving_map", Policy(gene), site,
+                                   self.fault_model, self.trials,
+                                   self.seed, self.backend)
+            self._rows[key] = self._run(spec, case)
+        return self._rows[key]
+
+    def _kernel_row(self, gene: str) -> ConfigResult:
+        key = ("qmatmul", "accumulator", gene)
+        if key not in self._rows:
+            case = self._cases.get("qmatmul")
+            if case is None:
+                case = build_case("qmatmul", self.seed, self.backend)
+                self._cases["qmatmul"] = case
+            spec = fl.CampaignSpec("qmatmul", Policy(gene), "accumulator",
+                                   self.fault_model, self.trials,
+                                   self.seed, self.backend)
+            self._rows[key] = self._run(spec, case)
+        return self._rows[key]
+
+    def _shipdet_rows(self, genome) -> Dict[str, ConfigResult]:
+        digest = self.space.digest(genome)
+        rows = {}
+        for site in self.space.campaign_sites:
+            key = (f"shipdet_map:{digest}", site, "map")
+            if key not in self._rows:
+                case_key = f"shipdet_map:{digest}"
+                case = self._cases.get(case_key)
+                if case is None:
+                    case = MapShipdetCase(
+                        jax.random.key(self.seed), self.backend,
+                        policy_map=self.space.to_policy_map(genome))
+                    # one live mapped case at a time (compiled per genome)
+                    self._cases = {k: v for k, v in self._cases.items()
+                                   if not k.startswith("shipdet_map:")}
+                    self._cases[case_key] = case
+                # the digest rides in the workload field so the journal
+                # (and the trial key stream) key on the *map*, not just
+                # the (site, placeholder-policy) pair
+                spec = fl.CampaignSpec(f"shipdet_map:{digest}", Policy.NONE,
+                                       site, self.fault_model, self.trials,
+                                       self.seed, self.backend)
+                self._rows[key] = self._run(spec, case)
+            rows[site] = self._rows[key]
+        return rows
+
+    # -- public API --------------------------------------------------------
+
+    def evaluate(self, genome) -> Fitness:
+        digest = self.space.digest(genome)
+        if digest in self._genomes:
+            return self._genomes[digest]
+        genes = self.space.genes(genome)
+        rows: Dict[str, ConfigResult] = {}
+        if self.space.name == "serving":
+            for site in self.space.campaign_sites:
+                rows[site] = self._serving_row(site, genes[site])
+            for site in FFN_SITES:
+                rows[site] = self._kernel_row(genes[site])
+        elif self.space.name == "shipdet":
+            rows = self._shipdet_rows(genome)
+        else:
+            raise KeyError(f"no fitness oracle for space "
+                           f"{self.space.name!r}")
+
+        sdc_max = max(r.sdc_rate for r in rows.values())
+        sdc_hi = max(r.sdc_ci_hi for r in rows.values())
+        cost_ms = float(self.cost_model.predict(self.space.name, genes))
+        det = [r.detection_ticks_mean for r in rows.values()
+               if r.detections_logged]
+        det_ticks = float(np.mean(det)) if det else 0.0
+        fit = Fitness(
+            genes=genes,
+            objectives=(round(sdc_hi, 6), round(cost_ms, 5),
+                        round(det_ticks, 4)),
+            sdc_max=sdc_max, cost_ms=cost_ms, detection_ticks=det_ticks,
+            trials=sum(r.trials for r in rows.values()),
+            site_rows={s: dataclasses.asdict(r) for s, r in rows.items()},
+            uncovered=sum(1 for g in genes.values() if g == "none"))
+        self._genomes[digest] = fit
+        return fit
+
+    def certify(self, genome, *, trials: int,
+                plan: Optional[stats_mod.SamplingPlan] = None,
+                ) -> Dict[str, dict]:
+        """Re-evaluate a single map at certification budget — running the
+        *actual mapped engine/network* (not the memoized decomposition), so
+        the committed verdict exercises exactly what deployment executes."""
+        plan = plan or stats_mod.SamplingPlan()
+        pm = self.space.to_policy_map(genome)
+        digest = self.space.digest(genome)
+        rows: Dict[str, dict] = {}
+        if self.space.name == "serving":
+            case = MapServingCase(jax.random.key(self.seed), self.backend,
+                                  self.arch, policy_map=pm)
+            genes = self.space.genes(genome)
+            for site in self.space.campaign_sites:
+                spec = fl.CampaignSpec(f"certify_map:{digest}",
+                                       Policy(genes[site]), site,
+                                       self.fault_model, trials,
+                                       self.seed, self.backend)
+                acc = engine_mod.run_config(spec, plan, plan.chunk,
+                                            case=case, journal=self.journal)
+                res = _finalize_config(spec, type(case), acc, plan, None)
+                self.log(f"  certify {spec.label()}: sdc={res.sdc_rate:.4f} "
+                         f"(ci_hi={res.sdc_ci_hi:.4f}) n={res.trials}")
+                rows[site] = dataclasses.asdict(res)
+        else:
+            case = MapShipdetCase(jax.random.key(self.seed), self.backend,
+                                  policy_map=pm)
+            for site in self.space.campaign_sites:
+                spec = fl.CampaignSpec(f"certify_map:{digest}", Policy.NONE,
+                                       site, self.fault_model, trials,
+                                       self.seed, self.backend)
+                acc = engine_mod.run_config(spec, plan, plan.chunk,
+                                            case=case, journal=self.journal)
+                res = _finalize_config(spec, type(case), acc, plan, None)
+                self.log(f"  certify {spec.label()}: sdc={res.sdc_rate:.4f} "
+                         f"(ci_hi={res.sdc_ci_hi:.4f}) n={res.trials}")
+                rows[site] = dataclasses.asdict(res)
+        return rows

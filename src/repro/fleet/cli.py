@@ -75,6 +75,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--backend", default=None,
                    help="execution backend for every replica's quantized "
                         "hot paths (jnp | ref | pallas; default: cfg's)")
+    p.add_argument("--policy-map", default=None, metavar="JSON",
+                   help="per-site dependability policy map for the in-graph "
+                        "hot paths: path to a PolicyMap JSON file (e.g. "
+                        "reports/dse/best_map.json) or inline JSON text; "
+                        "implies the W8A8 FFN quantized path so the ffn.* "
+                        "sites exist (docs/dse.md)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default="reports/fleet",
                    help="output directory for fleet.json")
@@ -140,6 +146,13 @@ def main(argv=None) -> int:
 
     log = (lambda s: None) if args.quiet else (lambda s: print(s, flush=True))
     cfg = reduced(registry.get(args.arch))
+    policy_map = None
+    if args.policy_map is not None:
+        import dataclasses
+        from repro.core.policy_map import as_policy_map
+        policy_map = as_policy_map(args.policy_map)
+        # the mapped ffn.* sites live on the W8A8 quantized FFN path
+        cfg = dataclasses.replace(cfg, quant="w8a8_ffn")
     params = model_api.init_params(cfg, jax.random.key(args.seed))
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(1, cfg.vocab_size,
@@ -150,7 +163,7 @@ def main(argv=None) -> int:
                   policy=Policy(args.policy), router=args.router,
                   scrub_every=args.scrub_every, capacity=args.capacity,
                   max_len=96, prefill_pad=8, backend=args.backend,
-                  transport=args.transport)
+                  policy_map=policy_map, transport=args.transport)
 
     log(f"fleet: {args.replicas}×{cfg.name} replicas, policy={args.policy}, "
         f"router={args.router}, transport={args.transport}")
@@ -183,6 +196,7 @@ def main(argv=None) -> int:
     report["inject"] = args.inject
     report["kill"] = args.kill
     report["deploy"] = bool(args.deploy)
+    report["policy_map"] = policy_map.to_doc() if policy_map else None
     report["outputs_match_golden"] = observed == golden
     fleet.close()
 

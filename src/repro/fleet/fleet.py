@@ -145,7 +145,17 @@ class Fleet:
                  capacity: int = 4, max_len: int = 128, prefill_pad: int = 8,
                  snapshot_every: int = 16, eos_id: int = -1,
                  heartbeat_timeout: float = 25.0, ckpt_dir: Optional[str] = None,
-                 backend: Optional[str] = None, transport: str = "inproc"):
+                 backend: Optional[str] = None, policy_map=None,
+                 transport: str = "inproc"):
+        # per-site selective hardening for every replica's in-graph hot
+        # paths (core/policy_map.py; PolicyMap | JSON doc/text/path).  Baked
+        # into cfg so all replicas — including proc-transport workers, which
+        # receive the pickled config — compile the same mapped program.  The
+        # fleet keeps its own scrub orchestration (certify-before-release
+        # weight scrubs, decode-state scrub modes) driven by ``policy``;
+        # the map governs the op-level policies inside each engine.
+        from repro.models import api as _model_api
+        cfg = _model_api.with_policy_map(cfg, policy_map)
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; "
                              f"known: {TRANSPORTS}")

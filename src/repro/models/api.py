@@ -30,6 +30,23 @@ def with_backend(cfg: ArchConfig, backend: Optional[str]) -> ArchConfig:
     return dataclasses.replace(cfg, backend=backend)
 
 
+def with_policy_map(cfg: ArchConfig, policy_map) -> ArchConfig:
+    """The config with a per-site dependability policy map baked in
+    (core/policy_map.py): the quantized FFN matmuls resolve ``ffn.<name>``
+    through it in-graph.  Accepts a PolicyMap, a JSON doc/text/path
+    (``as_policy_map`` coercions), or None (config untouched).  Every
+    backend the map names is validated against the registry up front, so a
+    typo fails at configuration time rather than inside a jit trace."""
+    from repro.core.policy_map import as_policy_map
+    pm = as_policy_map(policy_map)
+    if pm is None or pm == cfg.policy_map:
+        return cfg
+    from repro.core import backend as backend_mod
+    for name in pm.backends():
+        backend_mod.get_backend(name)
+    return dataclasses.replace(cfg, policy_map=pm)
+
+
 def _mod(cfg: ArchConfig):
     if cfg.family == "transformer":
         return transformer

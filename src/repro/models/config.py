@@ -8,7 +8,10 @@ variant of any config.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from repro.core.policy_map import PolicyMap
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +88,15 @@ class ArchConfig:
     attn_impl: str = "chunked"              # "chunked" (jnp online-softmax)
                                             # | "flash" (Pallas fwd+bwd
                                             # kernels; scores never in HBM)
+    policy_map: Optional["PolicyMap"] = None   # per-site dependability
+                                            # assignment (core/policy_map.py)
+                                            # for the quantized hot paths:
+                                            # ``ffn.*`` matmul sites resolve
+                                            # through it in-graph.  None ⇒
+                                            # legacy unprotected path,
+                                            # byte-identical dispatch.  Set
+                                            # via models.api.with_policy_map
+                                            # (validates rule backends)
     backend: Optional[str] = None           # execution backend for the
                                             # quantized primitives ("jnp" |
                                             # "ref" | "pallas" — the

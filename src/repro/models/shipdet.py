@@ -111,8 +111,9 @@ def golden_weights(params: List[Dict[str, Any]]) -> List[jax.Array]:
 
 
 def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
-            *, policy: Policy = Policy.NONE, use_kernel: bool = False,
-            interpret: bool = False, inject=None,
+            *, policy: Policy = Policy.NONE, policy_map=None,
+            use_kernel: bool = False,
+            interpret: bool = False, inject=None, inject_layer=None,
             backend=None, w_checks: Optional[List[jax.Array]] = None,
             golden_wq: Optional[List[jax.Array]] = None
             ) -> Tuple[jax.Array, Dict]:
@@ -129,7 +130,23 @@ def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
     live weights.  ``golden_wq`` (from ``golden_weights``) additionally
     gives CKPT layers a rollback target, so a weight SEU is *healed* by
     re-executing from the known-good weights, not just flagged.
+
+    ``policy_map`` (core/policy_map.py) replaces the single network-wide
+    ``policy`` with a per-layer assignment resolved by ``ConvSpec.name`` —
+    the Python layer loop gives the CNN true per-layer granularity, so
+    selective-hardening DSE searches this space directly.  Under a map,
+    DMR/TMR run *in the op* per layer (layer-level temporal redundancy)
+    rather than via network-level replication; clean outputs stay
+    bit-identical to the unmapped path for every policy (exact integer
+    checks never fire, votes of equal replicas are the replica).  Exactly
+    one of ``policy`` / ``policy_map`` may be non-trivial.
+
+    ``inject_layer`` overrides the default mid-network accumulator
+    injection site with an explicit layer index (per-layer fault-injection
+    campaigns; None keeps the legacy mid-layer hook).
     """
+    if policy_map is not None and policy is not Policy.NONE:
+        raise ValueError("pass either policy= or policy_map=, not both")
     stats = DependabilityStats.zero()
     if backend is None or isinstance(backend, str):
         layer_backends = [backend] * len(specs)
@@ -137,14 +154,26 @@ def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
         layer_backends = list(backend)
         assert len(layer_backends) == len(specs), \
             (len(layer_backends), len(specs))
+    hook_layer = len(specs) // 2 if inject_layer is None else inject_layer
     for i, (s, p) in enumerate(zip(specs, params)):
         stride = (s.stride, s.stride)
         layer_be = layer_backends[i]
         # uniform accumulator injection site: the mid-layer int32 accumulator
         # is reachable under every policy, so fault-injection campaigns
         # measure all policies on the same hook
-        layer_inject = inject if i == len(specs) // 2 else None
-        if policy != Policy.NONE or layer_inject is not None \
+        layer_inject = inject if i == hook_layer else None
+        if policy_map is not None:
+            layer_policy, pm_backend = policy_map.resolve(s.name)
+            layer_be = pm_backend or layer_be
+            in_op_policy = layer_policy
+        else:
+            layer_policy = policy
+            # ABFT and CKPT run inside the op (checksum detect; recompute-
+            # vs rollback-recover); NMR policies replicate at the network
+            # level, so their per-layer call is the plain path
+            in_op_policy = policy if policy in (Policy.ABFT, Policy.CKPT) \
+                else Policy.NONE
+        if layer_policy != Policy.NONE or layer_inject is not None \
                 or layer_be is not None:
             x_q = quant.quantize(x, p["in_scale"], p["in_zp"])
             bias_i32 = jnp.round(
@@ -152,12 +181,8 @@ def forward(specs: List[ConvSpec], params: List[Dict[str, Any]], x: jax.Array,
             ).astype(jnp.int32)
             rq = quant.requant_scale(p["in_scale"], p["qconv"].w_scale,
                                      p["out_scale"])
-            # ABFT and CKPT run inside the op (checksum detect; recompute-
-            # vs rollback-recover); NMR policies replicate at the network
-            # level, so their per-layer call is the plain path
             y_q, lstats = dependable_qconv2d(
-                policy if policy in (Policy.ABFT, Policy.CKPT)
-                else Policy.NONE,
+                in_op_policy,
                 x_q, p["in_zp"], p["qconv"].w_q, bias_i32, rq, p["out_zp"],
                 stride=stride, padding="SAME", inject=layer_inject,
                 backend=layer_be,

@@ -142,14 +142,31 @@ def _qdot(cfg: ArchConfig, x, bp, name):
     The int8 accumulator comes from the execution-backend registry
     (``cfg.backend``): jnp dot_general by default, the Pallas qmatmul
     kernel when the config asks for the co-processor path.  Bit-identical
-    either way (integer accumulation, exact mod 2^32)."""
+    either way (integer accumulation, exact mod 2^32).
+
+    With ``cfg.policy_map`` set, the site ``ffn.<name>`` resolves to a
+    dependability policy (and optionally a backend) and the accumulator
+    runs through ``dependable_matmul_acc`` — selective hardening of the
+    FFN hot path.  Clean-path outputs stay bit-identical to the unmapped
+    dispatch for every policy (exact integer checks never fire); the scan
+    over layers means the assignment is per-matmul-name, uniform across
+    the layer stack (see core/policy_map.py)."""
     if name + "_q" in bp:
         from repro.kernels import dispatch
         x_q, x_s = _quantize_act(x)
         w_q = bp[name + "_q"]
         lead = x_q.shape[:-1]
-        acc = dispatch.matmul_acc(x_q.reshape(-1, x_q.shape[-1]), w_q,
-                                  backend=cfg.backend)
+        x2 = x_q.reshape(-1, x_q.shape[-1])
+        if cfg.policy_map is not None:
+            from repro.core import dependability as dep
+            pol, pm_backend = cfg.policy_map.resolve("ffn." + name)
+            be = pm_backend or cfg.backend
+            if pol is dep.Policy.NONE:
+                acc = dispatch.matmul_acc(x2, w_q, backend=be)
+            else:
+                acc, _ = dep.dependable_matmul_acc(pol, x2, w_q, backend=be)
+        else:
+            acc = dispatch.matmul_acc(x2, w_q, backend=cfg.backend)
         acc = acc.reshape(*lead, w_q.shape[-1])
         y = acc.astype(jnp.float32) * x_s * bp[name + "_s"]
         return y.astype(x.dtype)

@@ -743,6 +743,7 @@ class StreamingExecutor:
                  max_len: int = 512, prefill_pad: int = 64,
                  snapshot_every: int = 32, eos_id: int = -1,
                  compiled=None, state_scrub: str = "off",
+                 storage_scrub: str = "off", storage_scrub_every: int = 1,
                  certify: Optional[Callable[[Request], bool]] = None,
                  drain_barrier: bool = False, multi_step: int = 1,
                  tracer=None, event_log=None, metrics=None):
@@ -836,6 +837,32 @@ class StreamingExecutor:
         self._expected_check = None        # checksums after last mutation
         self.state_events: List[dict] = []  # drained by fleets / campaigns
 
+        # in-serve weight-storage scrubbing: verify the live parameters
+        # against construction-time storage checksums on a tick cadence.
+        #   "off"       no storage scrub (a fleet/deploy layer may own it)
+        #   "detect"    alarm-only — run at every-pump cadence so detection
+        #               latency is bounded (the corrupted stream still
+        #               ships; detect-only coverage is only as good as how
+        #               fast it raises the alarm)
+        #   "rollback"  restore the golden (construction-time) parameters —
+        #               healing is retroactive, so the cadence can be
+        #               amortized (``storage_scrub_every`` ticks per verify)
+        # The baseline is blessed at construction and deliberately NOT
+        # refreshed by ``reset(params=)`` — a reset handing over corrupted
+        # params must still be caught.  Intentional weight swaps (rolling
+        # deploys) call ``refresh_storage_baseline()``.
+        if storage_scrub not in ("off", "detect", "rollback"):
+            raise ValueError(f"storage_scrub must be off|detect|rollback, "
+                             f"got {storage_scrub!r}")
+        self.storage_scrub = storage_scrub
+        self.storage_scrub_every = max(1, int(storage_scrub_every))
+        self._storage_checks = None
+        self._golden_params = None
+        self._verify_storage = None
+        self._storage_alarmed = False
+        if storage_scrub != "off":
+            self.refresh_storage_baseline()
+
     @property
     def compiled(self):
         """The jitted (decode, prefill) pair, shareable with same-config
@@ -864,6 +891,7 @@ class StreamingExecutor:
         self._since_snapshot = []
         self._expected_check = None
         self.state_events = []
+        self._storage_alarmed = False
 
     # ------------------------------------------------------- dependability
     def _device_state(self) -> dict:
@@ -932,6 +960,67 @@ class StreamingExecutor:
             # accept the corrupted fingerprint as the new baseline so one
             # strike raises one alarm, not one per remaining step
             self._refresh_state_check()
+        self.state_events.append(event)
+
+    def refresh_storage_baseline(self):
+        """Bless the *current* parameters as the golden storage state:
+        recompute the deploy-time checksums and retain the params as the
+        rollback target.  Called at construction and by intentional weight
+        swaps (rolling deploys); never implicitly by ``reset``."""
+        from repro.core import abft as abft_mod
+        if self._verify_storage is None:
+            self._verify_storage = jax.jit(abft_mod.verify_storage)
+            self._storage_checksums = jax.jit(abft_mod.storage_checksums)
+        self._golden_params = self.params
+        self._storage_checks = self._storage_checksums(self.params)
+        self._storage_alarmed = False
+
+    def scrub_storage(self) -> bool:
+        """Verify live parameters against the golden storage checksums;
+        True == clean.  Counts one check (and the detection, if any) into
+        the dependability rollup."""
+        if self._storage_checks is None:
+            return True
+        ok = self._verify_storage(self.params, self._storage_checks)
+        clean = all(bool(x) for x in jax.tree_util.tree_leaves(ok))
+        self.record_dependability({
+            "faults_detected": jnp.int32(0 if clean else 1),
+            "checks_run": jnp.int32(1)}, emit_events=False)
+        return clean
+
+    def _storage_scrub_and_recover(self):
+        """The in-serve storage scrub: detect a weight-memory SEU against
+        the golden checksums; under ``rollback`` restore the golden
+        parameters in place (retroactively heals every read since the
+        strike would have been re-issued from clean storage — decode state
+        repairs ride the decode-state scrub/snapshot machinery)."""
+        if self._storage_alarmed or self.scrub_storage():
+            return
+        event = {"step": self.stats.steps, "site": "weights",
+                 "recovered": False, "seconds": 0.0, "steps_replayed": 0}
+        if self.tracer is not None:
+            self.tracer.instant("scrub_detection", site="weights")
+        if self.event_log is not None:
+            self.event_log.emit("detection", tick=self.tick, site="weights",
+                                detail={"check": "storage_scrub"})
+        if self.storage_scrub == "rollback":
+            t0 = time.perf_counter()
+            self.params = self._golden_params
+            event["recovered"] = True
+            event["seconds"] = time.perf_counter() - t0
+            self.record_dependability({"faults_recovered": jnp.int32(1)})
+            if self.tracer is not None:
+                self.tracer.instant("rollback", site="weights")
+            if self.event_log is not None:
+                self.event_log.emit(
+                    "rollback", tick=self.tick, site="weights",
+                    seconds=event["seconds"],
+                    detail={"action": "golden_restore"})
+        else:
+            # detect-only: one strike raises one alarm — the baseline stays
+            # golden (storage semantics), so latch instead of re-blessing;
+            # reset()/refresh_storage_baseline() clear the latch
+            self._storage_alarmed = True
         self.state_events.append(event)
 
     def drain_state_events(self) -> List[dict]:
@@ -1049,6 +1138,12 @@ class StreamingExecutor:
         # last verified snapshot instead of decoding from corrupted state
         if self.state_scrub != "off" and self.decode.active:
             self._scrub_and_recover()
+        # storage scrub on its own cadence, before any stage reads weights
+        # this cycle: detect mode runs every pump (bounded detection
+        # latency), rollback mode amortizes over storage_scrub_every ticks
+        if self.storage_scrub != "off" \
+                and self.tick % self.storage_scrub_every == 0:
+            self._storage_scrub_and_recover()
         self.admit.pump()
         self.prefill.pump()
         self.decode.join()

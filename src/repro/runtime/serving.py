@@ -30,6 +30,7 @@ from __future__ import annotations
 
 from typing import Callable, List, Optional
 
+from repro.core.dependability import Policy
 from repro.models import api as model_api
 from repro.models.config import ArchConfig
 from repro.runtime.dataflow import (     # noqa: F401 — public re-exports
@@ -49,7 +50,9 @@ class Engine:
                  max_len: int = 512, prefill_pad: int = 64,
                  snapshot_every: int = 32, eos_id: int = -1,
                  compiled=None, backend: Optional[str] = None,
-                 state_scrub: str = "off",
+                 policy_map=None, state_scrub: str = "off",
+                 storage_scrub: Optional[str] = None,
+                 storage_scrub_every: Optional[int] = None,
                  certify: Optional[Callable[[Request], bool]] = None,
                  drain_barrier: bool = False, multi_step: int = 1,
                  tracer=None, event_log=None, metrics=None):
@@ -57,10 +60,37 @@ class Engine:
         # paths (core/backend registry); baked into cfg so the jitted
         # decode/prefill pair and any compiled-pair sharing stay consistent
         cfg = model_api.with_backend(cfg, backend)
+        # policy_map= is the engine's selective-hardening surface
+        # (core/policy_map.py; PolicyMap | JSON doc/text/path).  The map is
+        # baked into cfg — the jitted decode/prefill pair executes the
+        # mapped ``ffn.*`` policies in-graph — and the engine derives its
+        # scrub schedule from the state sites unless the caller pinned one:
+        #   kv_cache/decode_state policies -> state_scrub (PolicyMap.
+        #       scrub_mode: CKPT⇒rollback, ABFT⇒detect)
+        #   weights policy -> storage_scrub: ABFT⇒detect at every-pump
+        #       cadence (detection latency is the product), CKPT⇒rollback
+        #       amortized over snapshot_every ticks (golden restore heals
+        #       retroactively)
+        cfg = model_api.with_policy_map(cfg, policy_map)
+        if policy_map is not None:
+            pm = cfg.policy_map
+            if state_scrub == "off":
+                state_scrub = pm.scrub_mode()
+            if storage_scrub is None:
+                storage_scrub = {Policy.ABFT: "detect",
+                                 Policy.CKPT: "rollback"}.get(
+                    pm.storage_policy(), "off")
+        if storage_scrub is None:
+            storage_scrub = "off"
+        if storage_scrub_every is None:
+            storage_scrub_every = 1 if storage_scrub == "detect" \
+                else snapshot_every
         self._ex = StreamingExecutor(
             cfg, params, capacity=capacity, max_len=max_len,
             prefill_pad=prefill_pad, snapshot_every=snapshot_every,
             eos_id=eos_id, compiled=compiled, state_scrub=state_scrub,
+            storage_scrub=storage_scrub,
+            storage_scrub_every=storage_scrub_every,
             certify=certify, drain_barrier=drain_barrier,
             multi_step=multi_step, tracer=tracer, event_log=event_log,
             metrics=metrics)
@@ -176,6 +206,20 @@ class Engine:
         self._ex.state_scrub = mode
 
     @property
+    def policy_map(self):
+        """The per-site dependability assignment baked into the config
+        (None for the legacy single-policy engine)."""
+        return self._ex.cfg.policy_map
+
+    @property
+    def storage_scrub(self) -> str:
+        return self._ex.storage_scrub
+
+    @property
+    def storage_scrub_every(self) -> int:
+        return self._ex.storage_scrub_every
+
+    @property
     def state_events(self):
         return self._ex.state_events
 
@@ -245,6 +289,15 @@ class Engine:
     def scrub_decode_state(self) -> bool:
         return self._ex.scrub_decode_state()
 
+    def scrub_storage(self) -> bool:
+        """Verify live params against the golden storage checksums
+        (True == clean); no-op True when storage scrubbing is off."""
+        return self._ex.scrub_storage()
+
+    def refresh_storage_baseline(self):
+        """Re-bless the current params as golden (rolling-deploy hook)."""
+        self._ex.refresh_storage_baseline()
+
     def drain_state_events(self) -> List[dict]:
         return self._ex.drain_state_events()
 
@@ -265,6 +318,7 @@ class Engine:
                    tokens_out=ex.stats.tokens_out,
                    snapshot_every=ex.snapshot_every,
                    state_scrub=ex.state_scrub,
+                   storage_scrub=ex.storage_scrub,
                    state_events_pending=len(ex.state_events))
         return out
 

@@ -1,0 +1,221 @@
+"""Selective-hardening DSE: genome space, Pareto machinery, cost oracle,
+and the campaign-backed evaluator's memoization contract."""
+from __future__ import annotations
+
+import random
+
+import jax
+import pytest
+
+from repro.dse.fitness import FFN_SITES, Evaluator, Fitness
+from repro.dse.search import (
+    Candidate, crowding_distance, dominates, non_dominated_sort, pick_best,
+    search)
+from repro.dse.space import SERVING_SPACE, get_space
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------------ space
+
+def test_space_roundtrip_and_digest_determinism():
+    sp = SERVING_SPACE
+    g = sp.uniform_genome("abft")
+    assert sp.from_doc(sp.to_doc(g)) == g
+    assert sp.from_policy_map(sp.to_policy_map(g)) == g
+    assert sp.digest(g) == sp.digest(tuple(g))
+    assert sp.digest(g) != sp.digest(sp.uniform_genome("ckpt"))
+    assert sp.size() == 3 ** 6          # 3 FFN choices × 3 state choices
+
+
+def test_space_prunes_unsound_policies():
+    sp = SERVING_SPACE
+    for site, choices in sp.sites:
+        assert "dmr" not in choices
+        assert "tmr" not in choices     # XLA CSE collapses in-graph NMR
+    # uniform fallback picks the strongest available choice
+    g = sp.uniform_genome("tmr")
+    assert all(gene == "ckpt" for gene in g)
+
+
+def test_space_operators_are_seeded_and_valid():
+    sp = SERVING_SPACE
+    a = sp.random_genome(random.Random(0))
+    b = sp.random_genome(random.Random(1))
+    assert a == sp.random_genome(random.Random(0))
+    child1 = sp.crossover(a, b, random.Random(2))
+    child2 = sp.crossover(a, b, random.Random(2))
+    assert child1 == child2
+    sp.validate(child1)
+    sp.validate(sp.mutate(a, random.Random(3), rate=1.0))
+    with pytest.raises(ValueError):
+        sp.validate(("dmr",) * 6)
+
+
+def test_shipdet_space_matches_network():
+    from repro.models import shipdet
+    sp = get_space("shipdet")
+    assert sp.site_names == tuple(s.name for s in shipdet.network_specs())
+    assert all(len(c) == 5 for _, c in sp.sites)
+
+
+# ----------------------------------------------------------------- pareto
+
+def _cand(digest, objectives, sdc=0.0, cost=None, uncovered=0):
+    cost = objectives[1] if cost is None else cost
+    return Candidate(genome=(), digest=digest, fitness=Fitness(
+        genes={}, objectives=tuple(objectives), sdc_max=sdc, cost_ms=cost,
+        detection_ticks=objectives[2], trials=10, site_rows={},
+        uncovered=uncovered))
+
+
+def test_dominates_and_sort():
+    assert dominates((0, 1, 1), (0, 2, 1))
+    assert not dominates((0, 1, 1), (0, 1, 1))
+    assert not dominates((0, 1, 2), (1, 2, 1))      # trade-off: neither
+    cands = [_cand("a", (0.0, 1.0, 1.0)),           # front 0
+             _cand("b", (0.0, 2.0, 0.5)),           # front 0 (trade-off)
+             _cand("c", (0.0, 2.0, 1.0)),           # dominated by a
+             _cand("d", (1.0, 3.0, 2.0))]           # dominated by all
+    fronts = non_dominated_sort(cands)
+    assert sorted(fronts[0]) == [0, 1]
+    assert fronts[1] == [2]
+    assert fronts[2] == [3]
+
+
+def test_crowding_distance_prefers_extremes():
+    cands = [_cand(str(i), (0.0, float(i), float(3 - i)))
+             for i in range(4)]
+    dist = crowding_distance(cands, [0, 1, 2, 3])
+    assert dist[0] == float("inf") and dist[3] == float("inf")
+    assert dist[1] > 0 and dist[2] > 0
+
+
+def test_pick_best_is_cheapest_sdc_zero():
+    cands = [_cand("cheap_unsafe", (0.3, 0.1, 0.0), sdc=0.3),
+             _cand("safe_expensive", (0.1, 2.0, 1.0), sdc=0.0),
+             _cand("safe_cheap", (0.1, 1.0, 1.0), sdc=0.0)]
+    assert pick_best(cands).digest == "safe_cheap"
+    # nothing feasible: lowest SDC wins, then cost
+    assert pick_best(cands, sdc_budget=-1).digest == "safe_cheap"
+    unsafe_only = [c for c in cands if c.fitness.sdc_max > 0]
+    assert pick_best(unsafe_only).digest == "cheap_unsafe"
+    assert pick_best([]) is None
+
+
+def test_pick_best_cost_tie_prefers_coverage():
+    # equal cost, equal (zero) observed SDC: the design with no
+    # unprotected sites wins even with worse detection latency — lucky
+    # small-trial campaigns must not out-rank structural coverage
+    cands = [_cand("gap", (0.1, 1.0, 0.2), sdc=0.0, uncovered=1),
+             _cand("covered", (0.1, 1.0, 0.9), sdc=0.0, uncovered=0)]
+    assert pick_best(cands).digest == "covered"
+    # but a strictly cheaper uncovered design still wins the cost objective
+    cands.append(_cand("gap_cheaper", (0.1, 0.5, 0.2), sdc=0.0,
+                       uncovered=1))
+    assert pick_best(cands).digest == "gap_cheaper"
+
+
+# ------------------------------------------------------------ cost oracle
+
+def _toy_cost_model():
+    from repro.dse.cost import CostModel
+    site_ms = {"none": 0.0, "abft": 1.0, "dmr": 2.0, "tmr": 3.0,
+               "ckpt": 1.5}
+    return CostModel({
+        "meta": {},
+        "serving": {
+            "n_layers": 2,
+            "sites": {s: {"ms": dict(site_ms)} for s in FFN_SITES},
+            "scrub": {"storage_verify_ms": 8.0, "storage_checksum_ms": 1.0},
+        },
+        "shipdet": {"layers": {
+            "stem": {"ms": dict(site_ms)},
+            "det_head": {"ms": {k: 2 * v for k, v in site_ms.items()}},
+        }},
+    })
+
+
+def test_cost_predict_monotone_and_amortized():
+    cm = _toy_cost_model()
+    none = cm.predict("serving", {s: "none" for s in SERVING_SPACE.site_names})
+    abft = cm.predict("serving",
+                      SERVING_SPACE.genes(SERVING_SPACE.uniform_genome("abft")))
+    assert none == 0.0 and abft > none
+    # CKPT's amortized storage scrub is cheaper than ABFT's every-pump one
+    base = {s: "none" for s in SERVING_SPACE.site_names}
+    w_abft = cm.predict("serving", {**base, "weights": "abft"})
+    w_ckpt = cm.predict("serving", {**base, "weights": "ckpt"})
+    assert 0 < w_ckpt < w_abft
+    assert cm.predict("shipdet", {"stem": "abft", "det_head": "ckpt"}) \
+        == pytest.approx(1.0 + 3.0)
+    with pytest.raises(KeyError):
+        cm.predict("nope", {})
+
+
+def test_cost_model_roundtrip(tmp_path):
+    from repro.dse.cost import CostModel
+    cm = _toy_cost_model()
+    p = cm.save(tmp_path / "cm.json")
+    assert CostModel.load(p).doc == cm.doc
+
+
+# ------------------------------------------------ search loop (stubbed)
+
+class _StubEvaluator:
+    """Deterministic analytic fitness: no campaigns, instant evaluate."""
+
+    def __init__(self, space, cost_model):
+        self.space = space
+        self.cm = cost_model
+        self.calls = 0
+
+    def evaluate(self, genome):
+        self.calls += 1
+        genes = self.space.genes(genome)
+        unsafe = sum(1 for g in genes.values() if g == "none")
+        cost = self.cm.predict(self.space.name, genes)
+        return Fitness(genes=genes,
+                       objectives=(unsafe / len(genes), cost, 1.0),
+                       sdc_max=unsafe / len(genes), cost_ms=cost,
+                       detection_ticks=1.0, trials=1, site_rows={})
+
+
+def test_search_is_deterministic_and_picks_cheapest_safe():
+    cm = _toy_cost_model()
+    r1 = search(SERVING_SPACE, _StubEvaluator(SERVING_SPACE, cm),
+                generations=4, population=10, seed=7)
+    r2 = search(SERVING_SPACE, _StubEvaluator(SERVING_SPACE, cm),
+                generations=4, population=10, seed=7)
+    assert [c.digest for c in r1.front] == [c.digest for c in r2.front]
+    assert r1.best.digest == r2.best.digest
+    assert r1.best.fitness.sdc_max == 0.0
+    # selective hardening must beat the safe uniform corners it was seeded
+    # with (abft, ckpt) — the whole point of the search
+    sp = SERVING_SPACE
+    corners = [cm.predict("serving", sp.genes(sp.uniform_genome(u)))
+               for u in ("abft", "ckpt")]
+    assert r1.best.fitness.cost_ms < min(corners)
+    assert r1.generations == 4 and r1.evaluations == len(r1.archive)
+    assert len(r1.history) == 4
+
+
+# ------------------------------------ evaluator memoization (integration)
+
+def test_evaluator_memoizes_per_site_policy():
+    from repro.campaign.stats import SamplingPlan
+    cm = _toy_cost_model()
+    ev = Evaluator(SERVING_SPACE, cm, seed=0, trials=4,
+                   plan=SamplingPlan(chunk=4, min_trials=4))
+    g1 = SERVING_SPACE.uniform_genome("abft")
+    f1 = ev.evaluate(g1)
+    ran_after_first = ev.campaigns_run
+    assert ran_after_first == 4          # 3 state sites + 1 kernel row
+    assert f1.trials > 0
+    # same genome: cached outright; sibling genome sharing genes: no new
+    # campaigns for the shared (site, policy) pairs
+    assert ev.evaluate(g1) is f1
+    g2 = list(g1)
+    g2[SERVING_SPACE.site_names.index("weights")] = "ckpt"
+    ev.evaluate(tuple(g2))
+    assert ev.campaigns_run == ran_after_first + 1      # only weights/ckpt

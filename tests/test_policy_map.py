@@ -1,0 +1,313 @@
+"""Per-site policy maps: resolution semantics and the bit-identity
+contract.
+
+The invariants that make selective hardening *safe to deploy*:
+  * resolution precedence: exact rule > glob rule (declaration order) >
+    default; per-call policy overrides beat the map everywhere.
+  * a uniform map is bit-for-bit the legacy uniform policy, across
+    backends and across both mapped models (transformer FFN, shipdet).
+  * mapped forwards on clean data are bit-identical to unmapped forwards
+    (exact integer math — hardening must never change answers).
+  * ``dependable_matmul_acc`` detects and (ABFT/CKPT/TMR) heals injected
+    accumulator faults.
+  * the engine's policy-derived storage scrub detects/rolls-back weight
+    strikes and stays silent on clean runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dependability import Policy, dependable_matmul_acc
+from repro.core.policy_map import PolicyMap, PolicyRule, as_policy_map
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- resolve
+
+def test_precedence_exact_over_glob_over_default():
+    pm = PolicyMap(rules=(
+        PolicyRule("ffn.*", Policy.ABFT),
+        PolicyRule("ffn.wd", Policy.TMR),        # exact beats earlier glob
+        PolicyRule("ffn.w?", Policy.CKPT),       # later glob: never reached
+    ), default=Policy.DMR)
+    assert pm.policy_for("ffn.wd") is Policy.TMR
+    assert pm.policy_for("ffn.wg") is Policy.ABFT     # first matching glob
+    assert pm.policy_for("weights") is Policy.DMR     # default
+
+
+def test_glob_order_is_declaration_order():
+    pm = PolicyMap(rules=(
+        PolicyRule("ffn.w?", Policy.CKPT),
+        PolicyRule("ffn.*", Policy.ABFT),
+    ))
+    assert pm.policy_for("ffn.wg") is Policy.CKPT
+    assert pm.policy_for("ffn.ws_extra") is Policy.ABFT
+
+
+def test_rule_backend_falls_back_to_default_backend():
+    pm = PolicyMap(rules=(PolicyRule("a", Policy.ABFT, backend="ref"),
+                          PolicyRule("b", Policy.ABFT)),
+                   default_backend="jnp")
+    assert pm.resolve("a") == (Policy.ABFT, "ref")
+    assert pm.resolve("b") == (Policy.ABFT, "jnp")
+
+
+def test_roundtrip_and_coercion(tmp_path):
+    pm = PolicyMap(rules=(PolicyRule("ffn.*", Policy.ABFT),
+                          PolicyRule("weights", Policy.CKPT)),
+                   default=Policy.NONE)
+    assert PolicyMap.from_doc(pm.to_doc()) == pm
+    assert as_policy_map(pm.dumps()) == pm             # inline JSON text
+    p = tmp_path / "map.json"
+    pm.save(p)
+    assert as_policy_map(str(p)) == pm                 # path
+    assert as_policy_map(pm) is pm
+    assert as_policy_map(None) is None
+
+
+def test_uniform_and_scrub_derivation():
+    pm = PolicyMap.uniform(Policy.ABFT)
+    assert pm.is_uniform() is Policy.ABFT
+    assert pm.scrub_mode() == "detect"
+    assert pm.storage_policy() is Policy.ABFT
+    pm2 = PolicyMap(rules=(PolicyRule("weights", Policy.CKPT),
+                           PolicyRule("kv_cache", Policy.CKPT)))
+    assert pm2.scrub_mode() == "rollback"
+    assert pm2.storage_policy() is Policy.CKPT
+    assert PolicyMap.uniform(Policy.NONE).scrub_mode() == "off"
+
+
+# ------------------------------------------------- dependable_matmul_acc
+
+@pytest.fixture(scope="module")
+def mm_operands():
+    kx, kw = jax.random.split(jax.random.key(0))
+    x = jax.random.randint(kx, (6, 16), -128, 128).astype(jnp.int8)
+    w = jax.random.randint(kw, (16, 8), -127, 128).astype(jnp.int8)
+    return x, w
+
+
+@pytest.mark.parametrize("policy", list(Policy))
+def test_matmul_acc_clean_bit_identity(mm_operands, policy):
+    x, w = mm_operands
+    base, _ = dependable_matmul_acc(Policy.NONE, x, w)
+    acc, stats = dependable_matmul_acc(policy, x, w)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(base))
+    assert int(stats["faults_detected"]) == 0
+
+
+@pytest.mark.parametrize("policy,heals", [
+    (Policy.ABFT, True), (Policy.CKPT, True),
+    (Policy.TMR, True), (Policy.DMR, False)])
+def test_matmul_acc_detects_and_heals(mm_operands, policy, heals):
+    x, w = mm_operands
+    base, _ = dependable_matmul_acc(Policy.NONE, x, w)
+    inject = lambda acc: acc.at[2, 3].add(1 << 14)      # noqa: E731
+    acc, stats = dependable_matmul_acc(policy, x, w, inject=inject)
+    assert int(stats["faults_detected"]) == 1
+    if heals:
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(base))
+    else:       # DMR detect-only: the faulty accumulator ships
+        assert np.any(np.asarray(acc) != np.asarray(base))
+
+
+# ------------------------------------------- mapped transformer forward
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    from repro.configs import registry
+    from repro.models.config import reduced
+    cfg = reduced(registry.get("smollm-135m"))
+    return dataclasses.replace(cfg, quant="w8a8_ffn")
+
+
+@pytest.fixture(scope="module")
+def tiny_model(tiny_cfg):
+    from repro.models import api as model_api
+    params = model_api.init_params(tiny_cfg, jax.random.key(1))
+    tokens = jax.random.randint(jax.random.key(2), (2, 10), 0,
+                                tiny_cfg.vocab_size)
+    return params, tokens
+
+
+@pytest.mark.parametrize("policy", [Policy.ABFT, Policy.TMR, Policy.CKPT])
+def test_transformer_uniform_map_bit_identical(tiny_cfg, tiny_model, policy):
+    from repro.models import api as model_api
+    params, tokens = tiny_model
+    base = model_api.forward(tiny_cfg, params, tokens).logits
+    mapped_cfg = model_api.with_policy_map(
+        tiny_cfg, PolicyMap.uniform(policy))
+    mapped = model_api.forward(mapped_cfg, params, tokens).logits
+    np.testing.assert_array_equal(np.asarray(mapped), np.asarray(base))
+
+
+def test_transformer_mixed_map_bit_identical(tiny_cfg, tiny_model):
+    from repro.models import api as model_api
+    params, tokens = tiny_model
+    base = model_api.forward(tiny_cfg, params, tokens).logits
+    pm = PolicyMap(rules=(PolicyRule("ffn.wg", Policy.ABFT),
+                          PolicyRule("ffn.wi", Policy.CKPT),
+                          PolicyRule("ffn.wd", Policy.TMR)))
+    mapped_cfg = model_api.with_policy_map(tiny_cfg, pm)
+    mapped = model_api.forward(mapped_cfg, params, tokens).logits
+    np.testing.assert_array_equal(np.asarray(mapped), np.asarray(base))
+
+
+def test_with_policy_map_validates_backends(tiny_cfg):
+    from repro.models import api as model_api
+    pm = PolicyMap(rules=(PolicyRule("ffn.wg", Policy.ABFT,
+                                     backend="no_such_backend"),))
+    with pytest.raises(KeyError):
+        model_api.with_policy_map(tiny_cfg, pm)
+
+
+# ------------------------------------------------------- mapped shipdet
+
+@pytest.fixture(scope="module")
+def shipdet_net():
+    from repro.models import shipdet
+    specs = shipdet.reduced_specs()
+    params = shipdet.init_params(specs, jax.random.key(3))
+    x = jax.random.uniform(jax.random.key(4), (1, specs[0].h, specs[0].w, 3))
+    return shipdet, specs, params, x
+
+
+@pytest.mark.parametrize("policy", list(Policy))
+def test_shipdet_uniform_map_matches_legacy(shipdet_net, policy):
+    sd, specs, params, x = shipdet_net
+    legacy, _ = sd.forward(specs, params, x, policy=policy,
+                           w_checks=sd.deploy_checks(params),
+                           golden_wq=sd.golden_weights(params))
+    mapped, st = sd.forward(specs, params, x,
+                            policy_map=PolicyMap.uniform(policy),
+                            w_checks=sd.deploy_checks(params),
+                            golden_wq=sd.golden_weights(params))
+    np.testing.assert_array_equal(np.asarray(mapped), np.asarray(legacy))
+
+
+def test_shipdet_mixed_map_bit_identical_and_checked(shipdet_net):
+    sd, specs, params, x = shipdet_net
+    base, _ = sd.forward(specs, params, x)
+    pm = PolicyMap(rules=(PolicyRule("stem", Policy.TMR),
+                          PolicyRule("det_head", Policy.CKPT),
+                          PolicyRule("conv_*", Policy.ABFT)))
+    mapped, st = sd.forward(specs, params, x, policy_map=pm,
+                            w_checks=sd.deploy_checks(params),
+                            golden_wq=sd.golden_weights(params))
+    np.testing.assert_array_equal(np.asarray(mapped), np.asarray(base))
+    assert int(st["checks_run"]) > 0
+
+
+def test_shipdet_rejects_policy_and_map_together(shipdet_net):
+    sd, specs, params, x = shipdet_net
+    with pytest.raises(ValueError):
+        sd.forward(specs, params, x, policy=Policy.ABFT,
+                   policy_map=PolicyMap.uniform(Policy.CKPT))
+
+
+# ------------------------------------------------- engine integration
+
+def test_engine_policy_map_derives_scrubs_and_stays_bit_identical(tiny_cfg):
+    from repro.models import api as model_api
+    from repro.runtime.serving import Engine, Request
+
+    def serve(eng):
+        eng.reset()
+        reqs = [Request(uid=i, prompt=[5, 9, 2 + i], max_new_tokens=4)
+                for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [tuple(r.output) for r in reqs]
+
+    params = model_api.init_params(tiny_cfg, jax.random.key(5))
+    base = Engine(tiny_cfg, params, capacity=2, max_len=48, prefill_pad=8)
+    pm = PolicyMap(rules=(PolicyRule("ffn.*", Policy.ABFT),
+                          PolicyRule("weights", Policy.CKPT),
+                          PolicyRule("kv_cache", Policy.ABFT),
+                          PolicyRule("decode_state", Policy.ABFT)))
+    mapped = Engine(tiny_cfg, params, capacity=2, max_len=48, prefill_pad=8,
+                    policy_map=pm)
+    assert mapped.state_scrub == "detect"
+    assert mapped.storage_scrub == "rollback"
+    assert mapped.storage_scrub_every == mapped.snapshot_every
+    assert serve(mapped) == serve(base)
+    rep = mapped.dependability_report()
+    assert rep["storage_scrub"] == "rollback"
+
+
+def test_engine_storage_scrub_rollback_recovers_weight_strike(tiny_cfg):
+    from repro.core import fault_injection as fi
+    from repro.models import api as model_api
+    from repro.runtime.serving import Engine, Request
+    params = model_api.init_params(tiny_cfg, jax.random.key(6))
+    pm = PolicyMap(rules=(PolicyRule("weights", Policy.CKPT),))
+    eng = Engine(tiny_cfg, params, capacity=2, max_len=48, prefill_pad=8,
+                 policy_map=pm, storage_scrub_every=1)
+    golden_out = None
+    for strike in (False, True):
+        eng.reset()
+        reqs = [Request(uid=0, prompt=[5, 9, 2], max_new_tokens=4)]
+        eng.submit(reqs[0])
+        step = 0
+        while (eng.queue or eng.active) and step < 100:
+            eng.step()
+            step += 1
+            if strike and step == 1:
+                eng.strike("weights", fi.flip_one_bit, jax.random.key(7))
+        if not strike:
+            golden_out = tuple(reqs[0].output)
+            continue
+        events = [e for e in eng.drain_state_events()
+                  if e.get("site") == "weights"]
+        assert events and events[0]["recovered"]
+        assert eng.scrub_storage()          # params restored to golden
+        assert tuple(reqs[0].output) == golden_out
+
+
+def test_engine_storage_scrub_detect_latches_one_alarm(tiny_cfg):
+    from repro.core import fault_injection as fi
+    from repro.models import api as model_api
+    from repro.runtime.serving import Engine, Request
+    params = model_api.init_params(tiny_cfg, jax.random.key(8))
+    pm = PolicyMap(rules=(PolicyRule("weights", Policy.ABFT),))
+    eng = Engine(tiny_cfg, params, capacity=2, max_len=48, prefill_pad=8,
+                 policy_map=pm)
+    assert eng.storage_scrub == "detect" and eng.storage_scrub_every == 1
+    eng.reset()
+    r = Request(uid=0, prompt=[5, 9, 2], max_new_tokens=6)
+    eng.submit(r)
+    step = 0
+    while (eng.queue or eng.active) and step < 100:
+        eng.step()
+        step += 1
+        if step == 1:
+            eng.strike("weights", fi.flip_one_bit, jax.random.key(9))
+    weight_events = [e for e in eng.drain_state_events()
+                     if e.get("site") == "weights"]
+    assert len(weight_events) == 1          # latched: one strike, one alarm
+    assert not weight_events[0]["recovered"]
+
+
+def test_fleet_accepts_policy_map(tiny_cfg):
+    from repro.fleet.fleet import Fleet
+    from repro.models import api as model_api
+    from repro.runtime.serving import Request
+    params = model_api.init_params(tiny_cfg, jax.random.key(10))
+    pm = PolicyMap(rules=(PolicyRule("ffn.wg", Policy.ABFT),))
+    fleet = Fleet(tiny_cfg, params, n_replicas=2, policy=Policy.ABFT,
+                  capacity=2, max_len=48, prefill_pad=8, policy_map=pm)
+    try:
+        fleet.submit(Request(uid=0, prompt=[5, 9, 2], max_new_tokens=3))
+        fleet.run()
+        assert 0 in fleet.released
+        assert fleet.replicas[0].engine.policy_map == pm
+    finally:
+        fleet.close()

@@ -68,10 +68,13 @@ def smoke_rewrite(cmd: str, out_dir: Path, idx: int) -> str:
     cmd = re.sub(r"--bit-trials\s+\d+", "--bit-trials 2", cmd)
     cmd = re.sub(r"--requests\s+\d+", "--requests 3", cmd)
     cmd = re.sub(r"--workers\s+\d+", "--workers 2", cmd)
+    cmd = re.sub(r"--generations\s+\d+", "--generations 2", cmd)
+    cmd = re.sub(r"--population\s+\d+", "--population 6", cmd)
+    cmd = re.sub(r"--reps\s+\d+", "--reps 2", cmd)
     if "--out" in cmd:
         cmd = re.sub(r"--out\s+(\S+)",
                      lambda m: f"--out {out_dir / Path(m.group(1)).name}", cmd)
-    elif re.search(r"-m repro\.(campaign|fleet)\.cli", cmd):
+    elif re.search(r"-m repro\.(campaign|fleet|dse)\.cli", cmd):
         cmd += f" --out {out_dir / f'cmd{idx:02d}'}"
     # observability artifacts: redirect documented paths into the tmpdir —
     # both the producing flags (--trace-out …) and tools/check_obs.py's
@@ -80,8 +83,12 @@ def smoke_rewrite(cmd: str, out_dir: Path, idx: int) -> str:
     # --resume is a directory a previous documented command wrote with
     # --out: both rewrite to the same tmpdir basename, so documented
     # run-then-resume sequences line up on the same journal
+    # --bench-out is the only DSE flag redirected: the certify command's
+    # consuming flags (--map/--cost-model/--pareto/--dse/--policy-map)
+    # deliberately resolve against the *committed* artifacts in the repo
     for flag in ("--trace-out", "--metrics-out", "--events-out",
-                 "--trace", "--events", "--bench", "--resume"):
+                 "--trace", "--events", "--bench", "--resume",
+                 "--bench-out"):
         cmd = re.sub(
             rf"(?<!\S){flag}\s+(\S+)",
             lambda m, f=flag: f"{f} {out_dir / Path(m.group(1)).name}", cmd)

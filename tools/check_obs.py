@@ -10,6 +10,8 @@ JSON-Schema subset the contracts use: ``type`` (incl. union lists),
     PYTHONPATH=src python tools/check_obs.py --events events.json
     PYTHONPATH=src python tools/check_obs.py \
         --bench BENCH_serving.json --overhead-budget 0.03
+    PYTHONPATH=src python tools/check_obs.py --pareto reports/dse/pareto.json
+    PYTHONPATH=src python tools/check_obs.py --dse BENCH_dse.json
 
 Beyond the schema, ``--trace`` also checks the phase-conditional fields the
 schema subset cannot express (``X`` spans need ``ts``/``dur`` and a request
@@ -114,6 +116,59 @@ def check_events_semantics(doc) -> list:
     return errors
 
 
+def _dominates(a, b) -> bool:
+    return all(x <= y for x, y in zip(a, b)) and \
+        any(x < y for x, y in zip(a, b))
+
+
+def check_pareto_semantics(doc) -> list:
+    """Frontier invariants the schema cannot express: the committed front
+    is mutually non-dominated, and the per-generation ``evaluated`` counter
+    never decreases (the archive only grows)."""
+    errors = []
+    front = doc.get("front", [])
+    for i, a in enumerate(front):
+        for j, b in enumerate(front):
+            if i != j and _dominates(a["objectives"], b["objectives"]):
+                errors.append(f"$.front[{j}] ({b.get('digest')}) is "
+                              f"dominated by $.front[{i}] "
+                              f"({a.get('digest')}) — not a Pareto front")
+    evaluated = [h["evaluated"] for h in doc.get("history", [])]
+    if any(b < a for a, b in zip(evaluated, evaluated[1:])):
+        errors.append(f"$.history: 'evaluated' not non-decreasing: "
+                      f"{evaluated}")
+    return errors
+
+
+def check_dse_semantics(doc) -> list:
+    """Certification cross-checks: the summary tallies must match the
+    per-site campaign rows they summarize, and a mapped serving run must
+    have decoded bit-identically to the unhardened stream."""
+    errors = []
+    cert = doc.get("certify", {})
+    rows = cert.get("rows", {})
+    if rows:
+        sdc_max = max(r.get("sdc", 0) for r in rows.values())
+        if cert.get("sdc_max") != sdc_max:
+            errors.append(f"$.certify.sdc_max {cert.get('sdc_max')!r} != "
+                          f"max of row sdc counts {sdc_max}")
+        trials = sum(r.get("trials", 0) for r in rows.values())
+        if cert.get("trials") != trials:
+            errors.append(f"$.certify.trials {cert.get('trials')!r} != "
+                          f"sum of row trials {trials}")
+        for site, r in rows.items():
+            tally = (r.get("masked", 0) + r.get("detected_corrected", 0)
+                     + r.get("detected_uncorrected", 0) + r.get("sdc", 0))
+            if tally != r.get("trials"):
+                errors.append(f"$.certify.rows.{site}: outcome tally "
+                              f"{tally} != trials {r.get('trials')!r}")
+    serving = doc.get("serving")
+    if serving is not None and serving.get("bit_identical") is not True:
+        errors.append("$.serving.bit_identical: mapped decode stream "
+                      "diverged from the unhardened baseline")
+    return errors
+
+
 def _load(path):
     with open(path) as f:
         return json.load(f)
@@ -129,9 +184,15 @@ def main(argv=None) -> int:
                     help="BENCH_serving.json with a trace_overhead_frac")
     ap.add_argument("--overhead-budget", type=float, default=0.03,
                     help="max tolerated tracing overhead fraction")
+    ap.add_argument("--pareto", action="append", default=[],
+                    help="DSE frontier report(s) (reports/dse/pareto.json)")
+    ap.add_argument("--dse", action="append", default=[],
+                    help="DSE certification summaries (BENCH_dse.json)")
     args = ap.parse_args(argv)
-    if not (args.trace or args.events or args.bench):
-        ap.error("nothing to check: pass --trace/--events/--bench")
+    if not (args.trace or args.events or args.bench or args.pareto
+            or args.dse):
+        ap.error("nothing to check: "
+                 "pass --trace/--events/--bench/--pareto/--dse")
 
     failures = 0
     trace_schema = _load(SCHEMA_DIR / "trace.schema.json")
@@ -154,6 +215,29 @@ def main(argv=None) -> int:
         for e in errs[:20]:
             print(f"  {e}", file=sys.stderr)
         failures += bool(errs)
+    if args.pareto:
+        pareto_schema = _load(SCHEMA_DIR / "pareto.schema.json")
+        for path in args.pareto:
+            doc = _load(path)
+            errs = validate(doc, pareto_schema) + check_pareto_semantics(doc)
+            print(f"{path}: {len(doc.get('front', []))} frontier designs / "
+                  f"{doc.get('evaluations', 0)} evaluated, "
+                  f"{'ok' if not errs else f'{len(errs)} violation(s)'}")
+            for e in errs[:20]:
+                print(f"  {e}", file=sys.stderr)
+            failures += bool(errs)
+    if args.dse:
+        dse_schema = _load(SCHEMA_DIR / "dse.schema.json")
+        for path in args.dse:
+            doc = _load(path)
+            errs = validate(doc, dse_schema) + check_dse_semantics(doc)
+            cert = doc.get("certify", {})
+            print(f"{path}: sdc_max={cert.get('sdc_max')} over "
+                  f"{cert.get('trials')} certification trials, "
+                  f"{'ok' if not errs else f'{len(errs)} violation(s)'}")
+            for e in errs[:20]:
+                print(f"  {e}", file=sys.stderr)
+            failures += bool(errs)
     if args.bench:
         doc = _load(args.bench)
         frac = doc.get("trace_overhead_frac")
